@@ -1,0 +1,109 @@
+"""Figure reproductions: Fig. 2 (clustering vs quant MSE), Fig. 6 (speedup),
+Fig. 7 (centroid trajectories), Fig. 8 (layer-wise dynamic centroids)."""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed, trained_proxy
+from repro.core import clustering as C
+from repro.core.distill import LCDConfig, distill_layer
+from repro.core.hessian import diag_hessian_from_inputs
+from repro.core.quantize import clustering_vs_quant_mse
+
+
+def fig2() -> None:
+    """Clustering beats uniform quantization in MSE at equal bit-width."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.02, (512, 256)).astype(np.float32)
+    w[rng.integers(0, 512, 40), rng.integers(0, 256, 40)] *= 6
+    for bits in (3, 4):
+        mse_c, mse_q = clustering_vs_quant_mse(w, bits)
+        emit(f"fig2/bits{bits}", 0.0,
+             f"mse_cluster={mse_c:.3e};mse_quant={mse_q:.3e};"
+             f"ratio={mse_q / mse_c:.2f}x")
+
+
+def fig6() -> None:
+    """End-to-end speedup: roofline step times from the dry-run artifacts
+    (bf16 serve vs LCD int4-code serve), per arch at decode_32k. Falls back
+    to the kernel-level byte model when LCD cells are absent."""
+    found = False
+    for f in sorted(glob.glob(
+            "experiments/dryrun/*decode_32k__pod1__lcd*tuned*.json")):
+        lcd = json.load(open(f))
+        base_f = f.replace("__lcd__kv8", "").replace("__lcd", "")
+        if not os.path.exists(base_f):
+            continue
+        base = json.load(open(base_f))
+        if lcd.get("status") != "ok" or base.get("status") != "ok":
+            continue
+        tb = base.get("t_step_analytic", base["t_step"])
+        tl = lcd.get("t_step_analytic", lcd["t_step"])
+        emit(f"fig6/{base['arch']}", 0.0,
+             f"t_bf16={tb*1e3:.2f}ms;t_lcd_kv8={tl*1e3:.2f}ms;"
+             f"speedup={tb/max(tl,1e-12):.2f}x;"
+             f"params_gb={base.get('param_bytes_per_dev',0)/1e9:.2f}->"
+             f"{lcd.get('param_bytes_per_dev',0)/1e9:.2f}")
+        found = True
+    if not found:
+        # analytic fallback: decode is weight-bandwidth-bound; int4 codes vs
+        # bf16 weights -> ~4x ceiling, minus codebook/activation overheads
+        for arch, n_b in (("llama2-7b", 6.7e9), ("gpt2-xl", 1.5e9)):
+            bf16 = 2 * n_b / 819e9
+            lcd = (0.5 * n_b + 0.02 * n_b) / 819e9
+            emit(f"fig6/{arch}-analytic", 0.0,
+                 f"t_bf16={bf16*1e3:.2f}ms;t_lcd={lcd*1e3:.2f}ms;"
+                 f"speedup={bf16/lcd:.2f}x")
+
+
+def fig7() -> None:
+    """Centroid-count trajectories: full LCD vs naive-init vs PO-only vs
+    SO-only on a GPT2-XL-proxy layer."""
+    cfg, model, params, _, _, calib = trained_proxy("gpt2-xl-proxy")
+    w = np.asarray(params["blocks"]["mlp"]["w_up"][1], np.float32)
+    x = np.asarray(params["embed"][calib[0]["tokens"]]).reshape(-1, cfg.d_model)
+    h = np.asarray(diag_hessian_from_inputs(jnp.asarray(x)))[:, None]
+    lcfg = LCDConfig(max_steps=150)
+    variants = {
+        "full": dict(init="dbci", progressive=True, speculative=True),
+        "naive-init": dict(init="naive4bit", progressive=True, speculative=True),
+        "po-only": dict(init="dbci", progressive=True, speculative=False),
+        "so-only": dict(init="dbci", progressive=False, speculative=True),
+    }
+    for name, kw in variants.items():
+        us, (_, _, rep) = timed(lambda kw=kw: distill_layer(w, h, lcfg, **kw),
+                                reps=1)
+        traj = rep.centroid_history
+        emit(f"fig7/{name}", us,
+             f"init_k={traj[0]};final_k={traj[-1]};"
+             f"traj={'|'.join(str(t) for t in traj[::15])};"
+             f"J={rep.final_objective:.4f};spec_events={len(rep.speculative_events)}")
+
+
+def fig8() -> None:
+    """Layer-wise dynamic centroid allocation on the GPT2-XL proxy."""
+    from repro.core.api import compress_model
+    cfg, model, params, _, loss_fn, calib = trained_proxy("gpt2-xl-proxy")
+    _, report = compress_model(params, loss_fn=loss_fn, calib_batches=calib,
+                               cfg=LCDConfig(max_steps=100), target_centroids=0)
+    per_layer = {k: len(v.final_centroids)
+                 for k, v in report.per_layer.items() if "[" in k}
+    ks = list(report.centroid_counts.values())
+    emit("fig8/layerwise", 0.0,
+         f"avg_centroids={np.mean(ks):.1f};"
+         f"per_slice={'|'.join(f'{k.split(chr(39))[-2]}{k[-3:]}={v}' for k, v in sorted(per_layer.items())[:12])}")
+
+
+def run() -> None:
+    fig2()
+    fig6()
+    fig7()
+    fig8()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Kernel-level benchmark: lut_matmul vs dense GEMM.
+
+On CPU we report (a) interpret-mode wall time (correctness path, NOT a perf
+claim) and (b) the roofline byte model for v5e: weight-stream bytes per GEMV
+for bf16 vs packed int4 codes — the quantity the decode speedup rides on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.lut import pack4
+from repro.kernels.ops import lut_gemm
+
+HBM_BW = 819e9
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for (m, k, n) in ((1, 4096, 4096), (8, 4096, 11008), (128, 2048, 2048)):
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        codes = rng.integers(0, 16, size=(k, n)).astype(np.uint8)
+        cb = jnp.asarray(np.sort(rng.normal(0, 0.05, 16)).astype(np.float32))
+        packed = jnp.asarray(pack4(codes))
+        w_dense = jnp.asarray((np.asarray(cb)[codes]).astype(np.float32))
+
+        us_dense, _ = timed(lambda: (x @ w_dense).block_until_ready())
+        us_lut, _ = timed(lambda: lut_gemm(x, packed, cb).block_until_ready())
+
+        bytes_bf16 = k * n * 2
+        bytes_int4 = k * n // 2 + 16 * 4
+        t_bf16 = bytes_bf16 / HBM_BW * 1e6
+        t_int4 = bytes_int4 / HBM_BW * 1e6
+        emit(f"kernel/lut_gemm_{m}x{k}x{n}", us_lut,
+             f"dense_us={us_dense:.1f};interpret_overhead={us_lut/max(us_dense,1e-9):.1f}x;"
+             f"v5e_weight_stream_bf16_us={t_bf16:.1f};v5e_int4_us={t_int4:.1f};"
+             f"roofline_speedup={t_bf16/t_int4:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""§Roofline table compiler: reads experiments/dryrun/*.json and emits the
+per-(arch x shape x mesh) three-term roofline rows + a markdown table for
+EXPERIMENTS.md."""
+import glob
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def load_cells(pattern="experiments/dryrun/*.json"):
+    cells = []
+    for f in sorted(glob.glob(pattern)):
+        d = json.load(open(f))
+        if d.get("status") == "ok":
+            cells.append(d)
+    return cells
+
+
+def run() -> None:
+    for d in load_cells():
+        emit(f"roofline/{d['cell']}", d["t_step"] * 1e6,
+             f"dominant={d['dominant']};t_c={d['t_compute']*1e3:.2f}ms;"
+             f"t_m={d['t_memory']*1e3:.2f}ms;t_x={d['t_collective']*1e3:.2f}ms;"
+             f"mfu={d.get('mfu', 0):.4f};useful_flop_frac={d.get('useful_flop_frac', 0):.3f};"
+             f"hbm_ok={d.get('hbm_ok')};gb_per_chip={d['memory']['total_per_chip']/1e9:.1f}")
+
+
+def markdown_table(pattern="experiments/dryrun/*__pod1.json") -> str:
+    lines = [
+        "| cell | t_compute | t_memory | t_collective | dominant | per-chip GB | fits | MFU | 6ND/HLO |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in load_cells(pattern):
+        lines.append(
+            f"| {d['cell'].replace('__pod1','')} | {d['t_compute']*1e3:.1f}ms "
+            f"| {d['t_memory']*1e3:.1f}ms | {d['t_collective']*1e3:.1f}ms "
+            f"| {d['dominant']} | {d['memory']['total_per_chip']/1e9:.1f} "
+            f"| {'Y' if d.get('hbm_ok') else 'N'} | {d.get('mfu',0):.1%} "
+            f"| {min(d.get('useful_flop_frac',0), 99):.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()
+    print(markdown_table())

@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2]
+
+Emits `name,us_per_call,derived` CSV rows (benchmarks/common.emit).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single suite: table1|table2|table3|figs|kernel|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (fig_benchmarks, kernel_bench, roofline,
+                            table1_clustering, table2_baselines,
+                            table3_smoothing)
+
+    suites = {
+        "table1": table1_clustering.run,
+        "table2": table2_baselines.run,
+        "table3": table3_smoothing.run,
+        "figs": fig_benchmarks.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    todo = [args.only] if args.only else list(suites)
+    failures = 0
+    for name in todo:
+        try:
+            suites[name]()
+        except Exception as e:  # keep the harness going; report at the end
+            import traceback
+            traceback.print_exc()
+            print(f"{name},0.00,ERROR={type(e).__name__}:{str(e)[:120]}")
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

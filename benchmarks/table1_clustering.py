@@ -1,0 +1,32 @@
+"""Table 1: accuracy vs clustering performance across the paper's three
+subjects (Bert-large / GPT2-XL / LLaMA-2-7B -> reduced same-wiring proxies).
+
+Paper result: 5 / 6 / 8 centroids with <= 2.4% quality loss. Here: adaptive
+LCD on each trained proxy, report final average centroids + CE delta."""
+from benchmarks.common import emit, timed, trained_proxy
+
+import numpy as np
+
+from repro.core.api import compress_model
+from repro.core.distill import LCDConfig
+
+
+def run() -> None:
+    for name in ("bert-large-proxy", "gpt2-xl-proxy", "llama2-7b-proxy"):
+        cfg, model, params, eval_ce, loss_fn, calib = trained_proxy(name)
+        ce_fp = eval_ce(params)
+        us, (cparams, report) = timed(
+            lambda: compress_model(params, loss_fn=loss_fn,
+                                   calib_batches=calib,
+                                   cfg=LCDConfig(max_steps=120),
+                                   target_centroids=0), reps=1)
+        ce_lcd = eval_ce(cparams)
+        ks = list(report.centroid_counts.values())
+        emit(f"table1/{name}", us,
+             f"centroids_avg={np.mean(ks):.1f};bits={report.equivalent_bits:.2f};"
+             f"ce_fp={ce_fp:.4f};ce_lcd={ce_lcd:.4f};"
+             f"quality_delta_pct={(ce_lcd / ce_fp - 1) * 100:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,119 @@
+"""End-to-end LCD distillation driver (the paper's full pipeline, CPU-scale).
+
+    PYTHONPATH=src python examples/distill_llm.py [--centroids N] [--adaptive]
+
+Trains a llama2-family proxy (~1.6M params: same wiring as the paper's
+LLaMA-2-7B subject, reduced widths), then runs the complete LCD pipeline:
+
+  teacher checkpoint -> calibration pass (Fisher diag-H + activation absmax)
+  -> adaptive smoothing (Eq. 9) -> DBCI (§3.1) -> Hessian distillation with
+  progressive + speculative centroid optimization (§3.2-3.3) -> clustered
+  student -> optional codebook fine-tune (self-distillation at model scope).
+
+Prints a Table-1-style summary (baseline vs LCD CE, centroid counts).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import compress_model, is_clustered
+from repro.data.pipeline import DataConfig, SyntheticLM, calibration_batches
+from repro.models.config import get_config, reduced
+from repro.models.registry import get_model, lm_loss
+from repro.optim.optimizer import OptConfig, adam_update, init_adam
+from repro.utils import logger
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--centroids", type=int, default=8,
+                    help="fixed centroid budget (8 = the paper's 3-bit row)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="layer-wise dynamic centroids (Fig. 8 mode)")
+    ap.add_argument("--finetune-steps", type=int, default=30)
+    ap.add_argument("--train-steps", type=int, default=250)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("llama2-7b"), n_layers=4, dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, batch_size=16, seed=0)
+    data = SyntheticLM(dcfg)
+    opt_cfg = OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.train_steps)
+    opt = init_adam(params)
+
+    def loss_fn(p, batch):
+        logits, aux = model.apply(p, batch)
+        return lm_loss(logits, batch["targets"], batch["loss_mask"], cfg.vocab)
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+        params, opt, _ = adam_update(opt_cfg, params, g, opt)
+        return params, opt, loss
+
+    for step in range(args.train_steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        params, opt, loss = train_step(params, opt, b)
+        if step % 50 == 0:
+            logger.info(f"teacher step {step}: loss {float(loss):.4f}")
+
+    # ---- LCD pipeline -------------------------------------------------------
+    calib = [{k: jnp.asarray(v) for k, v in b.items()}
+             for b in calibration_batches(dcfg, n=2)]
+    cparams, report = compress_model(
+        params, loss_fn=loss_fn, calib_batches=calib,
+        target_centroids=0 if args.adaptive else args.centroids)
+    logger.info("LCD: " + report.summary())
+
+    # ---- codebook fine-tune (self-distillation end-to-end) -----------------
+    if args.finetune_steps:
+        ft_cfg = OptConfig(lr=5e-4, warmup_steps=0,
+                           total_steps=args.finetune_steps, weight_decay=0.0)
+        ft_opt = init_adam(cparams)
+        teacher = params
+
+        @jax.jit
+        def ft_step(student, ft_opt, batch):
+            def kd(p):
+                t_logits, _ = model.apply(teacher, batch)
+                s_logits, _ = model.apply(p, batch)
+                t = jax.nn.log_softmax(t_logits[..., :cfg.vocab].astype(jnp.float32))
+                s = jax.nn.log_softmax(s_logits[..., :cfg.vocab].astype(jnp.float32))
+                return jnp.mean(jnp.sum(jnp.exp(t) * (t - s), axis=-1))
+            # codes are int8 leaves: zero-tangent them, train codebooks only
+            kl, g = jax.value_and_grad(kd, allow_int=True)(student)
+            student, ft_opt, _ = adam_update(ft_cfg, student, g, ft_opt)
+            return student, ft_opt, kl
+
+        for step in range(args.finetune_steps):
+            b = {k: jnp.asarray(v) for k, v in data.batch(1000 + step).items()}
+            cparams, ft_opt, kl = ft_step(cparams, ft_opt, b)
+        logger.info(f"codebook fine-tune: final KL {float(kl):.5f}")
+
+    # ---- evaluate (Table 1 style) -------------------------------------------
+    def eval_ce(p):
+        ev = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=128,
+                                    batch_size=16, seed=4242))
+        return float(np.mean([
+            loss_fn(p, {k: jnp.asarray(v) for k, v in ev.batch(i).items()})
+            for i in range(4)]))
+
+    ce_fp, ce_lcd = eval_ce(params), eval_ce(cparams)
+    ks = list(report.centroid_counts.values())
+    print("\n=== Table-1-style summary (llama2-7b reduced proxy) ===")
+    print(f"{'model':>22s} {'CE':>8s} {'PPL':>9s} {'centroids':>10s} {'bits':>6s}")
+    print(f"{'teacher fp32':>22s} {ce_fp:8.4f} {np.exp(ce_fp):9.2f} {'-':>10s} {16:6.1f}")
+    print(f"{'LCD student':>22s} {ce_lcd:8.4f} {np.exp(ce_lcd):9.2f} "
+          f"{np.mean(ks):10.1f} {report.equivalent_bits:6.2f}")
+    print(f"quality delta: {(np.exp(ce_lcd)/np.exp(ce_fp)-1)*100:+.2f}% PPL "
+          f"(paper Table 1: +5.5% at 8 centroids on LLaMA-2-7B)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — production-grade JAX reproduction of LCD (Liu et al., 2025)."""
+__version__ = "1.0.0"

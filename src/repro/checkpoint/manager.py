@@ -1,0 +1,142 @@
+"""Sharding-aware checkpointing with atomic commits and auto-resume.
+
+Layout:  <dir>/step_<n>/
+            shard_<host>.npz     — flattened leaf arrays (this host's shards)
+            manifest.json        — treedef paths, shapes, dtypes, step, mesh
+            COMMITTED            — empty marker written LAST (atomic commit)
+
+Fault-tolerance contract (exercised by tests/test_checkpoint.py):
+  * a checkpoint without COMMITTED is ignored (crash mid-write);
+  * `latest_step` scans down until a committed checkpoint is found;
+  * `restore` re-shards on load — the target sharding may differ from the
+    sharding at save time (elastic restarts with a different host/mesh count
+    re-shard through host memory);
+  * rolling retention keeps the newest `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.utils import logger
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 host_index: int = 0, host_count: int = 1):
+        self.dir = directory
+        self.keep = keep
+        self.host_index = host_index
+        self.host_count = host_count
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, extra: Optional[Dict] = None) -> str:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _flatten(tree)
+        arrays = {}
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        for i, (name, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"leaf_{i}"
+            # npz cannot serialize extension dtypes (bfloat16 etc.) — store a
+            # same-width integer view and record the logical dtype.
+            logical_dtype = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":
+                arr = arr.view(np.uint8) if arr.dtype.itemsize == 1 else (
+                    arr.view(np.uint16) if arr.dtype.itemsize == 2
+                    else arr.view(np.uint32))
+            arrays[key] = arr
+            manifest["leaves"].append(
+                {"path": name, "key": key, "shape": list(arr.shape),
+                 "dtype": logical_dtype})
+        np.savez(os.path.join(tmp, f"shard_{self.host_index}.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        # atomic commit: rename then marker
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        with open(os.path.join(path, "COMMITTED"), "w"):
+            pass
+        self._gc()
+        logger.info(f"checkpoint saved: step {step} -> {path}")
+        return path
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "COMMITTED")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, *, shardings: Any = None) -> Any:
+        """Load into the structure of `like` (arrays or ShapeDtypeStructs).
+        If `shardings` is given, leaves are device_put with those shardings
+        (re-sharding on restore — elastic restart path)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        if not os.path.exists(os.path.join(path, "COMMITTED")):
+            raise FileNotFoundError(f"no committed checkpoint at {path}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, f"shard_{self.host_index}.npz"))
+        import ml_dtypes  # registers bfloat16 etc. with numpy
+
+        def undo_view(arr, dtype_str):
+            want = np.dtype(dtype_str)
+            return arr.view(want) if arr.dtype != want else arr
+
+        by_path = {e["path"]: undo_view(data[e["key"]], e["dtype"])
+                   for e in manifest["leaves"]}
+
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        paths = [p for p, _ in _flatten(like)]
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * len(leaves))
+        out = []
+        for p, leaf, shd in zip(paths, leaves, shard_leaves):
+            arr = by_path[p]
+            want = tuple(leaf.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(f"shape mismatch for {p}: {arr.shape} vs {want}")
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Any, *, shardings: Any = None
+                       ) -> Tuple[Optional[int], Any]:
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like, shardings=shardings)

@@ -1,0 +1,11 @@
+"""paligemma-3b [vlm] — 18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=257216.
+SigLIP frontend is a STUB (input_specs provides precomputed patch embeddings);
+the assigned backbone is the gemma decoder [arXiv:2407.07726; hf]"""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="paligemma-3b", family="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+    d_ff=16384, vocab=257216, head_dim=256, pad_heads=True,
+    n_img_tokens=256, rope_theta=10_000.0,
+))

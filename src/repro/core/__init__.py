@@ -1,0 +1,24 @@
+"""LCD core: the paper's contribution (clustering + KD + smoothing + LUT).
+
+Layer map:
+  clustering.py — DBCI init (§3.1), jittable cluster state, merge (Eq. 8), baselines
+  hessian.py    — diagonal Hessian / Fisher estimators (§3.2)
+  distill.py    — the LCD loop: Eq. 5 update, Eq. 6 reclassify, Eq. 7 refresh,
+                  progressive + speculative centroid optimization (§3.3)
+  smoothing.py  — adaptive smooth optimization (§3.4, Eq. 9/11)
+  quantize.py   — uniform quantizers + RTN/GPTQ baselines (Table 2, Fig. 2)
+  lut.py        — bucket table-lookup inference semantics (§4) — kernel oracle
+  api.py        — ClusteredTensor params + compress_model (framework integration)
+"""
+from repro.core.api import (  # noqa: F401
+    ClusteredTensor,
+    CompressReport,
+    clustered_dequant,
+    clustered_matmul,
+    compress_model,
+    dense_to_clustered,
+    is_clustered,
+)
+from repro.core.clustering import ClusterState, dbci_init, kmeans_1d, make_state  # noqa: F401
+from repro.core.distill import LCDConfig, distill_layer, distill_layer_to_k  # noqa: F401
+from repro.core.smoothing import adaptive_smooth  # noqa: F401

@@ -1,0 +1,274 @@
+"""Model-level LCD API: ClusteredTensor params + compress_model.
+
+A `ClusteredTensor` is the first-class framework representation of an LCD-
+compressed weight: int8 centroid codes (packed to int4 at serving time), a tiny
+codebook, and the folded smoothing vector. It is a NamedTuple, hence a pytree —
+it flows through jit/pjit, shards like the dense weight it replaces (codes carry
+the weight's sharding; the codebook is replicated), and its codebook is
+*trainable* (gradients flow through the gather in `clustered_matmul`), which is
+what end-to-end distillation fine-tuning uses.
+
+`compress_model` runs the paper's pipeline over a whole parameter tree:
+  1. calibration forward/backward passes -> empirical-Fisher diag Hessian
+     (model-level stand-in for the layer-input H_ii = 2E[x_i^2]; both are
+     supported — the per-layer API in distill.py takes activation-derived H);
+  2. adaptive smoothing per eligible layer from captured input absmax (Eq. 9);
+  3. DBCI + progressive/speculative distillation per layer (§3.1-3.3);
+  4. emits ClusteredTensors + a per-layer report (centroid counts, objectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering as C
+from repro.core.distill import DistillReport, LCDConfig, distill_layer, distill_layer_to_k
+from repro.core.hessian import empirical_fisher
+from repro.core.smoothing import SmoothResult, adaptive_smooth, fold_into_weight
+from repro.utils import logger, human_count
+
+
+class ClusteredTensor(NamedTuple):
+    """LCD-compressed linear weight. Logical value = codebook[codes] / smooth[:, None]
+    applied as (x / smooth) @ codebook[codes] — see clustered_matmul."""
+    codes: jax.Array       # (d_in, d_out) int8 centroid indices
+    codebook: jax.Array    # (K,) f32 centroids of the smoothed weight
+    smooth: jax.Array      # (d_in,) f32 smoothing vector (ones if unsmoothed)
+
+    @property
+    def shape(self):  # duck-type a little like an array for shape checks
+        return self.codes.shape
+
+    @property
+    def n_centroids(self) -> int:
+        return int(self.codebook.shape[0])
+
+
+def is_clustered(x: Any) -> bool:
+    return isinstance(x, ClusteredTensor)
+
+
+def _unpack_codes(codes: jax.Array, d_in: int) -> jax.Array:
+    """Unpack int4 pairs along axis -2 when codes are stored packed
+    ((..., d_in/2, d_out) uint8 -> (..., d_in, d_out) int32)."""
+    if codes.shape[-2] == d_in:
+        return codes.astype(jnp.int32)
+    assert codes.shape[-2] * 2 == d_in, (codes.shape, d_in)
+    lo = (codes & 0xF).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    inter = jnp.stack([lo, hi], axis=-2)                 # (..., d/2, 2, d_out)
+    return inter.reshape(*codes.shape[:-2], d_in, codes.shape[-1])
+
+
+def clustered_dequant(ct: ClusteredTensor) -> jax.Array:
+    """Dense equivalent weight W = diag(1/s) @ codebook[codes] (f32)."""
+    d_in = ct.smooth.shape[-1]
+    w_s = ct.codebook[_unpack_codes(ct.codes, d_in)]
+    return w_s / ct.smooth[:, None]
+
+
+def clustered_matmul(x: jax.Array, ct: ClusteredTensor, *, dtype=None) -> jax.Array:
+    """x @ W via the smoothed factorization: (x / s) @ codebook[codes].
+
+    The gather keeps the codebook trainable; on TPU the production path swaps
+    this for kernels/lut_matmul (same contraction, fused int4 stream). Codes
+    may be packed (two int4 per byte along d_in) — the serve-at-scale layout."""
+    dtype = dtype or x.dtype
+    d_in = ct.smooth.shape[-1]
+    w_s = ct.codebook[_unpack_codes(ct.codes, d_in)].astype(dtype)
+    xs = (x / ct.smooth.astype(x.dtype))
+    return xs @ w_s
+
+
+def dense_to_clustered(w: np.ndarray, codes: np.ndarray, codebook: np.ndarray,
+                       smooth: Optional[np.ndarray] = None) -> ClusteredTensor:
+    d_in = w.shape[0]
+    s = np.ones((d_in,), np.float32) if smooth is None else np.asarray(smooth, np.float32)
+    return ClusteredTensor(
+        codes=jnp.asarray(codes.astype(np.int8)),
+        codebook=jnp.asarray(codebook, jnp.float32),
+        smooth=jnp.asarray(s),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eligibility: which parameters get clustered (DESIGN.md §5 table)
+# ---------------------------------------------------------------------------
+
+# path-regexes NEVER clustered: embeddings, norms, biases, router/gates, SSM/RWKV
+# dynamics parameters (they feed exponentials), small vectors.
+_EXCLUDE = re.compile(
+    r"(embed|embedding|lm_head|norm|scale|bias|router|gate_w|a_log|dt_|decay|"
+    r"time_|lerp|conv|state|\['b[a-z_]*'\]$|\['u'\]$)", re.I,
+)
+
+
+def default_predicate(path: str, x: Any) -> bool:
+    if not isinstance(x, (np.ndarray, jnp.ndarray)) and not hasattr(x, "shape"):
+        return False
+    if getattr(x, "ndim", 0) not in (2, 3):
+        return False  # 3-D = stacked/scanned (L, d_in, d_out): per-slice LCD
+    if min(x.shape[-2:]) < 32:           # tiny matrices: not worth it
+        return False
+    if _EXCLUDE.search(path):
+        return False
+    return True
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for kp, leaf in flat:
+        out.append((jax.tree_util.keystr(kp), leaf))
+    return out
+
+
+@dataclasses.dataclass
+class CompressReport:
+    per_layer: Dict[str, DistillReport]
+    smoothing: Dict[str, str]                    # layer -> chosen smoothing kind
+    centroid_counts: Dict[str, int]
+    equivalent_bits: float                       # average log2(K) over clustered params
+    params_clustered: int
+    params_total: int
+
+    def summary(self) -> str:
+        ks = list(self.centroid_counts.values())
+        return (
+            f"clustered {len(ks)} tensors | centroids min/avg/max = "
+            f"{min(ks)}/{np.mean(ks):.1f}/{max(ks)} | equiv bits = {self.equivalent_bits:.2f} "
+            f"| coverage = {self.params_clustered / max(self.params_total, 1):.1%}"
+        )
+
+
+def compress_model(
+    params,
+    *,
+    loss_fn: Optional[Callable] = None,          # loss_fn(params, batch) -> scalar
+    calib_batches: Optional[List[Any]] = None,
+    cfg: LCDConfig = LCDConfig(),
+    target_centroids: int = 0,                   # 0 = adaptive (layer-wise dynamic, Fig. 8)
+    predicate: Callable[[str, Any], bool] = default_predicate,
+    smooth_amax: Optional[Dict[str, np.ndarray]] = None,  # per-layer input absmax (optional)
+) -> Tuple[Any, CompressReport]:
+    """Run LCD over every eligible weight in `params`.
+
+    If loss_fn+calib_batches are given, the diag Hessian is the empirical Fisher
+    accumulated over the calibration batches; otherwise H = 1 (pure geometric
+    clustering — used in unit tests and for fast smoke paths).
+    """
+    leaves = _flatten_with_paths(params)
+    eligible = {p for p, x in leaves if predicate(p, x)}
+
+    # --- 1. Fisher diag over calibration data --------------------------------
+    fisher = None
+    if loss_fn is not None and calib_batches:
+        grad_fn = jax.jit(jax.grad(loss_fn))
+        acc = None
+        for b in calib_batches:
+            g = grad_fn(params, b)
+            sq = jax.tree_util.tree_map(lambda a: a.astype(jnp.float32) ** 2, g)
+            acc = sq if acc is None else jax.tree_util.tree_map(jnp.add, acc, sq)
+        n = len(calib_batches)
+        fisher = jax.tree_util.tree_map(lambda a: a / n, acc)
+        fisher = dict(_flatten_with_paths(fisher))
+
+    # --- 2+3. per-layer smoothing + distillation -----------------------------
+    per_layer: Dict[str, DistillReport] = {}
+    smoothing: Dict[str, str] = {}
+    counts: Dict[str, int] = {}
+    n_clustered = 0
+    n_total = 0
+
+    def _one_slice(path, w2, h2, s):
+        """LCD on a single (d_in, d_out) matrix. Returns (codes, centroids, rep)."""
+        w_s = fold_into_weight(w2, s)
+        if target_centroids:
+            codes, state, rep = distill_layer_to_k(w_s, h2, target_centroids, cfg)
+        else:
+            codes, state, rep = distill_layer(w_s, h2, cfg)
+        cents = rep.final_centroids
+        # re-index codes from K_MAX slot indices onto the compact centroid set
+        lut = np.zeros(C.K_MAX, np.int64)
+        act_idx = np.where(np.asarray(jax.device_get(state.active)))[0]
+        for j, a in enumerate(act_idx):
+            lut[a] = j
+        return lut[codes], cents, rep
+
+    def process(path, x):
+        nonlocal n_clustered, n_total
+        n_total += int(np.prod(x.shape)) if hasattr(x, "shape") else 0
+        if path not in eligible:
+            return x
+        w = np.asarray(jax.device_get(x), np.float32)
+
+        # smoothing (needs input absmax; falls back to identity otherwise)
+        if smooth_amax and path in smooth_amax:
+            sres = adaptive_smooth(smooth_amax[path][None, :])
+            s = sres.s
+            smoothing[path] = sres.kind
+        else:
+            s = np.ones((w.shape[-2],), np.float32)
+            smoothing[path] = "identity"
+
+        if fisher is not None and path in fisher:
+            h = np.asarray(jax.device_get(fisher[path]), np.float32).reshape(w.shape)
+            h = h + 1e-2 * h.mean() + 1e-12
+        else:
+            h = np.ones_like(w)
+
+        if w.ndim == 2:
+            codes, cents, rep = _one_slice(path, w, h, s)
+            counts[path] = len(cents)
+            per_layer[path] = rep
+            ct = dense_to_clustered(w, codes, cents, smooth=s)
+        else:
+            # stacked (L, d_in, d_out): per-slice LCD — this IS the paper's
+            # layer-wise dynamic centroid allocation (Fig. 8). Codebooks pad
+            # to the max K across slices (padded entries duplicate the last
+            # centroid; no code references them).
+            slices = [_one_slice(f"{path}[{l}]", w[l], h[l], s)
+                      for l in range(w.shape[0])]
+            kmax = max(len(c) for _, c, _ in slices)
+            codes = np.stack([cd for cd, _, _ in slices])
+            cbs = np.stack([np.pad(c, (0, kmax - len(c)), mode="edge")
+                            for _, c, _ in slices])
+            counts[path] = int(round(float(np.mean(
+                [len(c) for _, c, _ in slices]))))
+            per_layer[path] = slices[0][2]
+            for l, (_, c, rep_l) in enumerate(slices):
+                per_layer[f"{path}[{l}]"] = rep_l
+            ct = ClusteredTensor(
+                codes=jnp.asarray(codes.astype(np.int8)),
+                codebook=jnp.asarray(cbs, jnp.float32),
+                smooth=jnp.asarray(np.broadcast_to(
+                    s, (w.shape[0], w.shape[1])).copy()),
+            )
+        n_clustered += w.size
+        logger.info(f"LCD {path}: {w.shape} -> K={counts[path]} "
+                    f"smooth={smoothing[path]}")
+        return ct
+
+    new_leaves = {p: process(p, x) for p, x in leaves}
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    paths = [p for p, _ in leaves]
+    new_flat = [new_leaves[p] for p in paths]
+    new_params = jax.tree_util.tree_unflatten(treedef, new_flat)
+
+    ks = list(counts.values()) or [0]
+    report = CompressReport(
+        per_layer=per_layer,
+        smoothing=smoothing,
+        centroid_counts=counts,
+        equivalent_bits=float(np.mean([np.log2(max(k, 1)) for k in ks])),
+        params_clustered=n_clustered,
+        params_total=n_total,
+    )
+    if counts:
+        logger.info("compress_model: " + report.summary())
+    return new_params, report

@@ -1,0 +1,117 @@
+"""Abstract ClusteredTensor parameter trees for LCD serving at scale.
+
+For the dry-run and the serve path we need the *shape* of an LCD-compressed
+model without running distillation on a 100B-parameter tree: this module maps
+a model's parameter table to the equivalent ClusteredTensor tree (packed int4
+codes + codebook + smoothing vector per eligible weight), as ShapeDtypeStructs
+with matching logical-name strings.
+
+The codes inherit the dense weight's sharding names; codebooks/smooth vectors
+are tiny and replicated. Codes pack two 4-bit indices per byte along d_in —
+the dry-run's memory_analysis then shows the real ~4x weight-byte reduction
+(vs bf16) that the serving roofline banks on.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import ClusteredTensor, default_predicate
+from repro.models import params as PT
+from repro.models.registry import Model
+
+KC = 16
+
+
+def _eligible(path: str, decl: PT.ParamDecl) -> bool:
+    # mirror core.api.default_predicate on declarations: >=2D weight matrices,
+    # excluding embeddings/norms/routers/dynamics (name rules)
+    if len(decl.shape) < 2 or min(decl.shape[-2:]) < 32:
+        return False
+    # true weight matrices have >= 2 non-layer logical dims; stacked biases
+    # ((L, dim), names "layers,x") do not
+    dims = decl.names.split(",")
+    non_layer = [d for d in dims if d not in ("layers",)]
+    if len(non_layer) < 2:
+        return False
+    from repro.core.api import _EXCLUDE
+    if _EXCLUDE.search(path):
+        return False
+    # skip tied/vocab tensors by name fragment
+    if "embed" in path or "lm_head" in path or "pos" in path:
+        return False
+    return True
+
+
+def clustered_abstract(model: Model) -> Tuple[Any, Any, Dict[str, int]]:
+    """Returns (abstract_params, names, stats) where eligible dense weights are
+    replaced by abstract ClusteredTensors (packed uint8 codes)."""
+    table = model.table
+    flat = jax.tree_util.tree_flatten_with_path(
+        table, is_leaf=lambda x: isinstance(x, PT.ParamDecl))[0]
+    treedef = jax.tree_util.tree_structure(
+        table, is_leaf=lambda x: isinstance(x, PT.ParamDecl))
+    dtype = model.cfg.jnp_dtype
+
+    aleaves, nleaves = [], []
+    stats = {"clustered": 0, "dense": 0, "code_bytes": 0, "dense_bytes": 0}
+    for kp, decl in flat:
+        path = jax.tree_util.keystr(kp)
+        names = decl.names
+        if _eligible(path, decl):
+            *lead, d_in, d_out = decl.shape
+            assert d_in % 2 == 0, (path, decl.shape)
+            lead_names = ",".join(names.split(",")[:len(lead)])
+            w_names = names.split(",")
+            codes_shape = tuple(lead) + (d_in // 2, d_out)
+            ct = ClusteredTensor(
+                codes=jax.ShapeDtypeStruct(codes_shape, jnp.uint8),
+                codebook=jax.ShapeDtypeStruct(tuple(lead) + (KC,), jnp.float32),
+                smooth=jax.ShapeDtypeStruct(tuple(lead) + (d_in,), jnp.float32),
+            )
+            nm = ClusteredTensor(
+                codes=names,  # same logical dims: d_in/2 shards identically
+                codebook=",".join(w_names[:len(lead)] + ["."]),
+                smooth=",".join(w_names[:len(lead)] + [w_names[-2]]),
+            )
+            aleaves.append(ct)
+            nleaves.append(nm)
+            stats["clustered"] += 1
+            stats["code_bytes"] += int(np.prod(codes_shape))
+        else:
+            aleaves.append(jax.ShapeDtypeStruct(
+                decl.shape, jnp.dtype(decl.dtype) if decl.dtype else dtype))
+            nleaves.append(names)
+            stats["dense"] += 1
+            stats["dense_bytes"] += int(
+                np.prod(decl.shape) * (jnp.dtype(decl.dtype or dtype).itemsize))
+    aparams = jax.tree_util.tree_unflatten(treedef, aleaves)
+    names_tree = jax.tree_util.tree_unflatten(treedef, nleaves)
+    return aparams, names_tree, stats
+
+
+def materialize_clustered(model: Model, key: jax.Array) -> Any:
+    """Random-but-valid clustered params (smoke tests of the serve path):
+    random codes, sorted random codebook, unit smoothing."""
+    aparams, _, _ = clustered_abstract(model)
+
+    def one(leaf, k):
+        if isinstance(leaf, ClusteredTensor):
+            d2, dout = leaf.codes.shape[-2], leaf.codes.shape[-1]
+            lead = leaf.codes.shape[:-2]
+            k1, k2 = jax.random.split(k)
+            codes = jax.random.randint(k1, leaf.codes.shape, 0, 255, jnp.int32
+                                       ).astype(jnp.uint8)
+            cb = jnp.sort(jax.random.normal(k2, leaf.codebook.shape) * 0.02, axis=-1)
+            return ClusteredTensor(codes, cb.astype(jnp.float32),
+                                   jnp.ones(leaf.smooth.shape, jnp.float32))
+        return jax.random.normal(k, leaf.shape, jnp.float32).astype(leaf.dtype) * 0.02
+
+    leaves, treedef = jax.tree_util.tree_flatten(
+        aparams, is_leaf=lambda x: isinstance(x, ClusteredTensor))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(l, k) for l, k in zip(leaves, keys)])

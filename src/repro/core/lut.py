@@ -1,0 +1,154 @@
+"""Bucket table-lookup inference (paper §4) — reference semantics.
+
+Pipeline (Fig. 5): Input Transformation -> Bucket Table Lookup -> Accumulation.
+
+  * activations -> int8 indices q via the fused smooth+quant multiply (Eq. 11);
+  * weights are ≤4-bit centroid indices into a per-layer codebook c (K ≤ 16);
+  * the product x * w is read from a precomputed table T[q, k] = q * c_k
+    ("centroid-stationary buckets": the table is organized per-centroid so a
+    bucket holds every activation level against one centroid);
+  * symmetric storage: only non-negative q rows are stored; the sign is applied
+    during accumulation;
+  * accumulation adds table entries; the final result is rescaled once by the
+    activation scale (weights were smoothed, so no per-element dequant remains).
+
+This module is the *oracle* — pure jnp, gather-based, numerically exact. The
+TPU production path (kernels/lut_matmul.py) computes the same quantity with the
+codebook contraction fused into an MXU matmul (DESIGN.md §2): identical numerics
+(q * c_k is associative either way), radically different machine mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import round_up
+
+
+@dataclasses.dataclass
+class LUTLayer:
+    """Frozen inference-time artifact of one clustered+smoothed linear layer."""
+    codes: np.ndarray        # (d_in, d_out) uint8 centroid indices (< n_centroids)
+    codebook: np.ndarray     # (K,) float32 centroids (of the *smoothed* weights)
+    smooth: np.ndarray       # (d_in,) smoothing vector s_m
+    act_scale: float         # s_q — symmetric int8 scale of smoothed activations
+    n_centroids: int
+
+    @property
+    def packed_codes(self) -> np.ndarray:
+        return pack4(self.codes)
+
+    def table(self, bits: int = 8) -> np.ndarray:
+        """Bucket LUT T[q, k] = q * c_k for q in [0, 2^{b-1}-1] (symmetric half)."""
+        qs = np.arange(0, 2 ** (bits - 1), dtype=np.float32)   # non-negative levels
+        return qs[:, None] * self.codebook[None, :]             # (128, K)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (two codes per byte, little-nibble first)
+# ---------------------------------------------------------------------------
+
+def pack4(codes: np.ndarray) -> np.ndarray:
+    """Pack uint4 codes along axis 0 (d_in): (d_in, d_out) -> (d_in/2, d_out)."""
+    c = np.asarray(codes, np.uint8)
+    assert c.max(initial=0) < 16, "codes must fit in 4 bits (K <= 16)"
+    if c.shape[0] % 2:
+        c = np.concatenate([c, np.zeros((1,) + c.shape[1:], np.uint8)], axis=0)
+    lo = c[0::2]
+    hi = c[1::2]
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack4(packed: jnp.ndarray, d_in: int) -> jnp.ndarray:
+    """Inverse of pack4: (d_in/2, d_out) uint8 -> (d_in, d_out) int32."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    full = jnp.stack([lo, hi], axis=1).reshape(-1, *packed.shape[1:])
+    return full[:d_in]
+
+
+# ---------------------------------------------------------------------------
+# Reference LUT matmul (the paper's §4 semantics, exactly)
+# ---------------------------------------------------------------------------
+
+def lut_matmul_ref(
+    q: jnp.ndarray,          # (m, d_in) int8 activation indices
+    codes: jnp.ndarray,      # (d_in, d_out) int  centroid indices
+    codebook: jnp.ndarray,   # (K,) f32
+    act_scale: jnp.ndarray,  # scalar or ()
+    smooth: Optional[jnp.ndarray] = None,  # unused at matmul time (folded), kept for API parity
+) -> jnp.ndarray:
+    """Y[m, n] = s_q * sum_j  sign(q[m,j]) * T[|q[m,j]|, codes[j,n]].
+
+    Gather-based bucket lookup, sign applied at accumulation (paper §4.2).
+    """
+    k = codebook.shape[0]
+    table = jnp.arange(0, 128, dtype=jnp.float32)[:, None] * codebook[None, :]  # (128, K)
+    sign = jnp.sign(q).astype(jnp.float32)                 # (m, d_in)
+    mag = jnp.abs(q.astype(jnp.int32))                     # (m, d_in) in [0,128]
+    mag = jnp.minimum(mag, 127)                            # -128 saturates symmetric table
+    # entries[m, j, n] = table[mag[m, j], codes[j, n]]  — realized without a 3-D
+    # gather: first gather per-(m,j) bucket rows, then select by code.
+    # per-column gather: values[j, n] needs table[:, codes[j, n]]; do it as
+    # one-hot to stay O(m d_in K) instead of materializing (m, d_in, d_out).
+    onehot = jax.nn.one_hot(codes, k, dtype=jnp.float32)   # (d_in, d_out, K)
+    # bucket value per (m, j, k): table[mag] -> (m, d_in, K)
+    bucket = table[mag]                                    # gather rows
+    signed = bucket * sign[..., None]                      # apply sign in accumulation
+    y = jnp.einsum("mjk,jnk->mn", signed, onehot)
+    return y * act_scale
+
+
+def lut_matmul_dequant_ref(
+    q: jnp.ndarray,
+    codes: jnp.ndarray,
+    codebook: jnp.ndarray,
+    act_scale: jnp.ndarray,
+) -> jnp.ndarray:
+    """Mathematically identical contraction via explicit dequantization:
+    Y = (q * s_q) @ codebook[codes]. This is the form the TPU kernel computes;
+    tests assert it equals lut_matmul_ref to float tolerance."""
+    w = codebook[codes]                                    # (d_in, d_out)
+    return (q.astype(jnp.float32) * act_scale) @ w
+
+
+def build_lut_layer(
+    w: np.ndarray,
+    codes: np.ndarray,
+    codebook: np.ndarray,
+    smooth: np.ndarray,
+    x_calib: np.ndarray,
+    bits: int = 8,
+) -> LUTLayer:
+    """Assemble the frozen serving artifact from distillation outputs.
+
+    `codes`/`codebook` cluster the *smoothed* weights (distillation ran after
+    folding, §3.4); x_calib sets the activation scale of the smoothed inputs.
+    """
+    xs = np.asarray(x_calib, np.float32).reshape(-1, x_calib.shape[-1]) / smooth
+    amax = np.abs(xs).max()
+    act_scale = float(max(amax, 1e-12) / (2.0 ** (bits - 1) - 1))
+    return LUTLayer(
+        codes=np.asarray(codes, np.uint8),
+        codebook=np.asarray(codebook, np.float32),
+        smooth=np.asarray(smooth, np.float32),
+        act_scale=act_scale,
+        n_centroids=int(codebook.shape[0]),
+    )
+
+
+def lut_forward(layer: LUTLayer, x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """End-to-end §4 pipeline for one layer: transform -> lookup -> accumulate."""
+    from repro.core.smoothing import smooth_quant_input
+
+    q = smooth_quant_input(x, jnp.asarray(layer.smooth), jnp.asarray(layer.act_scale), bits)
+    return lut_matmul_ref(
+        q.reshape(-1, q.shape[-1]),
+        jnp.asarray(layer.codes.astype(np.int32)),
+        jnp.asarray(layer.codebook),
+        jnp.asarray(layer.act_scale),
+    ).reshape(*x.shape[:-1], layer.codes.shape[1])

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (v5e constants):
+
+    compute    = HLO_FLOPs            / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_accessed   / (chips × 819e9  B/s HBM)
+    collective = collective_bytes     / (chips × n_links × 50e9 B/s ICI)
+
+FLOPs/bytes come from `compiled.cost_analysis()`. Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO text and sum the operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. cost_analysis reports *per-device* numbers for SPMD
+modules (XLA lowers to one partition's module), so terms divide by chips only
+where the quantity is whole-program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# --- v5e hardware model -------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # 2D torus: 4 links/chip usable (v5e)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape like  bf16[16,2048,128]{3,2,1,0}  or tuple (f32[8,128], f32[8,128])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}:{self.count_by_kind[k]}x/{self.bytes_by_kind[k]/1e9:.2f}GB"
+                 for k in sorted(self.bytes_by_kind)]
+        return " ".join(parts) or "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Uses the *result* shape of each collective instruction line:
+    `  <shape> <name> = <opcode>(...)`. For all-reduce result==operand; for
+    all-gather the result is the gathered (larger) tensor — the bytes that
+    actually cross links; reduce-scatter result is the scattered shard times
+    group size... we count result bytes as the canonical wire proxy and note
+    the approximation in EXPERIMENTS.md (consistent across variants, which is
+    what the perf iteration compares).
+    """
+    bytes_by: Dict[str, int] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        b = _shape_bytes(shape_str)
+        bytes_by[base] = bytes_by.get(base, 0) + b
+        count_by[base] = count_by.get(base, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective wire bytes
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    collectives: CollectiveStats
+    model_flops: float = 0.0     # 6·N·D analytic (whole program)
+    peak_memory: Optional[int] = None
+
+    @property
+    def t_step(self) -> float:   # optimistic overlap model: max of terms
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_frac(self) -> float:
+        if not self.model_flops:
+            return 0.0
+        return self.model_flops / max(self.flops * self.chips, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        if not self.model_flops:
+            return 0.0
+        return self.model_flops / (self.t_step * self.chips * PEAK_FLOPS)
+
+    def row(self) -> Dict:
+        return {
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flop_frac": self.useful_flop_frac, "mfu": self.mfu,
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+        }
+
+
+def analyze(compiled, chips: int, *, model_flops: float = 0.0,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms via the trip-count-aware HLO cost model (hlo_cost.py).
+
+    XLA's own cost_analysis() counts while-loop bodies ONCE (verified in
+    tests/test_hlo_cost.py) — with layer-scanned models that undercounts
+    FLOPs/bytes/collectives by ~n_layers, so the custom walk is authoritative;
+    XLA's numbers would only match for fully unrolled graphs.
+    """
+    from repro.distributed.hlo_cost import analyze_text
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyze_text(text)
+    flops = cost.flops
+    hbm = cost.bytes
+    coll = CollectiveStats(
+        {k: int(v) for k, v in cost.coll_bytes.items()},
+        {k: int(v) for k, v in cost.coll_counts.items()})
+    coll_b = coll.total_bytes
+
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll_b / (ICI_LINKS * ICI_BW)
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = int(getattr(ma, "temp_size_in_bytes", 0) +
+                   getattr(ma, "argument_size_in_bytes", 0) +
+                   getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(flops, hbm, coll_b, chips, t_c, t_m, t_x, dom, coll,
+                    model_flops, peak)
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: int, tokens: int) -> float:
+    return 2.0 * n_active_params * tokens

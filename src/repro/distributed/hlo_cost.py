@@ -1,0 +1,423 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's HloCostAnalysis visits each instruction ONCE — a jax.lax.scan over 46
+layers reports 1/46th of the real FLOPs/bytes, and collectives inside the
+layer loop are similarly undercounted (verified in this container; see
+EXPERIMENTS.md §Dry-run "cost-model validation"). Since every model here scans
+its layers (deliberately, to bound HLO size), we implement our own walk:
+
+  * parse computations + instructions from `compiled.as_text()`;
+  * cost(while) = known_trip_count × (cost(body) + cost(cond))   — the trip
+    count is in the instruction's backend_config;
+  * cost(fusion/call) = cost of the called computation;
+  * dot: 2 × |result| × |contracting dims|; elementwise/reduce: |result|;
+  * bytes: operands + result per instruction, with dynamic-slice /
+    dynamic-update-slice / gather counted at slice size (matching XLA's
+    convention), and fusion internals suppressed (operands/result of the
+    fusion only);
+  * collectives: result-shape bytes × enclosing trip counts, per kind.
+
+Validated against XLA cost_analysis on loop-free graphs (tests/test_hlo_cost.py:
+dot flops match exactly) and against scan-vs-unroll equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose flops ~ |result| (cheap elementwise / reductions)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "atan2",
+    "logistic", "cosine", "sine", "expm1", "log1p", "reduce", "map",
+    "reduce-window", "erf", "cbrt", "remainder", "stochastic-convert",
+}
+
+
+def _parse_dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) over all array shapes in the string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _parse_dims(dims):
+            n *= d
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str                 # raw remainder of the line
+    is_root: bool = False
+
+
+# NOTE: tuple shapes may contain /*index=N*/ comments (hence [^)]* not [^=]*);
+# HLO shapes never contain nested parentheses, so the first ')' closes a tuple.
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+?)\s+([\w\-]+)"
+    r"\(([^)]*)\)(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and ("->" in line):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        root, name, shape_str, opcode, operand_str, attrs = m.groups()
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        comps[cur].append(Instr(name, shape_str, opcode, operands, attrs,
+                                is_root=bool(root)))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll_bytes.items()},
+                    {k: v * f for k, v in self.coll_counts.items()})
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._shape_of: Dict[Tuple[str, str], str] = {}
+        for cname, instrs in self.comps.items():
+            for ins in instrs:
+                self._shape_of[(cname, ins.name)] = ins.shape_str
+        self._memo: Dict[str, Cost] = {}
+
+    # -- helpers --------------------------------------------------------------
+
+    def _operand_shape(self, comp: str, op_name: str) -> Optional[str]:
+        return self._shape_of.get((comp, op_name))
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.shape_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        lhs_shape = self._operand_shape(comp, ins.operands[0]) if ins.operands else None
+        if not m or lhs_shape is None:
+            return 2.0 * out_elems  # degenerate fallback
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm is None:
+            return 2.0 * out_elems
+        lhs_dims = _parse_dims(sm.group(2))
+        k = 1
+        for i in _parse_dims(m.group(1)):
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def _trip_count(self, ins: Instr) -> float:
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+        if m:
+            return float(m.group(1))
+        return 1.0
+
+    def _called(self, ins: Instr) -> List[str]:
+        out = []
+        for key in ("calls", "body", "condition", "to_apply",
+                    "true_computation", "false_computation"):
+            for m in re.finditer(key + r"=%?([\w.\-]+)", ins.attrs):
+                out.append(m.group(1))
+        # conditional branches: branch_computations={%a, %b}
+        m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+        if m:
+            out.extend(re.findall(r"%([\w.\-]+)", m.group(1)))
+        return [c for c in out if c in self.comps]
+
+    def _instr_bytes(self, comp: str, ins: Instr, *, top_level: bool) -> float:
+        _, out_b = _shape_elems_bytes(ins.shape_str)
+        if ins.opcode in ("dynamic-slice", "gather"):
+            # read = slice/result size (+ indices, negligible), write = result
+            return 2.0 * out_b
+        if ins.opcode in ("dynamic-update-slice", "scatter"):
+            # read+write only the updated window (XLA convention); operand 1
+            # is the update
+            upd = self._operand_shape(comp, ins.operands[1]) if len(ins.operands) > 1 else None
+            _, upd_b = _shape_elems_bytes(upd or ins.shape_str)
+            return 3.0 * upd_b
+        opb = 0.0
+        for op in ins.operands:
+            s = self._operand_shape(comp, op)
+            if s is not None:
+                _, b = _shape_elems_bytes(s)
+                opb += b
+        return opb + out_b
+
+    def _fusion_bytes(self, comp: str, ins: Instr, callees: List[str]) -> float:
+        """Boundary bytes of a fusion: result write + per-parameter reads,
+        where a parameter consumed ONLY through dynamic-slice/gather is charged
+        at the sliced size per use instead of its full extent."""
+        _, out_b = _shape_elems_bytes(ins.shape_str)
+        # in-place root: a fusion whose ROOT is dynamic-update-slice aliases its
+        # operand buffer — only the updated window is written (XLA in-place
+        # DUS). Charging the full result would bill a scan's (L, ...) output
+        # stacking at L x full-array bytes (observed 161 GB vs real 3 GB on
+        # the llama4 decode cell).
+        for callee in callees:
+            instrs_c = self.comps.get(callee, [])
+            by_name = {i.name: i for i in instrs_c}
+            root = next((i for i in instrs_c if i.is_root),
+                        instrs_c[-1] if instrs_c else None)
+            # peel elementwise tails (convert/copy/bitcast chains XLA keeps
+            # fused with an in-place DUS root)
+            seen = 0
+            while root is not None and seen < 4 and root.opcode in (
+                    "convert", "copy", "bitcast") and root.operands:
+                root = by_name.get(root.operands[0])
+                seen += 1
+            if root is not None and root.opcode == "dynamic-update-slice":
+                upd = (self._operand_shape(callee, root.operands[1])
+                       if len(root.operands) > 1 else None)
+                _, out_b = _shape_elems_bytes(upd or root.shape_str)
+                break
+        total = float(out_b)
+        for callee in callees:
+            instrs = self.comps.get(callee, [])
+            # param name -> index
+            params = {i.name: i for i in instrs if i.opcode == "parameter"}
+            sliced_reads: Dict[str, float] = {}
+            full_read: Dict[str, bool] = {p: False for p in params}
+            for i2 in instrs:
+                if i2.opcode == "parameter":
+                    continue
+                for pos, opnd in enumerate(i2.operands):
+                    if opnd not in params:
+                        continue
+                    if i2.opcode in ("dynamic-slice", "gather") and pos == 0:
+                        _, b = _shape_elems_bytes(i2.shape_str)
+                        sliced_reads[opnd] = sliced_reads.get(opnd, 0.0) + b
+                    elif i2.opcode == "dynamic-update-slice" and pos == 0:
+                        upd = (self._operand_shape(callee, i2.operands[1])
+                               if len(i2.operands) > 1 else None)
+                        _, b = _shape_elems_bytes(upd or "f32[1]")
+                        sliced_reads[opnd] = sliced_reads.get(opnd, 0.0) + 2.0 * b
+                    else:
+                        full_read[opnd] = True
+            for pname, ins_p in params.items():
+                if full_read.get(pname):
+                    _, b = _shape_elems_bytes(ins_p.shape_str)
+                    total += b
+                else:
+                    total += sliced_reads.get(pname, 0.0)
+        return total
+
+    # -- main walk -------------------------------------------------------------
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        for ins in self.comps.get(comp, []):
+            op = ins.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "copy-start", "copy-done"):
+                continue
+            callees = self._called(ins)
+            if op == "while":
+                trips = self._trip_count(ins)
+                inner = Cost()
+                for c in callees:
+                    inner += self.cost_of(c)
+                total += inner.scaled(trips)
+                continue
+            if op == "fusion":
+                # flops from inside; bytes at the fusion BOUNDARY with
+                # slice-granularity reads (fusion intermediates never hit HBM,
+                # and a fused dynamic-slice reads only its window — without
+                # this, stacked (L, ...) scan weights would be charged in full
+                # per layer, inflating t_memory by ~L).
+                inner = Cost()
+                for c in callees:
+                    inner += self.cost_of(c)
+                total += Cost(flops=inner.flops,
+                              bytes=self._fusion_bytes(comp, ins, callees),
+                              coll_bytes=inner.coll_bytes,
+                              coll_counts=inner.coll_counts)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for c in callees:
+                    total += self.cost_of(c)
+                continue
+            base = None
+            for c in _COLLECTIVES:
+                if op == c or op.startswith(c + "-start"):
+                    base = c
+                    break
+            if base is not None:
+                _, b = _shape_elems_bytes(ins.shape_str)
+                total += Cost(bytes=2.0 * b,
+                              coll_bytes={base: float(b)},
+                              coll_counts={base: 1.0})
+                continue
+            flops = 0.0
+            if op == "dot":
+                flops = self._dot_flops(comp, ins)
+            elif op == "convolution":
+                # rough: 2 * |out| * (in_ch * prod(kernel spatial)) — parse kernel
+                out_e, _ = _shape_elems_bytes(ins.shape_str)
+                ksh = self._operand_shape(comp, ins.operands[1]) if len(ins.operands) > 1 else None
+                ke, _ = _shape_elems_bytes(ksh or "f32[1]")
+                osh = self._operand_shape(comp, ins.operands[0])
+                oe, _ = _shape_elems_bytes(osh or "f32[1]")
+                # per output element: contraction of kernel/out_channels
+                m = _SHAPE_RE.search(ins.shape_str)
+                oc = _parse_dims(m.group(2))[-1] if m else 1
+                flops = 2.0 * out_e * max(ke // max(oc, 1), 1)
+            elif op in _ELEMENTWISE:
+                out_e, _ = _shape_elems_bytes(ins.shape_str)
+                flops = float(out_e)
+            total += Cost(flops=flops,
+                          bytes=self._instr_bytes(comp, ins, top_level=True))
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+    # -- attribution (the §Perf profiler) --------------------------------------
+
+    def breakdown(self, top: int = 25):
+        """Top instructions by HBM bytes, scaled by enclosing trip counts.
+        Returns [(bytes, flops, 'comp/instr op shape metadata-op_name')]."""
+        rows = []
+
+        def walk(comp: str, mult: float):
+            for ins in self.comps.get(comp, []):
+                op = ins.opcode
+                if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                          "bitcast", "after-all"):
+                    continue
+                callees = self._called(ins)
+                if op == "while":
+                    t = self._trip_count(ins)
+                    for c in callees:
+                        walk(c, mult * t)
+                    continue
+                if op == "fusion":
+                    fb = self._fusion_bytes(comp, ins, callees) * mult
+                    ff = sum(self.cost_of(c).flops for c in callees) * mult
+                    meta = ""
+                    m = re.search(r'op_name="([^"]+)"', ins.attrs)
+                    if m:
+                        meta = m.group(1)[-70:]
+                    rows.append((fb, ff, f"{comp}/{ins.name} fusion "
+                                 f"{ins.shape_str[:48]} {meta}"))
+                    continue
+                if op in ("call", "conditional", "async-start"):
+                    for c in callees:
+                        walk(c, mult)
+                    continue
+                b = self._instr_bytes(comp, ins, top_level=True) * mult
+                f = 0.0
+                if op == "dot":
+                    f = self._dot_flops(comp, ins) * mult
+                meta = ""
+                m = re.search(r'op_name="([^"]+)"', ins.attrs)
+                if m:
+                    meta = m.group(1)[-70:]
+                rows.append((b, f, f"{comp}/{ins.name} {op} "
+                             f"{ins.shape_str[:48]} {meta}"))
+
+        walk(self.entry, 1.0)
+        rows.sort(reverse=True)
+        return rows[:top]
+
+    def fusion_bytes_matching(self, dims_set) -> float:
+        """Total (trip-count-scaled) bytes of fusions/instructions whose result
+        dims are in `dims_set` (set of int tuples). Used to quantify the LCD
+        dequant materialization the Pallas kernel eliminates on TPU."""
+        total = 0.0
+
+        def walk(comp: str, mult: float):
+            nonlocal total
+            for ins in self.comps.get(comp, []):
+                callees = self._called(ins)
+                if ins.opcode == "while":
+                    t = self._trip_count(ins)
+                    for c in callees:
+                        walk(c, mult * t)
+                    continue
+                if ins.opcode in ("call", "conditional", "async-start"):
+                    for c in callees:
+                        walk(c, mult)
+                    continue
+                m = _SHAPE_RE.match(ins.shape_str)
+                # match on the trailing (d_in, d_out) dims: sharded leading
+                # (expert/layer) dims may be sliced away per device
+                if m and tuple(_parse_dims(m.group(2))[-2:]) in dims_set:
+                    if ins.opcode == "fusion":
+                        total += self._fusion_bytes(comp, ins, callees) * mult
+                    elif ins.opcode not in ("parameter", "get-tuple-element",
+                                            "tuple", "bitcast", "constant"):
+                        total += self._instr_bytes(comp, ins, top_level=True) * mult
+
+        walk(self.entry, 1.0)
+        return total
+
+
+def analyze_text(text: str) -> Cost:
+    return HloCostModel(text).entry_cost()

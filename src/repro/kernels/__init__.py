@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for LCD's performance-critical paths.
+
+  lut_matmul.py   — fused int4-code dequant + MXU matmul (the serving GEMM;
+                    TPU-native form of the paper's §4 bucket-LUT, DESIGN.md §2)
+  smooth_quant.py — fused smooth+quantize input transform (Eq. 11)
+  ops.py          — padded/blocked jit wrappers + CPU fallbacks
+  ref.py          — pure-jnp oracles (asserted in tests/test_kernels.py)
+"""
+from repro.kernels.ops import clustered_linear, lut_gemm, lut_gemm_int8  # noqa: F401

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-tiled).
+
+§Perf motivation: every train/prefill roofline in EXPERIMENTS.md is dominated
+by attention's S×S score/prob HBM traffic — XLA materializes them (it cannot
+keep tiles on-chip across the softmax reductions). This kernel implements the
+standard flash algorithm: for each (batch*head, q-block) the KV sequence is
+streamed block-by-block through VMEM, maintaining running row-max m and row-sum
+l, so NOTHING of size S×S ever touches HBM. On v5e that converts the
+attention term from memory-bound (e.g. gemma2 prefill: ~9.7 TB/device of
+score traffic) to compute-bound (the two matmuls).
+
+The dry-run cannot compile Pallas for TPU on this CPU-only host, so the
+roofline tables quantify the kernel's effect analytically (subtract the S×S
+traffic — see EXPERIMENTS.md §Perf 'flash-kernel model'); correctness is
+asserted against ref.py in interpret mode across shapes/windows/softcaps
+(tests/test_kernels.py::TestFlashAttention).
+
+Grid: (B*H, Sq/bq); the kernel loops over KV blocks with lax.fori_loop.
+Supports causal masking, sliding windows (gemma2) and logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  q_offset: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale              # (bq, d)
+    q_pos = q_offset + qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    nkv = sk // bk
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)                 # (bk, d)
+        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
+                    ).astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bk)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))        # (bq,)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    d = q_ref.shape[-1]
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bq", "bk", "causal", "window", "softcap", "q_offset", "interpret"))
+def flash_attention(
+    q: jax.Array,          # (BH, Sq, D) — batch*heads flattened
+    k: jax.Array,          # (BH, Sk, D)
+    v: jax.Array,          # (BH, Sk, D)
+    *,
+    bq: int = 256,
+    bk: int = 512,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    grid = (bh, sq // bq)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sk=sk, scale=1.0 / np.sqrt(d),
+        causal=causal, window=window, softcap=softcap, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused int4-code dequant + matmul (the LCD serving GEMM).
+
+TPU-native translation of the paper's §4 bucket-LUT GEMM (DESIGN.md §2):
+
+  * weights arrive as *packed int4 centroid codes* (two per byte) — ¼ the HBM
+    bytes of bf16, which is the entire speedup for memory-bound decode GEMVs;
+  * the codebook (K ≤ 16 floats) lives in VMEM/registers for the whole kernel;
+  * the "table lookup" is realized as a branch-free select-sum
+        w[i,j] = Σ_k  c_k * (code[i,j] == k)
+    over the ≤16 codebook entries — the TPU-idiomatic equivalent of a LUT read
+    (VPU compare+FMA, no gather, no serialization);
+  * the dequantized bf16 tile feeds a standard MXU matmul against the
+    activation tile; accumulation in f32 scratch across the K grid dimension.
+
+Two entry points:
+  lut_matmul_f32  — float activations (already smoothed), weights = codebook[codes].
+  lut_matmul_int8 — int8 activation indices q (Eq. 11 output) with the activation
+                    scale folded in at the end: Y = s_q * (q @ codebook[codes]);
+                    bit-identical to the paper's signed bucket accumulation.
+
+Block shapes default to MXU-aligned (128 multiples); the K (=d_in) dimension is
+streamed so the VMEM working set is  bm*bk (x) + bk*bn/2 (codes) + bm*bn (acc).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Codebook capacity the kernel is specialized for: 4-bit codes (paper: K < 16
+# after distillation -> compact 4-bit representation, §4.2).
+KC = 16
+
+
+def _decode_tile(packed_ref, codebook, bk: int, bn: int, out_dtype):
+    """Unpack (bk//2, bn) uint8 -> (bk, bn) int4 codes -> dequantized tile.
+
+    Select-sum over the 16 codebook entries; compare+FMA on the VPU. The
+    interleave uses stack/reshape which lowers to cheap vector shuffles.
+    """
+    packed = packed_ref[...]                              # (bk//2, bn) uint8
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=1).reshape(bk, bn)   # row 2i -> lo, 2i+1 -> hi
+    w = jnp.zeros((bk, bn), jnp.float32)
+    for k in range(KC):
+        w += jnp.where(codes == k, codebook[k], 0.0)
+    return w.astype(out_dtype)
+
+
+def _lut_matmul_kernel(x_ref, packed_ref, cb_ref, o_ref, acc_ref, *, bk: int, bn: int,
+                       nsteps: int, int8_act: bool):
+    """grid = (M/bm, N/bn, K/bk); K innermost so acc_ref carries partials."""
+    ks = pl.program_id(2)
+
+    @pl.when(ks == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cb = cb_ref[...]                                      # (KC,) f32 in SMEM/VMEM
+    w = _decode_tile(packed_ref, cb, bk, bn, jnp.float32)
+    x = x_ref[...]
+    if int8_act:
+        x = x.astype(jnp.float32)                         # int8 -> f32 for MXU input
+    acc_ref[...] += jnp.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ks == nsteps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def lut_matmul_f32(
+    x: jax.Array,            # (M, K) float (bf16/f32) — pre-smoothed activations
+    packed_codes: jax.Array, # (K//2, N) uint8 — packed int4 centroid codes
+    codebook: jax.Array,     # (KC,) f32 — padded with zeros beyond the active K
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Y = x @ codebook[codes]  with codes streamed as packed int4."""
+    m, k = x.shape
+    k2, n = packed_codes.shape
+    assert k2 * 2 == k, (x.shape, packed_codes.shape)
+    assert codebook.shape == (KC,)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples: {(m, k, n)} vs {(bm, bk, bn)}"
+    )
+    nsteps = k // bk
+    grid = (m // bm, n // bn, nsteps)
+    kernel = functools.partial(
+        _lut_matmul_kernel, bk=bk, bn=bn, nsteps=nsteps, int8_act=False
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((KC,), lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed_codes, codebook)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def lut_matmul_int8(
+    q: jax.Array,            # (M, K) int8 — Eq. 11 activation indices
+    packed_codes: jax.Array, # (K//2, N) uint8
+    codebook: jax.Array,     # (KC,) f32 centroids of the smoothed weights
+    act_scale: jax.Array,    # scalar f32 — s_q
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Y = s_q * (q @ codebook[codes]) — the paper's bucket accumulation."""
+    m, k = q.shape
+    k2, n = packed_codes.shape
+    assert k2 * 2 == k and codebook.shape == (KC,)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nsteps = k // bk
+    grid = (m // bm, n // bn, nsteps)
+    kernel = functools.partial(
+        _lut_matmul_kernel, bk=bk, bn=bn, nsteps=nsteps, int8_act=True
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((KC,), lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(q, packed_codes, codebook)
+    return (y * act_scale).astype(out_dtype)

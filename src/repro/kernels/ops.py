@@ -1,0 +1,123 @@
+"""Public jit'd wrappers around the Pallas kernels: shape padding, block-size
+selection, CPU fallback.
+
+`clustered_linear(x, ct)` is the serving-path entry the models call: on TPU it
+streams packed int4 codes through lut_matmul; elsewhere (CPU tests, dry-run
+lowering on the host platform) it falls back to the mathematically identical
+gather contraction so the whole framework runs everywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import ClusteredTensor, clustered_matmul
+from repro.core.lut import pack4
+from repro.kernels import ref
+from repro.kernels.lut_matmul import KC, lut_matmul_f32, lut_matmul_int8
+from repro.kernels.smooth_quant import smooth_quant
+from repro.utils import round_up
+
+
+def _pick_blocks(m: int, k: int, n: int):
+    """MXU-aligned blocks sized to keep the VMEM working set under ~8 MiB:
+    bm*bk*4 + bk*bn/2 + bm*bn*4 bytes."""
+    bm = min(128, m) if m % 128 else 128
+    bm = m if m < 128 else 128
+    bn = 256 if n % 256 == 0 else 128
+    bk = 512 if k % 512 == 0 else 256
+    return bm, bn, bk
+
+
+def pad_for_kernel(x: jax.Array, packed: jax.Array, bm: int, bk: int, bn: int):
+    m, k = x.shape
+    n = packed.shape[1]
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    if (mp, kp, np_) != (m, k, n):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+        packed = jnp.pad(packed, ((0, (kp - k) // 2), (0, np_ - n)))
+    return x, packed, (m, n)
+
+
+def pad_codebook(codebook: jax.Array) -> jax.Array:
+    """Zero-pad the active centroids up to the kernel's KC=16 capacity.
+    Padded slots decode to 0 and are never referenced by valid codes."""
+    k = codebook.shape[0]
+    if k == KC:
+        return codebook.astype(jnp.float32)
+    assert k < KC, f"kernel supports K<={KC}; got {k} (paper: distillation yields <16)"
+    return jnp.pad(codebook.astype(jnp.float32), (0, KC - k))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut_gemm(
+    x: jax.Array,
+    packed_codes: jax.Array,
+    codebook: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Padded/blocked f32-activation LUT GEMM. interpret=True on CPU."""
+    cb = pad_codebook(codebook)
+    m, k = x.shape
+    n = packed_codes.shape[1]
+    bm, bn, bk = _pick_blocks(m, k, n)
+    xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn)
+    y = lut_matmul_f32(xp, cp, cb, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m0, :n0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut_gemm_int8(
+    q: jax.Array,
+    packed_codes: jax.Array,
+    codebook: jax.Array,
+    act_scale: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    cb = pad_codebook(codebook)
+    m, k = q.shape
+    n = packed_codes.shape[1]
+    bm, bn, bk = _pick_blocks(m, k, n)
+    qp, cp, (m0, n0) = pad_for_kernel(q, packed_codes, bm, bk, bn)
+    y = lut_matmul_int8(qp, cp, cb, act_scale, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:m0, :n0]
+
+
+def clustered_linear(
+    x: jax.Array,
+    ct: ClusteredTensor,
+    *,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """Model-facing clustered matmul. use_kernel=None auto-selects: the Pallas
+    path on TPU backends, the gather contraction elsewhere (identical numerics)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return clustered_matmul(x, ct)
+    xs = x / ct.smooth.astype(x.dtype)
+    lead = xs.shape[:-1]
+    x2 = xs.reshape(-1, xs.shape[-1])
+    packed = pack_codes(ct)
+    y = lut_gemm(x2, packed, ct.codebook, interpret=False)
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+@functools.cache
+def _pack_cache():
+    return {}
+
+
+def pack_codes(ct: ClusteredTensor) -> jax.Array:
+    """Pack a ClusteredTensor's int8 codes to int4 pairs (host-side, cached by id)."""
+    cache = _pack_cache()
+    key = id(ct.codes)
+    if key not in cache:
+        cache[key] = jnp.asarray(pack4(np.asarray(jax.device_get(ct.codes)).astype(np.uint8)))
+    return cache[key]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are asserted against (interpret=True on
+CPU, compiled on TPU). They intentionally mirror the *mathematical* definition,
+not the machine mapping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import unpack4
+
+KC = 16
+
+
+def lut_matmul_f32_ref(x: jax.Array, packed_codes: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Y = x @ codebook[codes]."""
+    k = x.shape[-1]
+    codes = unpack4(packed_codes, k)                    # (K, N) int32
+    w = codebook[codes]                                 # (K, N) f32
+    return x.astype(jnp.float32) @ w
+
+
+def lut_matmul_int8_ref(
+    q: jax.Array, packed_codes: jax.Array, codebook: jax.Array, act_scale: jax.Array
+) -> jax.Array:
+    """Paper §4.2 semantics: signed bucket-table accumulation, then one rescale.
+
+    Equals act_scale * (q @ codebook[codes]) — asserted against the bucket-table
+    gather form in core/lut.py by tests/test_lut.py.
+    """
+    k = q.shape[-1]
+    codes = unpack4(packed_codes, k)
+    w = codebook[codes]
+    return (q.astype(jnp.float32) @ w) * act_scale
+
+
+def smooth_quant_ref(x: jax.Array, inv_scale: jax.Array, bits: int = 8) -> jax.Array:
+    qmin = -(2.0 ** (bits - 1))
+    qmax = 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * inv_scale), qmin, qmax)
+    return q.astype(jnp.int8)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        q_offset=0):
+    """Oracle for flash_attention: plain materialized softmax attention."""
+    import numpy as np
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = q_offset + jnp.arange(q.shape[1])
+    kp = jnp.arange(k.shape[1])
+    m = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window:
+        m &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(m[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: fused smooth+quantize input transformation (paper Eq. 11).
+
+q = clip(round(X * inv_scale), -128, 127)  with  inv_scale = 1 / (s_m * s_q)
+precomputed per input channel — the paper's observation that smoothing and
+quantization collapse into a single multiply. Pure element-wise VPU work,
+blocked over (rows, channels) so the per-channel scale vector tiles along the
+channel dimension only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smooth_quant_kernel(x_ref, inv_ref, o_ref, *, bits: int):
+    qmin = -(2.0 ** (bits - 1))
+    qmax = 2.0 ** (bits - 1) - 1
+    x = x_ref[...].astype(jnp.float32)
+    inv = inv_ref[...].astype(jnp.float32)          # (1, bc) broadcasts over rows
+    q = jnp.clip(jnp.round(x * inv), qmin, qmax)
+    o_ref[...] = q.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bc", "interpret"))
+def smooth_quant(
+    x: jax.Array,          # (M, C) float activations
+    inv_scale: jax.Array,  # (C,) f32 = 1/(s_m * s_q) per channel
+    *,
+    bits: int = 8,
+    bm: int = 256,
+    bc: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, c = x.shape
+    assert inv_scale.shape == (c,)
+    assert m % bm == 0 and c % bc == 0, f"pad to block multiples: {(m, c)} vs {(bm, bc)}"
+    grid = (m // bm, c // bc)
+    return pl.pallas_call(
+        functools.partial(_smooth_quant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.int8),
+        interpret=interpret,
+    )(x, inv_scale[None, :])

@@ -1,0 +1,176 @@
+"""Step functions (train / prefill / serve) with declarative shardings.
+
+`build_train_step(model)` / `build_serve_step(model)` return (fn, in_shardings,
+out_shardings, abstract_inputs) ready for `jax.jit(...).lower(...)` — the same
+objects power the real CPU drivers (examples/) and the 512-device dry-run.
+
+Sharding is fully declarative: parameters/optimizer/cache shardings derive
+from the models' logical-name tables through distributed.sharding rules, and
+activations inside the models carry their own constraints. ZeRO-1/3 falls out
+of the FSDP "embed" rule on parameter tables + identical specs on Adam moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import (ShardingRules, current_rules,
+                                        logical_to_spec, named_sharding,
+                                        parse_names, tree_shardings, use_rules)
+from repro.models.config import ModelConfig, ShapeConfig, input_specs
+from repro.models.registry import Model, get_model, lm_loss
+from repro.optim.compress import EFState, abstract_ef, apply_ef, init_ef
+from repro.optim.optimizer import (AdamState, OptConfig, abstract_adam,
+                                   adam_update, init_adam)
+
+BATCH_NAMES = {
+    "tokens": "batch,.",
+    "targets": "batch,.",
+    "loss_mask": "batch,.",
+    "pos": "",
+    "img_embeds": "batch,.,.",
+    "frames": "batch,.,.",
+}
+
+
+def batch_shardings(batch_specs: Dict[str, jax.ShapeDtypeStruct], sr=None):
+    return {
+        k: named_sharding(v.shape, parse_names(BATCH_NAMES[k]), sr)
+        for k, v in batch_specs.items()
+    }
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_shardings: Tuple
+    out_shardings: Any
+    abstract_inputs: Tuple
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def build_train_step(
+    model: Model,
+    shape: ShapeConfig,
+    opt_cfg: OptConfig = OptConfig(),
+    *,
+    grad_compress: bool = False,
+    microbatch: int = 0,           # 0 = no accumulation; else per-step splits
+    aux_weight: float = 0.01,
+) -> StepBundle:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.apply(params, batch)
+        loss = lm_loss(logits, batch["targets"], batch["loss_mask"], cfg.vocab)
+        return loss + aux_weight * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, ef_state, batch):
+        if microbatch and microbatch > 1:
+            # scan over microbatches: grads accumulate; XLA's latency-hiding
+            # scheduler overlaps each microbatch's reduce-scatter with the
+            # next one's backward (compute/comm overlap).
+            def mb_body(acc, mb):
+                (l, (ls, ax)), g = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                return (jax.tree_util.tree_map(jnp.add, acc_g, g), acc_l + ls), None
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatch, x.shape[0] // microbatch,
+                                    *x.shape[1:]), batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(mb_body, (zero_g, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+            loss = loss_sum / microbatch
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            (total, (loss, aux)), grads = grad_fn(params, batch)
+
+        if grad_compress:
+            grads, ef_state = apply_ef(grads, ef_state)
+        params, opt_state, gnorm = adam_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return params, opt_state, ef_state, metrics
+
+    aparams = model.abstract()
+    names = model.names()
+    ps = tree_shardings(aparams, names)
+    aopt = abstract_adam(aparams)
+    opt_sh = AdamState(named_sharding((), ()), ps, jax.tree_util.tree_map(lambda s: s, ps))
+    # EFState(None) is an empty pytree — zero overhead when compression is off
+    aef = abstract_ef(aparams) if grad_compress else EFState(None)
+    ef_sh = EFState(ps) if grad_compress else EFState(None)
+    abatch = input_specs(cfg, shape)
+    bs = batch_shardings(abatch)
+    metrics_sh = {k: named_sharding((), ()) for k in ("loss", "aux", "grad_norm")}
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(ps, opt_sh, ef_sh, bs),
+        out_shardings=(ps, opt_sh, ef_sh, metrics_sh),
+        abstract_inputs=(aparams, aopt, aef, abatch),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full-sequence inference forward)
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(model: Model, shape: ShapeConfig) -> StepBundle:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        logits, _ = model.apply(params, batch)
+        # return only the last-position logits (next-token) — the full logits
+        # tensor at 32k x 256k vocab would dominate output bytes for nothing.
+        return logits[:, -1, :]
+
+    aparams = model.abstract()
+    ps = tree_shardings(aparams, model.names())
+    abatch = input_specs(cfg, shape)
+    bs = batch_shardings(abatch)
+    out_sh = named_sharding((shape.global_batch, cfg.padded_vocab),
+                            ("batch", "vocab"))
+    return StepBundle(prefill_step, (ps, bs), out_sh, (aparams, abatch))
+
+
+# ---------------------------------------------------------------------------
+# Serve (single-token decode against a deep cache)
+# ---------------------------------------------------------------------------
+
+def build_serve_step(model: Model, shape: ShapeConfig, *,
+                     clustered_params=None, clustered_names=None) -> StepBundle:
+    """Decode step. If clustered_params/names are given (LCD serving), the
+    parameter tree is the ClusteredTensor one — int8/packed codes stream
+    instead of bf16 weights (the paper's §4 deployment)."""
+    cfg = model.cfg
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = model.decode(params, cache, batch)
+        next_tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    aparams = clustered_params if clustered_params is not None else model.abstract()
+    names = clustered_names if clustered_names is not None else model.names()
+    ps = tree_shardings(aparams, names)
+    acache = model.abstract_cache(shape.global_batch, shape.seq_len)
+    cache_sh = tree_shardings(acache, _cache_names_tree(model, acache))
+    abatch = input_specs(cfg, shape)
+    bs = batch_shardings(abatch)
+    tok_sh = named_sharding((shape.global_batch,), ("batch",))
+    return StepBundle(serve_step, (ps, cache_sh, bs), (tok_sh, cache_sh),
+                      (aparams, acache, abatch))
+
+
+def _cache_names_tree(model: Model, acache):
+    return {k: model.cache_names.get(k, "") for k in acache}

@@ -1,0 +1,291 @@
+"""Model configuration system.
+
+One `ModelConfig` describes every architecture in the zoo; family-specific
+fields are simply unused by other families. Configs for the assigned
+architectures live in repro/configs/<id>.py and are registered by name.
+
+Conventions
+-----------
+* weight matrices are (d_in, d_out);
+* vocab is padded up to a multiple of `vocab_pad` (4096) so every assigned
+  vocabulary divides the 16-way model axis (and the 512-way dry-run mesh's
+  model dimension) — logits beyond `vocab` are masked to -inf in the loss;
+* `head_dim` is explicit (gemma2-style configs decouple it from d_model);
+* shapes: each arch is exercised under the assigned input-shape set
+  (train_4k / prefill_32k / decode_32k / long_500k) via `input_specs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import round_up
+
+VOCAB_PAD = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                     # dense | moe | rwkv | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    qkv_bias: bool = False          # qwen2
+    rope_theta: float = 10_000.0
+    attn_softcap: float = 0.0       # gemma2 logit softcapping (attention)
+    final_softcap: float = 0.0      # gemma2 logit softcapping (final logits)
+    local_window: int = 0           # gemma2 sliding window (alternating layers)
+    layer_pattern: str = "global"   # global | alt_local_global
+    mlp: str = "swiglu"             # swiglu | gelu
+    tie_embeddings: bool = False
+    pad_heads: bool = False         # pad q-heads up to the TP axis (16) so
+                                    # attention shards when n_heads % 16 != 0
+                                    # (§Perf 'head-padding'; zero-weight heads
+                                    # are exact no-ops through W_o)
+    # MoE
+    n_experts: int = 0
+    moe_topk: int = 0
+    # SSM / RWKV / hybrid
+    ssm_state: int = 0              # Mamba2 d_state
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    attn_period: int = 0            # zamba2: shared attn block every N mamba layers
+    ssm_impl: str = "chunked"       # chunked (block-parallel) | scan (reference)
+    rwkv_head_dim: int = 64
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 0                # precomputed frame count (1500 for whisper)
+    # vlm
+    n_img_tokens: int = 0           # prefix patch-embedding count (paligemma: 256)
+    # numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing (recompute all) | dots (save
+                                    # matmul outputs — trades HBM footprint
+                                    # for recompute traffic; viable once
+                                    # microbatching freed memory)
+    kv_cache_dtype: str = "bf16"    # bf16 | int8 — int8 halves decode cache
+                                    # traffic (beyond-paper; QServe-style KV
+                                    # quantization with per-(layer,head) scales)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab, VOCAB_PAD)
+
+    @property
+    def n_heads_eff(self) -> int:
+        if not self.pad_heads:
+            return self.n_heads
+        he = round_up(self.n_heads, 16)
+        if self.n_kv_heads == self.n_heads:
+            return he      # MHA: kv heads pad along with q (whisper)
+        # GQA grouping needs KV | He
+        while he % self.n_kv_heads:
+            he += 1
+        return he
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def q_dim_eff(self) -> int:
+        return self.n_heads_eff * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    @property
+    def d_inner(self) -> int:       # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    # ---- parameter counting (for roofline MODEL_FLOPS = 6·N·D) --------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, hd = self.d_model, self.d_ff, self.hd
+        qd, kvd = self.q_dim, self.kv_dim
+        attn = d * qd + 2 * d * kvd + qd * d
+        if self.family == "rwkv":
+            # r,k,v,g,o projections + decay lora + channel-mix
+            per = 4 * d * d + d * d + 2 * d * 64 + d * f + f * d
+            body = self.n_layers * per
+        elif self.family == "hybrid":
+            di, ns = self.d_inner, self.ssm_state
+            g = 2 * ns  # B,C groups (single group)
+            per = d * (2 * di + 2 * ns + self.ssm_heads) + di * d
+            n_attn = self.n_layers // max(self.attn_period, 1)
+            body = self.n_layers * per + attn + 2 * d * f  # shared attn + shared mlp
+            body += n_attn * 0  # shared weights reused
+        else:
+            mlp_mult = 3 if self.mlp == "swiglu" else 2
+            if self.n_experts:
+                mlp = self.n_experts * mlp_mult * d * f + d * self.n_experts
+                mlp_active = self.moe_topk * mlp_mult * d * f
+            else:
+                mlp = mlp_active = mlp_mult * d * f
+            per = attn + (mlp_active if active_only else mlp)
+            body = self.n_layers * per
+            if self.is_encdec:
+                # encoder self-attn+mlp, decoder gets extra cross-attn
+                body += self.n_enc_layers * (attn + mlp_mult * d * f)
+                body += self.n_layers * attn  # cross attention
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return int(body + emb)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic sequence mixing: long_500k applies to these only
+SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-1.2b"}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a meaningful cell (DESIGN.md §5 skips)."""
+    if shape.name == "long_500k" and cfg.arch_id not in SUBQUADRATIC:
+        return False, "quadratic full attention at 512k decode — skipped per spec"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, per_host_batch: Optional[int] = None):
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+
+    Returns a dict matching the corresponding step function's signature:
+      train   -> train_step(params, opt_state, batch)
+      prefill -> prefill_step(params, batch)
+      decode  -> serve_step(params, cache, batch)   (cache built separately)
+    Modality frontends are stubs: [vlm]/[audio] batches carry precomputed
+    patch/frame embeddings (paper-assigned convention).
+    """
+    b = per_host_batch or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    f = cfg.jnp_dtype
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+            "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a seq_len-deep cache/state
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),   # synchronous decode position
+        }
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_img_tokens, cfg.d_model), f)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), f)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if arch_id not in _REGISTRY:
+        _load_all()
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    import importlib
+    import pkgutil
+
+    import repro.configs as cpkg
+
+    for m in pkgutil.iter_modules(cpkg.__path__):
+        importlib.import_module(f"repro.configs.{m.name}")
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test configuration: same family/wiring, tiny dimensions."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.attn_period == 0 else 2 * cfg.attn_period),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=256,
+        vocab=512,
+        head_dim=32,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        moe_topk=min(cfg.moe_topk, 2) if cfg.moe_topk else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32 if cfg.ssm_state else cfg.ssm_head_dim,
+        rwkv_head_dim=32,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        enc_seq=32 if cfg.enc_seq else 0,
+        n_img_tokens=8 if cfg.n_img_tokens else 0,
+        local_window=min(cfg.local_window, 16) if cfg.local_window else 0,
+        attn_period=min(cfg.attn_period, 2) if cfg.attn_period else 0,
+        dtype="float32",
+        arch_id=cfg.arch_id + "-smoke",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

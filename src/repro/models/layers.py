@@ -1,0 +1,363 @@
+"""Pure-JAX layer library shared by the architecture zoo.
+
+Everything is functional: `fn(params_subtree, inputs, cfg, ...) -> outputs`.
+Attention is q-chunked (scan over query blocks) so the S×S score matrix never
+fully materializes — with heads sharded over the model axis this bounds the
+per-chip attention working set to  B/dp × H/tp × chunk × S  floats, which is
+what lets train_4k/prefill_32k fit v5e HBM without a custom flash kernel
+(EXPERIMENTS.md §Perf iterates on this).
+
+GQA is computed by broadcasting the (replicated or kv-sharded) K/V heads up to
+the query heads *inside* the einsum operands; the broadcast never hits HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import (ClusteredTensor, clustered_matmul,
+                            clustered_dequant, is_clustered, _unpack_codes)
+from repro.distributed.sharding import maybe_shard
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Linear / norms
+# ---------------------------------------------------------------------------
+
+def resolve_weight(w, dtype) -> jax.Array:
+    """Dense view of a (possibly clustered, possibly stacked-expert) weight.
+
+    For ClusteredTensors the int4 codes are what lives in HBM; the dequantized
+    tile is a transient (one expert batch-matmul at a time under scan) — the
+    same trade the Pallas serving kernel makes explicit on TPU."""
+    if not is_clustered(w):
+        return w.astype(dtype)
+    d_in = w.smooth.shape[-1]
+    codes = _unpack_codes(w.codes, d_in)                  # (..., d_in, d_out)
+    if w.codebook.ndim == 1:
+        dense = w.codebook[codes]
+    else:                                                  # stacked experts (E, K)
+        dense = jax.vmap(lambda cb, cd: cb[cd])(w.codebook, codes)
+    return (dense / w.smooth[..., :, None]).astype(dtype)
+
+
+def linear(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
+    """Dense projection. `w` may be a plain array or an LCD ClusteredTensor —
+    the paper's technique is first-class: any projection can serve clustered."""
+    if is_clustered(w):
+        y = clustered_matmul(x, w, dtype=x.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+def norm(x: jax.Array, p: Dict[str, jax.Array], kind: str) -> jax.Array:
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); pos: broadcastable to (..., S). Rotates pairs (d, d+D/2)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs            # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    # §Perf 'bf16-rope': rotate in the activation dtype (angles/cos/sin stay
+    # f32); halves the f32 copy traffic the rope concats generated per layer.
+    c2, s2 = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate(
+        [x1 * c2 - x2 * s2, x2 * c2 + x1 * s2], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (q-chunked, GQA, optional window + softcap)
+# ---------------------------------------------------------------------------
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(scores / cap) if cap > 0 else scores
+
+
+def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
+    """q: (B, Cq, H, D); k/v: (B, Sk, KV, D) with KV | H. Returns (B, Cq, H, D).
+
+    Memory-diet softmax (§Perf iteration 'bf16-scores'): the S×S score/prob
+    tensors are materialized in bf16 with f32 reductions (row max + row sum),
+    halving the dominant HBM-traffic term of train/prefill attention without a
+    custom kernel. exp(x - max) <= 1, so bf16's 8-bit mantissa costs ~1e-2
+    relative prob error — below the quantization noise LCD itself introduces
+    (validated by tests/test_models.py decode-vs-forward at 2e-3 on f32
+    configs; bf16 archs see <1e-2 logits drift).
+    """
+    b, cq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    cdt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+    qf = q.reshape(b, cq, kv, g, d)
+    scores = (jnp.einsum("bqkgd,bskd->bkgqs", qf, k,
+                         preferred_element_type=jnp.float32) * scale)
+    scores = _softcap(scores, softcap).astype(cdt)  # fused convert: S x S
+    # tensors below live in bf16 on bf16 models
+    # `window` may be a traced per-layer value (gemma2 alternates local/global
+    # inside one scanned body): apply it branch-free, 0 -> effectively infinite.
+    weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    mask = jnp.ones((cq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    mask &= (q_pos[:, None] - k_pos[None, :]) < weff
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)                     # f32 rows
+    m = jnp.maximum(m, -1e30)  # fully-masked rows (window+causal): avoid nan
+    e = jnp.exp(scores - m).astype(cdt)                             # bf16 store
+    ssum = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    probs = (e / jnp.maximum(ssum, 1e-30).astype(cdt))
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(cdt),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, cq, h, d).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0] (decode)
+    chunk: int = 1024,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    q_pos0 = jnp.asarray(q_offset)
+    k_pos = jnp.arange(sk)
+
+    if sq <= chunk:
+        q_pos = q_pos0 + jnp.arange(sq)
+        return _attn_chunk(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                           softcap=softcap, scale=scale)
+
+    if sq % chunk:
+        # non-power-of-two sequences (whisper's 1500 frames, VLM prefix+text
+        # lengths): use the largest divisor of sq not exceeding the target
+        chunk = next(c for c in range(chunk, 0, -1) if sq % c == 0)
+    nch = sq // chunk
+    qc = q.reshape(b, nch, chunk, h, d).swapaxes(0, 1)     # (nch, B, Cq, H, D)
+
+    def body(_, qi_i):
+        qi, i = qi_i
+        q_pos = q_pos0 + i * chunk + jnp.arange(chunk)
+        o = _attn_chunk(qi, k, v, q_pos, k_pos, causal=causal, window=window,
+                        softcap=softcap, scale=scale)
+        return None, o
+
+    # §Perf 'rematerialize-attn-chunks': without this, the backward of the
+    # chunk scan stacks every chunk's S x chunk probs tensor in HBM (the
+    # gemma2/starcoder train breakdown showed ~1.5 TB/device of stacked
+    # saves); recomputing the chunk forward during its backward trades ~15%
+    # extra attention flops for eliminating that entire traffic class.
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(body, None, (qc, jnp.arange(nch)))
+    return out.swapaxes(0, 1).reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attn_block(
+    p: Dict[str, Any],
+    x: jax.Array,                 # (B, S, d_model)
+    cfg: ModelConfig,
+    *,
+    layer_window: int = 0,        # 0 = global
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"k","v","pos"} decode cache
+    pos_offset: jax.Array | int = 0,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # enc-dec cross attn
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads_eff, cfg.n_kv_heads
+
+    base = cache["pos"] if cache is not None else pos_offset
+    q = linear(x, p["wq"], p.get("bq")).reshape(b, s, nh, hd)
+    if cross_kv is None:
+        k = linear(x, p["wk"], p.get("bk")).reshape(b, s, nkv, hd)
+        v = linear(x, p["wv"], p.get("bv")).reshape(b, s, nkv, hd)
+        q = rope(q, base + jnp.arange(s), cfg.rope_theta)
+        k = rope(k, base + jnp.arange(s), cfg.rope_theta)
+        causal = True
+    else:
+        k, v = cross_kv          # precomputed encoder K/V: (B, S_enc, KV, D)
+        causal = False
+
+    if cache is not None:
+        # decode: the KV cache is SEQ-sharded on the model axis (flash-decode);
+        # q must stay replicated there — head-sharding q would force GSPMD to
+        # all-to-all the whole cache into a head-sharded layout every step
+        # (observed: 3.2 GB/step on zamba2 decode_32k).
+        q = maybe_shard(q, "batch", None, None, None)
+        k = maybe_shard(k, "batch", "seq_kv", "kv", None)
+        v = maybe_shard(v, "batch", "seq_kv", "kv", None)
+    else:
+        q = maybe_shard(q, "batch", None, "heads", None)
+        k = maybe_shard(k, "batch", None, "kv", None)
+        v = maybe_shard(v, "batch", None, "kv", None)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write this step's K/V at position `pos`, attend over the prefix
+        kc, vc, pos = cache["k"], cache["v"], cache["pos"]
+        if kc.dtype == jnp.int8:
+            # int8 KV cache (beyond-paper): per-(token, head) absmax scales
+            # stored alongside (1/64 the cache bytes); new entries quantized
+            # on write, the cache dequantized on read — on TPU the dequant
+            # fuses into the attention dots, so the HBM stream is the int8
+            # tensor (half the bf16 bytes).
+            def q8(t):
+                amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=3,
+                               keepdims=True)                    # (B,s,KV,1)
+                scale = jnp.maximum(amax, 1e-6) / 127.0
+                tq = jnp.clip(jnp.round(t.astype(jnp.float32) / scale),
+                              -127, 127).astype(jnp.int8)
+                return tq, scale[..., 0]                          # (B,s,KV)
+            kq, ks_new = q8(k)
+            vq, vs_new = q8(v)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, kq, pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, vq, pos, axis=1)
+            ks_s = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks_new.astype(jnp.float32), pos, axis=1)
+            vs_s = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs_new.astype(jnp.float32), pos, axis=1)
+            k = kc.astype(x.dtype) * ks_s[..., None].astype(x.dtype)
+            v = vc.astype(x.dtype) * vs_s[..., None].astype(x.dtype)
+            new_cache = {"k": kc, "v": vc, "pos": pos + s,
+                         "k_scale": ks_s, "v_scale": vs_s}
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+            k, v = kc, vc
+            new_cache = {"k": kc, "v": vc, "pos": pos + s}
+        # mask out cache slots beyond pos via the causal mask (q_offset = pos)
+        q_off = pos
+    else:
+        q_off = pos_offset
+
+    o = attention(q, k, v, causal=causal, window=layer_window,
+                  softcap=cfg.attn_softcap, q_offset=q_off)
+    o = o.reshape(b, s, nh * hd)
+    return linear(o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        gate = jax.nn.silu(linear(x, p["w_gate"]))
+        up = linear(x, p["w_up"])
+        h = maybe_shard(gate * up, "batch", None, "ff")
+        return linear(h, p["w_down"])
+    h = jax.nn.gelu(linear(x, p["w_up"], p.get("b_up")))
+    h = maybe_shard(h, "batch", None, "ff")
+    return linear(h, p["w_down"], p.get("b_down"))
+
+
+# ---------------------------------------------------------------------------
+# MoE (grouped, capacity-based, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def moe_block(
+    p: Dict[str, Any],
+    x: jax.Array,                # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with per-group expert capacity (Mesh-TF style dense dispatch).
+
+    Returns (out, aux_loss). Experts shard over the model axis ("experts");
+    the (G,Sg,E,C) dispatch tensors bound per-chip memory to
+    T * Sg * topk * cf floats regardless of E.
+    """
+    b, s, d = x.shape
+    e, topk = cfg.n_experts, cfg.moe_topk
+    t = b * s
+    sg = min(group_size, t)
+    while t % sg:
+        sg //= 2
+    g = t // sg
+    cap = int(np.ceil(sg * topk * capacity_factor / e / 4.0) * 4)
+    cap = min(cap, sg)
+
+    xt = x.reshape(g, sg, d)
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))   # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # aux load-balancing loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # top-k dispatch with per-slot cumulative positions
+    gates_rem = probs
+    dispatch = jnp.zeros((g, sg, e, cap), jnp.float32)
+    combine = jnp.zeros((g, sg, e, cap), jnp.float32)
+    prev_count = jnp.zeros((g, 1, e), jnp.float32)
+    for slot in range(topk):
+        idx = jnp.argmax(gates_rem, axis=-1)                      # (G,Sg)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)        # (G,Sg,E)
+        gate = jnp.sum(probs * onehot, axis=-1, keepdims=True)    # (G,Sg,1)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + prev_count    # (G,Sg,E)
+        keep = (pos < cap) * onehot
+        posc = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (G,Sg,E,C)
+        disp = keep[..., None] * posc
+        dispatch = dispatch + disp
+        combine = combine + disp * gate[..., None]
+        prev_count = prev_count + jnp.sum(onehot, axis=1, keepdims=True)
+        gates_rem = gates_rem * (1.0 - onehot)
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xt.astype(jnp.float32))   # (E,G,C,d)
+    xe = maybe_shard(xe, "experts", None, None, None).astype(x.dtype)
+
+    # per-expert SwiGLU: weights (E, d, f) / (E, f, d), possibly clustered
+    w_gate = resolve_weight(p["w_gate"], x.dtype)
+    w_up = resolve_weight(p["w_up"], x.dtype)
+    w_down = resolve_weight(p["w_down"], x.dtype)
+    gate_h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, w_gate))
+    up_h = jnp.einsum("egcd,edf->egcf", xe, w_up)
+    ye = jnp.einsum("egcf,efd->egcd", gate_h * up_h, w_down)
+    ye = maybe_shard(ye, "experts", None, None, None)
+
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    return out.reshape(b, s, d), aux

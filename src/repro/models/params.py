@@ -1,0 +1,81 @@
+"""Declarative parameter tables.
+
+A model declares its parameters once as a nested dict of
+    name -> ParamDecl(shape, logical_names, init)
+and the framework derives all three views from that single table:
+  * `init_params`     — materialized arrays (smoke tests, real training);
+  * `abstract_params` — ShapeDtypeStructs (dry-run lowering: NO allocation);
+  * `names_tree`      — comma-joined logical-name strings (sharding specs).
+
+This is what keeps the 512-device dry-run honest: the full-size models are
+never allocated on the host; only their shapes + shardings flow into
+jit(...).lower().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    names: str                   # comma-joined logical dims, e.g. "layers,embed,ff"
+    init: str = "normal"         # normal[:std] | zeros | ones | embed | small
+    dtype: Optional[str] = None  # override model dtype (e.g. f32 for norms)
+
+
+Table = Dict[str, Union[ParamDecl, "Table"]]
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _init_one(key: jax.Array, d: ParamDecl, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(d.dtype) if d.dtype else default_dtype
+    kind, _, arg = d.init.partition(":")
+    if kind == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if kind == "ones":
+        return jnp.ones(d.shape, dtype)
+    if kind == "normal":
+        std = float(arg) if arg else 0.02
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+    if kind == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32) * 0.01).astype(dtype)
+    if kind == "fanin":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = float(arg) if arg else 1.0
+        return (jax.random.normal(key, d.shape, jnp.float32) * std / np.sqrt(fan_in)).astype(dtype)
+    if kind == "uniform":  # e.g. decay inits
+        lo, hi = (float(v) for v in arg.split("~"))
+        return jax.random.uniform(key, d.shape, jnp.float32, lo, hi).astype(dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(key: jax.Array, table: Table, dtype) -> Dict[str, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(table, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(table: Table, dtype) -> Dict[str, Any]:
+    def one(d: ParamDecl):
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype) if d.dtype else dtype)
+
+    return jax.tree_util.tree_map(one, table, is_leaf=_is_decl)
+
+
+def names_tree(table: Table) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(lambda d: d.names, table, is_leaf=_is_decl)
+
+
+def param_count(table: Table) -> int:
+    leaves = jax.tree_util.tree_leaves(table, is_leaf=_is_decl)
+    return int(sum(np.prod(d.shape) for d in leaves))

@@ -1,0 +1,130 @@
+"""Model registry: one uniform interface over every architecture family.
+
+    model = get_model(cfg)
+    params = model.init(key)                    # real arrays (smoke/training)
+    aparams = model.abstract()                  # ShapeDtypeStructs (dry-run)
+    names = model.names()                       # logical-name strings (sharding)
+    logits, aux = model.apply(params, batch)    # full-sequence forward
+    logits, cache = model.decode(params, cache, batch)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as PT
+from repro.models import rwkv6, transformer, whisper, zamba2
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    table: PT.Table
+    _apply: Callable
+    _decode: Callable
+    _init_cache: Callable
+    _abstract_cache: Callable
+    cache_names: Dict[str, str]
+
+    def init(self, key: jax.Array):
+        return PT.init_params(key, self.table, self.cfg.jnp_dtype)
+
+    def abstract(self):
+        return PT.abstract_params(self.table, self.cfg.jnp_dtype)
+
+    def names(self):
+        return PT.names_tree(self.table)
+
+    def apply(self, params, batch: Dict[str, jax.Array]):
+        return self._apply(params, batch, self.cfg)
+
+    def decode(self, params, cache, batch: Dict[str, jax.Array]):
+        return self._decode(params, cache, batch, self.cfg)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return self._init_cache(self.cfg, batch, max_seq)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return self._abstract_cache(self.cfg, batch, max_seq)
+
+    def param_count(self) -> int:
+        return PT.param_count(self.table)
+
+
+# --- family adapters ---------------------------------------------------------
+
+def _dense_apply(params, batch, cfg):
+    prefix = batch.get("img_embeds")
+    logits, aux = transformer.forward(params, batch["tokens"], cfg,
+                                      prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]   # align logits with text tokens
+    return logits, aux
+
+
+def _dense_decode(params, cache, batch, cfg):
+    return transformer.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
+
+
+def _rwkv_apply(params, batch, cfg):
+    return rwkv6.forward(params, batch["tokens"], cfg)
+
+
+def _rwkv_decode(params, cache, batch, cfg):
+    return rwkv6.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
+
+
+def _zamba_apply(params, batch, cfg):
+    return zamba2.forward(params, batch["tokens"], cfg)
+
+
+def _zamba_decode(params, cache, batch, cfg):
+    return zamba2.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
+
+
+def _whisper_apply(params, batch, cfg):
+    return whisper.forward(params, batch["tokens"], cfg, frames=batch["frames"])
+
+
+def _whisper_decode(params, cache, batch, cfg):
+    return whisper.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
+
+
+_FAMILIES = {
+    "dense": (transformer.param_table, _dense_apply, _dense_decode,
+              transformer.init_cache, transformer.abstract_cache, transformer.CACHE_NAMES),
+    "moe": (transformer.param_table, _dense_apply, _dense_decode,
+            transformer.init_cache, transformer.abstract_cache, transformer.CACHE_NAMES),
+    "vlm": (transformer.param_table, _dense_apply, _dense_decode,
+            transformer.init_cache, transformer.abstract_cache, transformer.CACHE_NAMES),
+    "rwkv": (rwkv6.param_table, _rwkv_apply, _rwkv_decode,
+             rwkv6.init_cache, rwkv6.abstract_cache, rwkv6.CACHE_NAMES),
+    "hybrid": (zamba2.param_table, _zamba_apply, _zamba_decode,
+               zamba2.init_cache, zamba2.abstract_cache, zamba2.CACHE_NAMES),
+    "audio": (whisper.param_table, _whisper_apply, _whisper_decode,
+              whisper.init_cache, whisper.abstract_cache, whisper.CACHE_NAMES),
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    table_fn, apply_fn, decode_fn, ic, ac, cn = _FAMILIES[cfg.family]
+    return Model(cfg, table_fn(cfg), apply_fn, decode_fn, ic, ac, cn)
+
+
+# --- loss ---------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, targets: jax.Array, mask: jax.Array,
+            vocab: int) -> jax.Array:
+    """Masked next-token cross-entropy; padded-vocab logits are excluded."""
+    lf = logits.astype(jnp.float32)
+    if lf.shape[-1] != vocab:
+        valid = jnp.arange(lf.shape[-1]) < vocab
+        lf = jnp.where(valid, lf, -1e30)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

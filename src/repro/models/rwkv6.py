@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+Faithful structure: token-shift mixing, r/k/v/g projections, the Finch
+signature *data-dependent decay*  w_t = exp(-exp(w0 + tanh(x_w A) B))  via a
+low-rank adapter, per-head WKV state  S ∈ (B, H, P, P)  with recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    y_t = r_t · (S_{t-1} + diag(u) (k_t ⊗ v_t))
+
+and a squared-ReLU channel-mix. Simplification recorded in DESIGN.md: the
+token-shift lerp coefficients are static learned vectors (Finch makes them
+data-dependent through a second LoRA); the decay — the architecture's defining
+dynamic — keeps its full data-dependent form.
+
+Projections (r/k/v/g/o, channel-mix) are LCD-clusterable; decay/LoRA/shift
+parameters stay FP (they feed exp(), DESIGN.md §5).
+
+Full-sequence mode runs projections as whole-sequence matmuls and scans only
+the O(S · H·P²) recurrence; decode carries (S_state, x_prev_tm, x_prev_cm).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import maybe_shard
+from repro.models import params as PT
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, rmsnorm
+from repro.models.linear_attn import wkv6_chunked
+
+D = PT.ParamDecl
+LORA = 64
+
+
+def param_table(cfg: ModelConfig) -> PT.Table:
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, P = cfg.rwkv_heads, cfg.rwkv_head_dim
+    ln = "layers,"
+    return {
+        "embed": D((cfg.padded_vocab, d), "vocab,embed", "embed"),
+        "blocks": {
+            "ln_tm": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            "ln_cm": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            "tm": {
+                # static token-shift lerp coefficients per stream
+                "mu_r": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "mu_k": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "mu_v": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "mu_g": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "mu_w": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "wr": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wk": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wv": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wg": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wo": D((L, d, d), ln + "q_dim,embed", "fanin"),
+                # data-dependent decay LoRA: w0 + tanh(x A) B
+                "w0": D((L, d), ln + "embed_nofsdp", "uniform:-7.0~-5.0", "float32"),
+                "decay_A": D((L, d, LORA), ln + "embed_nofsdp,.", "fanin", "float32"),
+                "decay_B": D((L, LORA, d), ln + ".,embed_nofsdp", "fanin:0.1", "float32"),
+                "u": D((L, H, P), ln + "rwkv_heads,.", "normal:0.3", "float32"),
+                "ln_out": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            },
+            "cm": {
+                "mu_k": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "mu_r": D((L, d), ln + "embed_nofsdp", "uniform:0.0~1.0"),
+                "wk": D((L, d, f), ln + "embed,ff", "fanin"),
+                "wv": D((L, f, d), ln + "ff,embed", "fanin"),
+                "wr": D((L, d, d), ln + "embed,q_dim", "fanin"),
+            },
+        },
+        "ln_final": {"scale": D((d,), "embed_nofsdp", "zeros", "float32")},
+        "lm_head": D((d, cfg.padded_vocab), "embed,vocab", "fanin"),
+    }
+
+
+def _shift(x: jax.Array, x_prev: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: returns previous token's features. x: (B,S,d)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, z, mu):
+    return x + (z - x) * mu.astype(x.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """WKV6 recurrence. r/k/v: (B,S,H,P) f32; w: (B,S,H,P) decay in (0,1);
+    u: (H,P); s0: (B,H,P,P). Returns y (B,S,H,P), s_final."""
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                       # (B,H,P)
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)    # outer product
+        y = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))  # (S,B,H,P)
+    s_final, ys = jax.lax.scan(step, s0, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), s_final
+
+
+def time_mix(p, x, cfg: ModelConfig, state):
+    """state = (S (B,H,P,P) f32, x_prev (B,d)) or None (train, zero init)."""
+    b, s, d = x.shape
+    H, P = cfg.rwkv_heads, cfg.rwkv_head_dim
+    s0 = state[0] if state is not None else jnp.zeros((b, H, P, P), jnp.float32)
+    z = _shift(x, state[1] if state is not None else None)
+
+    r = linear(_lerp(x, z, p["mu_r"]), p["wr"]).reshape(b, s, H, P).astype(jnp.float32)
+    k = linear(_lerp(x, z, p["mu_k"]), p["wk"]).reshape(b, s, H, P).astype(jnp.float32)
+    v = linear(_lerp(x, z, p["mu_v"]), p["wv"]).reshape(b, s, H, P).astype(jnp.float32)
+    g = jax.nn.silu(linear(_lerp(x, z, p["mu_g"]), p["wg"]))
+
+    xw = _lerp(x, z, p["mu_w"]).astype(jnp.float32)
+    dlog = p["w0"] + jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]     # (B,S,d)
+    w = jnp.exp(-jnp.exp(dlog)).reshape(b, s, H, P)                  # data-dep decay
+
+    if cfg.ssm_impl == "chunked" and s > 1:
+        y, s_new = wkv6_chunked(r, k, v, w, p["u"], s0)
+    else:
+        y, s_new = _wkv_scan(r, k, v, w, p["u"], s0)
+    y = y.reshape(b, s, d)
+    # per-head group norm (layer-norm over the flattened head outputs)
+    y = rmsnorm(y, p["ln_out"]["scale"])
+    out = linear((y * g.astype(y.dtype)), p["wo"]).astype(x.dtype)
+    new_state = (s_new, x[:, -1]) if state is not None else None
+    return out, new_state
+
+
+def channel_mix(p, x, cfg: ModelConfig, x_prev):
+    z = _shift(x, x_prev)
+    k = jnp.square(jax.nn.relu(linear(_lerp(x, z, p["mu_k"]), p["wk"])))
+    kv = linear(k, p["wv"])
+    rgate = jax.nn.sigmoid(linear(_lerp(x, z, p["mu_r"]), p["wr"]))
+    out = rgate * kv
+    new_prev = x[:, -1] if x_prev is not None else None
+    return out, new_prev
+
+
+def forward(params, tokens, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]
+    x = maybe_shard(x, "batch", None, None)
+
+    def body(x, p):
+        h, _ = time_mix(p["tm"], rmsnorm(x, p["ln_tm"]["scale"]), cfg, None)
+        x = x + h
+        h, _ = channel_mix(p["cm"], rmsnorm(x, p["ln_cm"]["scale"]), cfg, None)
+        return x + h, None
+
+    if cfg.remat:
+        pol = (jax.checkpoint_policies.nothing_saveable
+               if cfg.remat_policy == "nothing"
+               else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=pol)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return maybe_shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+# --- decode: constant-size recurrent state (the 500k-context story) ----------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    H, P, d, L = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model, cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, batch, H, P, P), jnp.float32),
+        "x_tm": jnp.zeros((L, batch, d), cfg.jnp_dtype),
+        "x_cm": jnp.zeros((L, batch, d), cfg.jnp_dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    H, P, d, L = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model, cfg.n_layers
+    return {
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, P, P), jnp.float32),
+        "x_tm": jax.ShapeDtypeStruct((L, batch, d), cfg.jnp_dtype),
+        "x_cm": jax.ShapeDtypeStruct((L, batch, d), cfg.jnp_dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+CACHE_NAMES = {"wkv": "layers,batch,rwkv_heads,.,.", "x_tm": "layers,batch,.",
+               "x_cm": "layers,batch,.", "pos": ""}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]       # (B,1,d)
+
+    def body(x, layer):
+        p, wkv, x_tm, x_cm = layer
+        h, st = time_mix(p["tm"], rmsnorm(x, p["ln_tm"]["scale"]), cfg, (wkv, x_tm))
+        x = x + h
+        h, cm_prev = channel_mix(p["cm"], rmsnorm(x, p["ln_cm"]["scale"]), cfg, x_cm)
+        return x + h, (st[0], st[1], cm_prev)
+
+    x, (wkvs, xtms, xcms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["x_tm"], cache["x_cm"]))
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    new_cache = {"wkv": wkvs, "x_tm": xtms, "x_cm": xcms, "pos": pos + 1}
+    return logits[:, -1], new_cache

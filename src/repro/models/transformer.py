@@ -1,0 +1,262 @@
+"""Dense / MoE decoder-only transformer family.
+
+Covers: stablelm-12b, starcoder2-15b, gemma2-27b, qwen2-1.5b, phi3.5-moe,
+llama4-scout, paligemma-3b (image-prefix decoder), and the paper's own
+llama2-7b. Layers are stacked (L, ...) parameters consumed by lax.scan so the
+HLO holds ONE layer body regardless of depth (compile-time and HLO size stay
+bounded for the 46-layer dry-runs).
+
+gemma2's alternating local/global attention is realized with a per-layer
+window array threaded through the scan — a single traced body handles both
+(window = 0 selects the global mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import maybe_shard
+from repro.models import params as PT
+from repro.models.config import ModelConfig
+from repro.models.layers import attn_block, linear, mlp_block, moe_block, norm
+
+D = PT.ParamDecl
+
+
+# ---------------------------------------------------------------------------
+# Parameter table
+# ---------------------------------------------------------------------------
+
+def _norm_decl(cfg: ModelConfig, stacked: bool = True) -> Dict[str, D]:
+    lead = (cfg.n_layers,) if stacked else ()
+    names = "layers," if stacked else ""
+    t = {"scale": D(lead + (cfg.d_model,), names + "embed_nofsdp", "zeros", "float32")}
+    if cfg.norm == "layernorm":
+        t["scale"] = D(lead + (cfg.d_model,), names + "embed_nofsdp", "ones", "float32")
+        t["bias"] = D(lead + (cfg.d_model,), names + "embed_nofsdp", "zeros", "float32")
+    return t
+
+
+def _attn_table(cfg: ModelConfig, stacked: bool = True) -> Dict[str, D]:
+    L = (cfg.n_layers,) if stacked else ()
+    ln = "layers," if stacked else ""
+    d, qd, kvd = cfg.d_model, cfg.q_dim_eff, cfg.kv_dim
+    t = {
+        "wq": D(L + (d, qd), f"{ln}embed,q_dim", "fanin"),
+        "wk": D(L + (d, kvd), f"{ln}embed,kv_flat", "fanin"),
+        "wv": D(L + (d, kvd), f"{ln}embed,kv_flat", "fanin"),
+        "wo": D(L + (qd, d), f"{ln}q_dim,embed", "fanin"),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = D(L + (qd,), f"{ln}q_dim", "zeros")
+        t["bk"] = D(L + (kvd,), f"{ln}kv_flat", "zeros")
+        t["bv"] = D(L + (kvd,), f"{ln}kv_flat", "zeros")
+    return t
+
+
+def _mlp_table(cfg: ModelConfig, stacked: bool = True) -> Dict[str, D]:
+    L = (cfg.n_layers,) if stacked else ()
+    ln = "layers," if stacked else ""
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.n_experts:
+        e = cfg.n_experts
+        return {
+            "router": D(L + (d, e), f"{ln}embed_nofsdp,.", "fanin"),
+            "w_gate": D(L + (e, d, f), f"{ln}experts,embed,ff", "fanin"),
+            "w_up": D(L + (e, d, f), f"{ln}experts,embed,ff", "fanin"),
+            "w_down": D(L + (e, f, d), f"{ln}experts,ff,embed", "fanin"),
+        }
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": D(L + (d, f), f"{ln}embed,ff", "fanin"),
+            "w_up": D(L + (d, f), f"{ln}embed,ff", "fanin"),
+            "w_down": D(L + (f, d), f"{ln}ff,embed", "fanin"),
+        }
+    return {
+        "w_up": D(L + (d, f), f"{ln}embed,ff", "fanin"),
+        "b_up": D(L + (f,), f"{ln}ff", "zeros"),
+        "w_down": D(L + (f, d), f"{ln}ff,embed", "fanin"),
+        "b_down": D(L + (d,), f"{ln}embed_nofsdp", "zeros"),
+    }
+
+
+def param_table(cfg: ModelConfig) -> PT.Table:
+    t: PT.Table = {
+        "embed": D((cfg.padded_vocab, cfg.d_model), "vocab,embed", "embed"),
+        "blocks": {
+            "ln_attn": _norm_decl(cfg),
+            "attn": _attn_table(cfg),
+            "ln_mlp": _norm_decl(cfg),
+            "mlp": _mlp_table(cfg),
+        },
+        "ln_final": _norm_decl(cfg, stacked=False),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = D((cfg.d_model, cfg.padded_vocab), "embed,vocab", "fanin")
+    return t
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding-window sizes (0 = global)."""
+    if cfg.layer_pattern == "alt_local_global" and cfg.local_window:
+        w = np.zeros(cfg.n_layers, np.int32)
+        w[0::2] = cfg.local_window      # even layers local, odd global (gemma2)
+        return w
+    return np.zeros(cfg.n_layers, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Forward (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, p: Dict[str, Any], x: jax.Array, window: jax.Array,
+           cache: Optional[Dict] = None, pos_offset=0):
+    h = norm(x, p["ln_attn"], cfg.norm)
+    # window is traced per-layer; attention applies it via a dynamic mask
+    attn_out, new_cache = attn_block(
+        p["attn"], h, cfg, layer_window=window, cache=cache, pos_offset=pos_offset
+    )
+    x = x + attn_out
+    h = norm(x, p["ln_mlp"], cfg.norm)
+    if cfg.n_experts:
+        mlp_out, aux = moe_block(p["mlp"], h, cfg)
+    else:
+        mlp_out, aux = mlp_block(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + mlp_out, aux, new_cache
+
+
+def forward(
+    params: Dict[str, Any],
+    tokens: jax.Array,                     # (B, S)
+    cfg: ModelConfig,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) VLM patch embeds
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B, S_total, padded_vocab), aux_loss)."""
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = maybe_shard(x, "batch", None, None)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, layer):
+        x, aux = carry
+        p, w = layer
+        x, a, _ = _block(cfg, p, x, w)
+        return (x, aux + a), None
+
+    blk = params["blocks"]
+    if cfg.remat:
+        pol = (jax.checkpoint_policies.nothing_saveable
+               if cfg.remat_policy == "nothing"
+               else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=pol)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (blk, windows))
+
+    x = norm(x, params["ln_final"], cfg.norm)
+    head = params.get("lm_head", None)
+    logits = (x @ head.astype(x.dtype)) if head is not None else (
+        x @ params["embed"].astype(x.dtype).T)
+    if cfg.final_softcap:
+        logits = (cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
+    logits = maybe_shard(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, stacked KV cache scanned with the layers)
+# ---------------------------------------------------------------------------
+
+def _cache_dtype(cfg: ModelConfig):
+    return jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.jnp_dtype
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    c = {
+        "k": jnp.zeros(shape, _cache_dtype(cfg)),
+        "v": jnp.zeros(shape, _cache_dtype(cfg)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        # per-(layer, token, kv-head) absmax scales (beyond-paper KV quant)
+        sshape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads)
+        c["k_scale"] = jnp.full(sshape, 1e-6, jnp.float32)
+        c["v_scale"] = jnp.full(sshape, 1e-6, jnp.float32)
+    return c
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    c = {
+        "k": jax.ShapeDtypeStruct(shape, _cache_dtype(cfg)),
+        "v": jax.ShapeDtypeStruct(shape, _cache_dtype(cfg)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        sshape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads)
+        c["k_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+        c["v_scale"] = jax.ShapeDtypeStruct(sshape, jnp.float32)
+    return c
+
+
+CACHE_NAMES = {"k": "layers,batch,seq_kv,kv,.", "v": "layers,batch,seq_kv,kv,.",
+               "pos": "", "k_scale": "layers,batch,seq_kv,kv",
+               "v_scale": "layers,batch,seq_kv,kv"}
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],
+    tokens: jax.Array,            # (B, 1)
+    pos: jax.Array,               # scalar int32 — current length
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step for the whole stack. Cache layout (L, B, S, KV, D) scans
+    with the layer parameters; each layer updates its slice in place."""
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]          # (B, 1, d)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    int8_kv = cfg.kv_cache_dtype == "int8"
+
+    def body(carry, layer):
+        x, aux = carry
+        if int8_kv:
+            p, w, kc, vc, ks_s, vs_s = layer
+            lcache = {"k": kc, "v": vc, "pos": pos,
+                      "k_scale": ks_s, "v_scale": vs_s}
+        else:
+            p, w, kc, vc = layer
+            lcache = {"k": kc, "v": vc, "pos": pos}
+        x, a, new_cache = _block(cfg, p, x, w, cache=lcache)
+        outs = (new_cache["k"], new_cache["v"]) + (
+            (new_cache["k_scale"], new_cache["v_scale"]) if int8_kv else ())
+        return (x, aux + a), outs
+
+    blk = params["blocks"]
+    if int8_kv:
+        (x, _aux), (ks, vs, kss, vss) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (blk, windows, cache["k"], cache["v"],
+             cache["k_scale"], cache["v_scale"]))
+    else:
+        (x, _aux), (ks, vs) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (blk, windows, cache["k"], cache["v"]))
+
+    x = norm(x, params["ln_final"], cfg.norm)
+    head = params.get("lm_head", None)
+    logits = (x @ head.astype(x.dtype)) if head is not None else (
+        x @ params["embed"].astype(x.dtype).T)
+    if cfg.final_softcap:
+        logits = (cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    if int8_kv:
+        new_cache["k_scale"], new_cache["v_scale"] = kss, vss
+    return logits[:, -1], new_cache

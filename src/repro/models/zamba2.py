@@ -1,0 +1,258 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a shared attention block
+(arXiv:2411.15242).
+
+Mamba2 (SSD) block, single B/C group:
+    [z, xc, B, C, dt] = x W_in ;  xc -> causal depthwise conv (width 4) -> silu
+    per head h:  a_t = exp(-softplus(dt_t + dt_bias) * exp(A_log_h))
+                 S_t = a_t S_{t-1} + dt_t * (x_t ⊗ B_t)        S ∈ (B,H,P,N)
+                 y_t = S_t · C_t + D_h * x_t
+    out = (y * silu(z)) W_out
+
+The *shared* transformer block (full MHA + SwiGLU MLP, one set of weights) is
+applied after every `attn_period` Mamba layers — the hybrid's defining trick:
+attention quality at a fraction of the parameter cost. Each application site
+keeps its own KV cache (same weights, different activations).
+
+The backbone is organized as  n_segments = L / attn_period  python segments,
+each a scanned stack of Mamba layers followed by one shared-attention call —
+the HLO stays one-mamba-body + one-attn-body regardless of depth.
+
+SSM dynamics parameters (A_log, dt_bias, conv, D) stay FP under LCD
+(exp-sensitivity, DESIGN.md §5); all projections are clusterable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import maybe_shard
+from repro.models import params as PT
+from repro.models.config import ModelConfig
+from repro.models.layers import attn_block, linear, mlp_block, rmsnorm
+from repro.models.linear_attn import ssd_chunked
+from repro.models.transformer import _attn_table, _mlp_table
+
+D = PT.ParamDecl
+
+
+def _mamba_in_dim(cfg: ModelConfig) -> int:
+    # [z (di), xc (di), B (N), C (N), dt (H)]
+    return 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+
+
+def param_table(cfg: ModelConfig) -> PT.Table:
+    L, d = cfg.n_layers, cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ln = "layers,"
+    return {
+        "embed": D((cfg.padded_vocab, d), "vocab,embed", "embed"),
+        "blocks": {
+            "ln": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            "w_in": D((L, d, _mamba_in_dim(cfg)), ln + "embed,ssm_in", "fanin"),
+            "conv": D((L, cfg.ssm_conv, di), ln + "conv,.", "normal:0.1", "float32"),
+            "a_log": D((L, H), ln + "ssm_heads", "uniform:0.0~1.4", "float32"),
+            "dt_bias": D((L, H), ln + "ssm_heads", "uniform:-4.6~-2.3", "float32"),
+            "d_skip": D((L, H), ln + "ssm_heads", "ones", "float32"),
+            "w_out": D((L, di, d), ln + "ssm_inner,embed", "fanin"),
+        },
+        # ONE shared attention + MLP block (unstacked), reused at every site
+        "shared": {
+            "ln_attn": {"scale": D((d,), "embed_nofsdp", "zeros", "float32")},
+            "attn": _attn_table(cfg, stacked=False),
+            "ln_mlp": {"scale": D((d,), "embed_nofsdp", "zeros", "float32")},
+            "mlp": _mlp_table(cfg, stacked=False),
+        },
+        "ln_final": {"scale": D((d,), "embed_nofsdp", "zeros", "float32")},
+        "lm_head": D((d, cfg.padded_vocab), "embed,vocab", "fanin"),
+    }
+
+
+def _causal_conv(xc: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv width K. xc: (B,S,di); w: (K,di);
+    state: (B,K-1,di) trailing inputs from the previous chunk (decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xc.shape[0], k - 1, xc.shape[2]), xc.dtype)
+    else:
+        pad = state.astype(xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)                  # (B, S+K-1, di)
+    out = sum(xp[:, i:i + xc.shape[1]] * w[i].astype(xc.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return out, new_state
+
+
+def _ssd_scan(xh, Bt, Ct, dt, a_log, d_skip, s0):
+    """xh: (B,S,H,P) f32; Bt/Ct: (B,S,N); dt: (B,S,H); s0: (B,H,P,N)."""
+    decay = jnp.exp(-dt * jnp.exp(a_log)[None, None, :])     # (B,S,H)
+
+    def step(s, inp):
+        x_t, b_t, c_t, dt_t, dec_t = inp
+        s = dec_t[..., None, None] * s + jnp.einsum(
+            "bhp,bn,bh->bhpn", x_t, b_t, dt_t)
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+
+    xs = jnp.moveaxis(xh, 1, 0)
+    bs = jnp.moveaxis(Bt, 1, 0)
+    cs = jnp.moveaxis(Ct, 1, 0)
+    dts = jnp.moveaxis(dt, 1, 0)
+    decs = jnp.moveaxis(decay, 1, 0)
+    s_final, ys = jax.lax.scan(step, s0, (xs, bs, cs, dts, decs))
+    y = jnp.moveaxis(ys, 0, 1) + d_skip[None, None, :, None] * xh
+    return y, s_final
+
+
+def mamba_block(p, x, cfg: ModelConfig, state):
+    """state = (ssm (B,H,P,N) f32, conv (B,K-1,di)) or None (train)."""
+    b, s, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcd = linear(x, p["w_in"])
+    z, xc, Bt, Ct, dt = jnp.split(
+        zxbcd, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xc, conv_state = _causal_conv(xc, p["conv"], state[1] if state else None)
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(b, s, H, P).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    s0 = state[0] if state else jnp.zeros((b, H, P, N), jnp.float32)
+
+    if cfg.ssm_impl == "chunked" and s > 1:
+        # block-parallel SSD (§Perf 'chunked-ssm'): state hits HBM once per
+        # 64-token chunk instead of every token
+        y, s_new = ssd_chunked(xh, Bt.astype(jnp.float32),
+                               Ct.astype(jnp.float32), dtf,
+                               p["a_log"], p["d_skip"], s0)
+    else:
+        y, s_new = _ssd_scan(xh, Bt.astype(jnp.float32), Ct.astype(jnp.float32),
+                             dtf, p["a_log"], p["d_skip"], s0)
+    y = y.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    out = linear(y, p["w_out"])
+    new_state = (s_new, conv_state) if state is not None else None
+    return out, new_state
+
+
+def _shared_attn(params, x, cfg: ModelConfig, cache=None, pos_offset=0):
+    p = params["shared"]
+    h = rmsnorm(x, p["ln_attn"]["scale"])
+    a, new_cache = attn_block(p["attn"], h, cfg, cache=cache, pos_offset=pos_offset)
+    x = x + a
+    h = rmsnorm(x, p["ln_mlp"]["scale"])
+    return x + mlp_block(p["mlp"], h, cfg), new_cache
+
+
+def n_sites(cfg: ModelConfig) -> int:
+    return max(cfg.n_layers // max(cfg.attn_period, 1), 1)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]
+    x = maybe_shard(x, "batch", None, None)
+    per = max(cfg.attn_period, 1)
+    sites = n_sites(cfg)
+
+    def body(x, p):
+        h, _ = mamba_block(p, rmsnorm(x, p["ln"]["scale"]), cfg, None)
+        return x + h, None
+
+    if cfg.remat:
+        pol = (jax.checkpoint_policies.nothing_saveable
+               if cfg.remat_policy == "nothing"
+               else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=pol)
+
+    blocks = params["blocks"]
+    for seg in range(sites):
+        seg_blocks = jax.tree_util.tree_map(
+            lambda a: a[seg * per:(seg + 1) * per], blocks)
+        x, _ = jax.lax.scan(body, x, seg_blocks)
+        x, _ = _shared_attn(params, x, cfg)
+    # trailing mamba layers not followed by an attention site
+    rem = cfg.n_layers - sites * per
+    if rem:
+        seg_blocks = jax.tree_util.tree_map(lambda a: a[-rem:], blocks)
+        x, _ = jax.lax.scan(body, x, seg_blocks)
+
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return maybe_shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    L, di, K = cfg.n_layers, cfg.d_inner, cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, K - 1, di), cfg.jnp_dtype),
+        "k": jnp.zeros((n_sites(cfg), batch, max_seq, cfg.n_kv_heads, cfg.hd), cfg.jnp_dtype),
+        "v": jnp.zeros((n_sites(cfg), batch, max_seq, cfg.n_kv_heads, cfg.hd), cfg.jnp_dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    L, di, K = cfg.n_layers, cfg.d_inner, cfg.ssm_conv
+    f = cfg.jnp_dtype
+    return {
+        "ssm": jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((L, batch, K - 1, di), f),
+        "k": jax.ShapeDtypeStruct((n_sites(cfg), batch, max_seq, cfg.n_kv_heads, cfg.hd), f),
+        "v": jax.ShapeDtypeStruct((n_sites(cfg), batch, max_seq, cfg.n_kv_heads, cfg.hd), f),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+CACHE_NAMES = {
+    "ssm": "layers,batch,ssm_heads,.,.",
+    "conv": "layers,batch,.,ssm_inner",
+    "k": "layers,batch,seq_kv,kv,.",
+    "v": "layers,batch,seq_kv,kv,.",
+    "pos": "",
+}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]
+    per = max(cfg.attn_period, 1)
+    sites = n_sites(cfg)
+    blocks = params["blocks"]
+
+    def body(carry, layer):
+        x = carry
+        p, s_ssm, s_conv = layer
+        h, st = mamba_block(p, rmsnorm(x, p["ln"]["scale"]), cfg, (s_ssm, s_conv))
+        return x + h, st
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for seg in range(sites):
+        sl = slice(seg * per, (seg + 1) * per)
+        seg_layers = (jax.tree_util.tree_map(lambda a: a[sl], blocks),
+                      cache["ssm"][sl], cache["conv"][sl])
+        x, (s_ssm, s_conv) = jax.lax.scan(body, x, seg_layers)
+        new_ssm.append(s_ssm)
+        new_conv.append(s_conv)
+        site_cache = {"k": cache["k"][seg], "v": cache["v"][seg], "pos": pos}
+        x, sc = _shared_attn(params, x, cfg, cache=site_cache)
+        new_k.append(sc["k"])
+        new_v.append(sc["v"])
+    rem = cfg.n_layers - sites * per
+    if rem:
+        seg_layers = (jax.tree_util.tree_map(lambda a: a[-rem:], blocks),
+                      cache["ssm"][-rem:], cache["conv"][-rem:])
+        x, (s_ssm, s_conv) = jax.lax.scan(body, x, seg_layers)
+        new_ssm.append(s_ssm)
+        new_conv.append(s_conv)
+
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "k": jnp.stack(new_k, axis=0),
+        "v": jnp.stack(new_v, axis=0),
+        "pos": pos + 1,
+    }
+    return logits[:, -1], new_cache

@@ -1,0 +1,105 @@
+"""AdamW + LR schedule + gradient clipping, pytree-native.
+
+Optimizer states inherit the parameter sharding *plus* ZeRO-1 semantics fall
+out of the FSDP parameter specs (m/v shard exactly like the FSDP-sharded
+params, so each data-parallel rank keeps 1/dp of the moments — declared via
+out_shardings in the train step, XLA inserts the reduce-scatter/all-gather).
+
+Also hosts the distillation-loss combinator used when fine-tuning clustered
+codebooks end-to-end (the paper's self-distillation applied at model scope).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init_adam(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros, zeros2)
+
+
+def abstract_adam(aparams) -> AdamState:
+    z = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams)
+    z2 = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams)
+    return AdamState(jax.ShapeDtypeStruct((), jnp.int32), z, z2)
+
+
+def global_norm(tree) -> jax.Array:
+    total = 0.0
+    for x in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(x.dtype, jnp.inexact):   # skip int/float0 leaves
+            total = total + jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return jnp.sqrt(total)
+
+
+def adam_update(cfg: OptConfig, params, grads, state: AdamState):
+    """One AdamW step with global-norm clipping. Returns (params', state')."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if not jnp.issubdtype(p.dtype, jnp.inexact):
+            return p, m, v    # integer leaves (e.g. LCD codes): frozen
+        gf = g.astype(jnp.float32) * scale
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * gf
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    # three maps (not one map returning tuples): params may contain
+    # ClusteredTensor leaves, and NamedTuples are tuples — a tuple-is_leaf
+    # extraction would stop at them. XLA dedups the repeated computation.
+    new_p = jax.tree_util.tree_map(
+        lambda p, g, m, v: upd(p, g, m, v)[0], params, grads, state.m, state.v)
+    new_m = jax.tree_util.tree_map(
+        lambda p, g, m, v: upd(p, g, m, v)[1], params, grads, state.m, state.v)
+    new_v = jax.tree_util.tree_map(
+        lambda p, g, m, v: upd(p, g, m, v)[2], params, grads, state.m, state.v)
+    return new_p, AdamState(step, new_m, new_v), gnorm

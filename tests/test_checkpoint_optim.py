@@ -1,0 +1,118 @@
+"""Fault-tolerance (checkpoint manager) + optimizer + compression tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.compress import EFState, apply_ef, init_ef
+from repro.optim.optimizer import (AdamState, OptConfig, adam_update,
+                                   init_adam, lr_at)
+
+
+class TestCheckpointManager:
+    def tree(self, scale=1.0):
+        return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) * scale,
+                "b": {"c": jnp.ones((5,), jnp.bfloat16) * scale}}
+
+    def test_roundtrip(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        t = self.tree()
+        cm.save(7, t)
+        step, restored = cm.restore_latest(t)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_uncommitted_checkpoint_ignored(self, tmp_path):
+        """Crash mid-write: directory exists but no COMMITTED marker."""
+        cm = CheckpointManager(str(tmp_path))
+        t = self.tree()
+        cm.save(1, t)
+        p = cm.save(2, t)
+        os.remove(os.path.join(p, "COMMITTED"))       # simulate torn write
+        assert cm.latest_step() == 1
+        step, _ = cm.restore_latest(t)
+        assert step == 1
+
+    def test_rolling_retention(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path), keep=2)
+        t = self.tree()
+        for s in (1, 2, 3, 4):
+            cm.save(s, t)
+        assert cm.all_steps() == [3, 4]
+
+    def test_restore_resharded(self, tmp_path):
+        """Elastic restart: restore with explicit (different) shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        cm = CheckpointManager(str(tmp_path))
+        t = {"w": jnp.arange(8, dtype=jnp.float32)}
+        cm.save(3, t)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = {"w": NamedSharding(mesh, P("data"))}
+        _, restored = cm.restore_latest(t, shardings=sh)
+        assert restored["w"].sharding == sh["w"]
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(1, {"w": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            cm.restore(1, {"w": jnp.zeros((5,))})
+
+    def test_auto_resume_picks_newest(self, tmp_path):
+        cm = CheckpointManager(str(tmp_path))
+        t = self.tree()
+        cm.save(1, self.tree(1.0))
+        cm.save(9, self.tree(9.0))
+        step, restored = cm.restore_latest(t)
+        assert step == 9
+        assert float(restored["a"][1, 1]) == 5 * 9.0
+
+
+class TestOptimizer:
+    def test_adam_minimizes_quadratic(self):
+        cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                        weight_decay=0.0, clip_norm=100.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = init_adam(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = adam_update(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_lr_schedule_shape(self):
+        cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+        assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+        assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(lr_at(cfg, jnp.asarray(100))) <= 0.1 + 1e-6
+
+    def test_grad_clipping(self):
+        cfg = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros((3,))}
+        st = init_adam(params)
+        _, _, gnorm = adam_update(cfg, params, {"w": jnp.asarray([1e3, 0, 0])}, st)
+        assert float(gnorm) == pytest.approx(1e3)
+
+
+class TestGradCompression:
+    def test_error_feedback_unbiased_over_time(self):
+        """With EF, the accumulated applied gradient converges to the true sum."""
+        rng = np.random.default_rng(0)
+        g_true = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+        ef = init_ef({"w": g_true})
+        applied = jnp.zeros_like(g_true)
+        for _ in range(50):
+            out, ef = apply_ef({"w": g_true}, ef)
+            applied = applied + out["w"]
+        np.testing.assert_allclose(np.asarray(applied) / 50, np.asarray(g_true),
+                                   atol=0.02)
+
+    def test_quantization_bounded_error_per_step(self):
+        g = {"w": jnp.asarray(np.random.default_rng(1).normal(0, 1, (128,))
+                              .astype(np.float32))}
+        ef = init_ef(g)
+        out, ef2 = apply_ef(g, ef)
+        amax = float(jnp.abs(g["w"]).max())
+        assert float(jnp.abs(out["w"] - g["w"]).max()) <= amax / 127 + 1e-6

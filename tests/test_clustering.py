@@ -1,0 +1,163 @@
+"""Unit + property tests for the clustering substrate (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as C
+
+
+def gaussian_weights(n=4096, std=0.02, outliers=0, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, std, n).astype(np.float32)
+    if outliers:
+        w[rng.integers(0, n, outliers)] *= 8
+    return w
+
+
+# ---------------------------------------------------------------------------
+# DBCI
+# ---------------------------------------------------------------------------
+
+class TestDBCI:
+    def test_sigma_estimate_matches_gaussian(self):
+        w = np.sort(np.random.default_rng(0).normal(0, 0.05, 200_000))
+        sigma = C.estimate_sigma(w)
+        assert abs(sigma - 0.05) / 0.05 < 0.05
+
+    def test_yields_budgeted_centroids(self):
+        res = C.dbci_init(gaussian_weights(outliers=50), max_centroids=20)
+        assert 2 <= len(res.centroids) <= 20
+        assert np.all(np.diff(res.centroids) > 0)  # sorted, unique
+
+    def test_centroids_within_range(self):
+        w = gaussian_weights(outliers=10)
+        res = C.dbci_init(w)
+        assert res.centroids.min() >= w.min() - 1e-6
+        assert res.centroids.max() <= w.max() + 1e-6
+
+    def test_eps_scale_reduces_budget(self):
+        w = gaussian_weights()
+        k1 = len(C.dbci_init(w, eps_scale=1.0).centroids)
+        k2 = len(C.dbci_init(w, eps_scale=2.0).centroids)
+        assert k2 <= k1
+
+    def test_deterministic(self):
+        w = gaussian_weights()
+        a = C.dbci_init(w, seed=3).centroids
+        b = C.dbci_init(w, seed=3).centroids
+        np.testing.assert_array_equal(a, b)
+
+    def test_degenerate_constant_input(self):
+        w = np.full(1000, 0.5, np.float32) + np.random.default_rng(0).normal(
+            0, 1e-8, 1000).astype(np.float32)
+        res = C.dbci_init(w)
+        assert len(res.centroids) >= 1
+
+    def test_dbscan_1d_finds_separated_blobs(self):
+        rng = np.random.default_rng(1)
+        ws = np.sort(np.concatenate([
+            rng.normal(-1, 0.01, 500), rng.normal(0, 0.01, 500),
+            rng.normal(1, 0.01, 500)]))
+        labels, k = C._dbscan_1d_sorted(ws, eps=0.05, min_pts=5)
+        assert k == 3
+
+
+# ---------------------------------------------------------------------------
+# Cluster state ops
+# ---------------------------------------------------------------------------
+
+class TestStateOps:
+    def test_assign_is_nearest(self):
+        st_ = C.make_state(np.array([-1.0, 0.0, 2.0]))
+        w = jnp.asarray([-0.9, -0.4, 0.4, 1.1, 5.0])
+        codes = C.assign(w, st_)
+        np.testing.assert_array_equal(np.asarray(codes), [0, 1, 1, 2, 2])
+
+    def test_dequant_roundtrip(self):
+        cents = np.array([-0.5, 0.0, 0.5], np.float32)
+        st_ = C.make_state(cents)
+        w = jnp.asarray(cents)
+        codes = C.assign(w, st_)
+        np.testing.assert_allclose(np.asarray(C.dequant(codes, st_)), cents)
+
+    def test_refresh_is_weighted_mean(self):
+        st_ = C.make_state(np.array([0.0, 10.0]))
+        w = jnp.asarray([1.0, 2.0, 9.0, 11.0])
+        h = jnp.asarray([3.0, 1.0, 1.0, 1.0])
+        codes = C.assign(w, st_)
+        st2 = C.refresh(w, codes, st_, h)
+        cents = C.active_centroids(st2)
+        np.testing.assert_allclose(cents[0], (3 * 1 + 2) / 4.0, rtol=1e-6)
+        np.testing.assert_allclose(cents[1], 10.0, rtol=1e-6)
+
+    def test_merge_reduces_count_and_preserves_mass_centroid(self):
+        st_ = C.make_state(np.array([0.0, 0.1, 5.0]))
+        w = jnp.asarray([0.0, 0.0, 0.1, 5.0])
+        codes = C.assign(w, st_)
+        st_ = C.refresh(w, codes, st_, jnp.ones(4))
+        st2 = C.merge_closest(st_, "closest")
+        assert C.num_active(st2) == 2
+        cents = C.active_centroids(st2)
+        np.testing.assert_allclose(cents[0], (2 * 0.0 + 1 * 0.1) / 3, atol=1e-6)
+
+    def test_merge_salience_protects_heavy_pairs(self):
+        # pair (0, .1) has huge mass; pair (5, 5.3) tiny mass. salience merges
+        # the light pair even though its gap is wider.
+        st_ = C.make_state(np.array([0.0, 0.1, 5.0, 5.3]))
+        w = jnp.concatenate([jnp.zeros(500), jnp.full((500,), 0.1),
+                             jnp.asarray([5.0, 5.3])])
+        codes = C.assign(w, st_)
+        st_ = C.refresh(w, codes, st_, jnp.ones_like(w))
+        st2 = C.merge_closest(st_, "salience")
+        cents = C.active_centroids(st2)
+        assert len(cents) == 3
+        assert np.isclose(cents[-1], 5.15, atol=1e-3)  # light pair merged
+
+    def test_objective_decreases_with_refresh(self):
+        w = jnp.asarray(gaussian_weights(1024))
+        h = jnp.ones_like(w)
+        st_ = C.make_state(C.uniform_grid_centroids(np.asarray(w), 3))
+        codes = C.assign(w, st_)
+        j0 = float(C.objective(w, codes, st_, h))
+        st2 = C.refresh(w, codes, st_, h)
+        j1 = float(C.objective(w, codes, st2, h))
+        assert j1 <= j0 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12))
+def test_prop_kmeans_centroids_bounded(seed, k):
+    w = np.random.default_rng(seed).normal(0, 1, 512).astype(np.float32)
+    cents = C.kmeans_1d(w, k, seed=seed)
+    assert len(cents) == k
+    assert cents.min() >= w.min() - 1e-5 and cents.max() <= w.max() + 1e-5
+    assert np.all(np.diff(cents) >= -1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_assign_minimizes_weighted_distance(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, 256).astype(np.float32))
+    st_ = C.make_state(np.sort(rng.normal(0, 1, 6)).astype(np.float32))
+    codes = np.asarray(C.assign(w, st_))
+    cents = np.asarray(st_.centroids)
+    d_chosen = np.abs(np.asarray(w) - cents[codes])
+    d_best = np.abs(np.asarray(w)[:, None] - cents[None, :6]).min(axis=1)
+    np.testing.assert_allclose(d_chosen, d_best, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_prop_dbci_total_order_invariance(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, 2048).astype(np.float32)
+    a = C.dbci_init(w).centroids
+    b = C.dbci_init(rng.permutation(w)).centroids
+    np.testing.assert_allclose(a, b, atol=1e-6)

@@ -1,0 +1,127 @@
+"""Tests for the LCD distillation loop (paper §3.2-3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clustering as C
+from repro.core.distill import LCDConfig, distill_layer, distill_layer_to_k, lcd_step
+from repro.core.hessian import diag_hessian_from_inputs
+
+
+@pytest.fixture(scope="module")
+def layer():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.02, size=(256, 128)).astype(np.float32)
+    w[rng.integers(0, 256, 20), rng.integers(0, 128, 20)] *= 8
+    x = rng.normal(0, 1.0, size=(512, 256)).astype(np.float32)
+    h = np.asarray(diag_hessian_from_inputs(jnp.asarray(x)))[:, None]
+    return w, h
+
+
+def rel_mse(w, codes, state):
+    wq = np.asarray(C.dequant(jnp.asarray(codes), state))
+    return float(np.mean((wq - w) ** 2) / np.mean(w ** 2))
+
+
+class TestLCDStep:
+    def test_step_reduces_objective(self, layer):
+        w, h = layer
+        wt = jnp.asarray(w)
+        hb = jnp.asarray(np.broadcast_to(h, w.shape))
+        state = C.make_state(C.uniform_grid_centroids(w, 4))
+        codes = C.assign(wt, state)
+        j0 = float(C.objective(wt, codes, state, hb))
+        codes, state, j, _ = lcd_step(wt, codes, state, hb, 1.0, 0.0, 2,
+                                      allow_merge=False)
+        assert float(j) < j0
+
+    def test_merge_respects_min_k(self, layer):
+        w, h = layer
+        wt = jnp.asarray(w)
+        hb = jnp.asarray(np.broadcast_to(h, w.shape))
+        state = C.make_state(C.kmeans_1d(w, 6))
+        codes = C.assign(wt, state)
+        for _ in range(10):
+            codes, state, j, _ = lcd_step(wt, codes, state, hb, 1.0,
+                                          jnp.inf, 4, allow_merge=True)
+        assert C.num_active(state) == 4
+
+    def test_reclassification_eq6_equals_nearest(self, layer):
+        """Eq. 6's half-distance migration == nearest re-assignment (module
+        docstring claim): after an update, every weight's new code is the
+        nearest centroid."""
+        w, h = layer
+        wt = jnp.asarray(w)
+        hb = jnp.asarray(np.broadcast_to(h, w.shape))
+        state = C.make_state(C.kmeans_1d(w, 8))
+        codes = C.assign(wt, state)
+        codes2, state2, _, _ = lcd_step(wt, codes, state, hb, 0.5, 0.0, 2,
+                                        allow_merge=False)
+        # recompute nearest assignment of the updated weights against the
+        # *pre-refresh* centroids is internal; instead check the public
+        # invariant: codes2 are nearest w.r.t. some consistent state — the
+        # objective cannot exceed the pre-step objective.
+        j_before = float(C.objective(wt, codes, state, hb))
+        j_after = float(C.objective(wt, codes2, state2, hb))
+        assert j_after <= j_before + 1e-6
+
+
+class TestDistillLayer:
+    def test_adaptive_reduces_centroids(self, layer):
+        w, h = layer
+        codes, state, rep = distill_layer(w, h, LCDConfig(max_steps=150))
+        assert rep.centroid_history[-1] < rep.centroid_history[0]
+        assert rep.final_objective < 0.08
+        assert len(rep.final_centroids) == C.num_active(state)
+
+    def test_fixed_k_matches_kmeans_quality(self, layer):
+        w, h = layer
+        codes, state, rep = distill_layer_to_k(w, h, 8)
+        assert C.num_active(state) == 8
+        km = C.kmeans_1d(w, 8)
+        st_km = C.make_state(km)
+        codes_km = C.assign(jnp.asarray(w), st_km)
+        # LCD at fixed k should be at least within 5% of Lloyd's (it refines
+        # through the same fixed point, from a density init)
+        assert rel_mse(w, codes, state) <= rel_mse(w, np.asarray(codes_km), st_km) * 1.05
+
+    def test_hessian_weighting_shifts_centroids(self):
+        """Columns with high curvature should be represented better."""
+        rng = np.random.default_rng(1)
+        w = rng.normal(0, 0.05, size=(128, 64)).astype(np.float32)
+        h_hi = np.ones((128, 1), np.float32)
+        h_hi[:16] = 400.0  # first 16 input channels are critical
+        _, st_u, _ = distill_layer_to_k(w, np.ones((128, 1), np.float32), 4)
+        codes_h, st_h, _ = distill_layer_to_k(w, h_hi, 4)
+        wq_h = np.asarray(C.dequant(jnp.asarray(codes_h), st_h))
+        err_crit_h = np.mean((wq_h[:16] - w[:16]) ** 2)
+        codes_u = np.asarray(C.assign(jnp.asarray(w), st_u))
+        wq_u = np.asarray(C.dequant(jnp.asarray(codes_u), st_u))
+        err_crit_u = np.mean((wq_u[:16] - w[:16]) ** 2)
+        assert err_crit_h <= err_crit_u * 1.02
+
+    def test_po_only_vs_full(self, layer):
+        """Fig. 7b: progressive-only may converge prematurely (>= centroids of
+        the full method)."""
+        w, h = layer
+        cfg = LCDConfig(max_steps=150)
+        _, _, rep_full = distill_layer(w, h, cfg)
+        _, _, rep_po = distill_layer(w, h, cfg, speculative=False)
+        assert rep_po.centroid_history[-1] >= rep_full.centroid_history[-1]
+
+    def test_naive_init_worse_or_equal(self, layer):
+        w, h = layer
+        cfg = LCDConfig(max_steps=100)
+        _, st_d, rep_d = distill_layer(w, h, cfg)
+        _, st_n, rep_n = distill_layer(w, h, cfg, init="naive4bit")
+        # same-k comparison: at its final k, DBCI-init objective is competitive
+        assert rep_d.final_objective <= rep_n.final_objective * 1.5
+
+    def test_report_trajectories_recorded(self, layer):
+        w, h = layer
+        _, _, rep = distill_layer(w, h, LCDConfig(max_steps=60))
+        # speculative probes consume step budget too; >=70% must be logged
+        assert len(rep.objective_history) >= 42
+        assert len(rep.centroid_history) == len(rep.objective_history) + 1
+        assert len(rep.trace_history) == len(rep.objective_history)

@@ -1,0 +1,115 @@
+"""Tests for §3.4 adaptive smoothing and §4 LUT inference semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as C
+from repro.core.lut import (build_lut_layer, lut_forward, lut_matmul_dequant_ref,
+                            lut_matmul_ref, pack4, unpack4)
+from repro.core.quantize import fake_quant_sym
+from repro.core.smoothing import (adaptive_smooth, fold_into_weight,
+                                  smooth_quant_input)
+
+
+def outlier_acts(n=512, d=64, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    x[:, 5] *= 40
+    x[:, 20] *= 15
+    return x
+
+
+class TestSmoothing:
+    def test_eq9_improves_over_identity(self):
+        res = adaptive_smooth(outlier_acts())
+        assert res.mse < res.mse_identity * 0.25
+
+    def test_fold_preserves_product(self):
+        x = outlier_acts()
+        rng = np.random.default_rng(1)
+        w = rng.normal(0, 0.05, (64, 32)).astype(np.float32)
+        res = adaptive_smooth(x)
+        ws = fold_into_weight(w, res.s)
+        y0 = x @ w
+        y1 = (x / res.s) @ ws
+        np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+
+    def test_no_outliers_prefers_mild_smoothing(self):
+        x = np.random.default_rng(2).normal(0, 1, (512, 64)).astype(np.float32)
+        res = adaptive_smooth(x)
+        assert res.mse <= res.mse_identity * 1.0 + 1e-12
+
+    def test_eq11_single_multiply_fusion(self):
+        """smooth-then-quant == one multiply by 1/(s_m s_q) (Eq. 11)."""
+        x = outlier_acts()
+        res = adaptive_smooth(x)
+        q1 = smooth_quant_input(jnp.asarray(x), jnp.asarray(res.s),
+                                jnp.asarray(res.act_scale))
+        xs = x / res.s
+        q2 = np.clip(np.round(xs / res.act_scale), -128, 127).astype(np.int8)
+        np.testing.assert_array_equal(np.asarray(q1), q2)
+
+    def test_int4_activation_table3(self):
+        """Table 3: INT4 activations are usable only with smoothing."""
+        x = outlier_acts()
+        res = adaptive_smooth(x, bits=4)
+        mse_id = float(np.mean((x - np.asarray(
+            fake_quant_sym(jnp.asarray(x), 4))) ** 2))
+        assert res.mse < mse_id
+
+
+class TestPacking:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 32))
+    def test_prop_pack_unpack_roundtrip(self, seed, k, n):
+        codes = np.random.default_rng(seed).integers(
+            0, 16, size=(2 * k, n)).astype(np.uint8)
+        up = np.asarray(unpack4(jnp.asarray(pack4(codes)), 2 * k))
+        np.testing.assert_array_equal(up, codes)
+
+    def test_odd_rows_padded(self):
+        codes = np.arange(15, dtype=np.uint8).reshape(5, 3) % 16
+        packed = pack4(codes)
+        assert packed.shape == (3, 3)
+        up = np.asarray(unpack4(jnp.asarray(packed), 5))
+        np.testing.assert_array_equal(up, codes)
+
+
+class TestLUTInference:
+    def test_bucket_equals_dequant_form(self):
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.integers(-127, 128, (64, 32)).astype(np.int8))
+        codes = jnp.asarray(rng.integers(0, 9, (32, 24)).astype(np.int32))
+        cb = jnp.asarray(np.sort(rng.normal(0, 0.05, 9)).astype(np.float32))
+        s = jnp.float32(0.01)
+        a = lut_matmul_ref(q, codes, cb, s)
+        b = lut_matmul_dequant_ref(q, codes, cb, s)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_end_to_end_layer_error_bounded(self):
+        """Full §4 pipeline (smooth -> int8 -> bucket lookup) on a clustered
+        layer stays close to the FP matmul when weights cluster well."""
+        rng = np.random.default_rng(5)
+        x = outlier_acts(256, 64, seed=6)
+        # weights built FROM 8 centroids (zero clustering error) so the
+        # remaining error is activation-quantization only
+        cb = np.sort(rng.normal(0, 0.05, 8)).astype(np.float32)
+        codes = rng.integers(0, 8, (64, 48)).astype(np.uint8)
+        s = adaptive_smooth(x).s
+        w_dense = (cb[codes] / s[:, None]).astype(np.float32)
+        layer = build_lut_layer(cb[codes], codes, cb, s, x)
+        y_lut = np.asarray(lut_forward(layer, jnp.asarray(x)))
+        y_fp = x @ w_dense
+        rel = np.linalg.norm(y_lut - y_fp) / np.linalg.norm(y_fp)
+        assert rel < 0.02, rel
+
+    def test_saturating_q_handled(self):
+        """-128 saturates to the symmetric table edge without error blowup."""
+        q = jnp.asarray(np.full((4, 8), -128, np.int8))
+        codes = jnp.asarray(np.zeros((8, 4), np.int32))
+        cb = jnp.asarray(np.array([0.5, 0, 0, 0, 0, 0, 0, 0], np.float32))
+        y = lut_matmul_ref(q, codes, cb, jnp.float32(1.0))
+        assert np.all(np.isfinite(np.asarray(y)))

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced configs of the same family, one
+forward + one train step on CPU, asserting shapes and no NaNs (assignment
+requirement), plus decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import get_config, list_archs, reduced
+from repro.models.registry import get_model, lm_loss
+from repro.optim.optimizer import OptConfig, adam_update, init_adam
+
+ARCHS = [a for a in list_archs()]
+
+
+def make_batch(cfg, key, b=2, s=16):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab),
+        "targets": jax.random.randint(ks[1], (b, s), 0, cfg.vocab),
+        "loss_mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            ks[2], (b, cfg.n_img_tokens, cfg.d_model), cfg.jnp_dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.enc_seq, cfg.d_model), cfg.jnp_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nans(self, arch):
+        cfg = reduced(get_config(arch))
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = make_batch(cfg, jax.random.key(1))
+        logits, aux = jax.jit(lambda p, b: model.apply(p, b))(params, batch)
+        assert logits.shape == (2, 16, cfg.padded_vocab)
+        assert not bool(jnp.isnan(logits).any())
+        assert not bool(jnp.isnan(aux))
+
+    def test_one_train_step(self, arch):
+        cfg = reduced(get_config(arch))
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = make_batch(cfg, jax.random.key(1))
+
+        def loss_fn(p):
+            logits, aux = model.apply(p, batch)
+            return lm_loss(logits, batch["targets"], batch["loss_mask"],
+                           cfg.vocab) + 0.01 * aux
+
+        loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+        assert np.isfinite(float(loss))
+        opt = init_adam(params)
+        p2, opt2, gnorm = adam_update(OptConfig(), params, grads, opt)
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+        # parameters actually changed
+        delta = sum(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)))
+        assert delta > 0
+
+    def test_decode_matches_forward(self, arch):
+        cfg = reduced(get_config(arch))
+        if cfg.family == "vlm":
+            pytest.skip("prefix decode exercised in dense; vlm prefill-only here")
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = make_batch(cfg, jax.random.key(1), b=2, s=8)
+        logits, _ = jax.jit(lambda p, b: model.apply(p, b))(params, batch)
+        cache = model.init_cache(2, 16)
+        if cfg.family == "audio":
+            from repro.models import whisper
+            enc = whisper.encode(params, batch["frames"], cfg)
+            ks, vs = whisper.build_cross_cache(params, enc, cfg)
+            cache["ck"], cache["cv"] = ks, vs
+        dec = jax.jit(lambda p, c, b: model.decode(p, c, b))
+        errs = []
+        for i in range(8):
+            db = {"tokens": batch["tokens"][:, i:i + 1], "pos": jnp.asarray(i)}
+            if cfg.family == "audio":
+                db["frames"] = batch["frames"]
+            lg, cache = dec(params, cache, db)
+            errs.append(float(jnp.abs(
+                lg.astype(jnp.float32) - logits[:, i].astype(jnp.float32)).max()))
+        # MoE capacity drops differ between 8-token and 1-token batches
+        # (expected: train-time token dropping) — bound loosely there;
+        # dense/rwkv/hybrid/audio must match tightly.
+        tol = 1.0 if cfg.n_experts else 2e-3
+        assert max(errs) < tol, errs
+
+
+def test_gemma2_local_global_masks_differ():
+    """Local layers must not attend beyond the window."""
+    cfg = reduced(get_config("gemma2-27b"), local_window=4,
+                  layer_pattern="alt_local_global")
+    from repro.models.transformer import layer_windows
+    w = layer_windows(cfg)
+    assert w[0] == 4 and w[1] == 0
+
+
+def test_full_configs_match_assignment():
+    """The registered full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, d, h, kv, ff, v), arch
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").moe_topk == 2
+    assert get_config("llama4-scout-17b-a16e").moe_topk == 1
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("gemma2-27b").layer_pattern == "alt_local_global"
+    assert get_config("qwen2-1.5b").qkv_bias
