@@ -1,0 +1,136 @@
+"""Decode-path benchmark: the scan-compiled serving engine, dense vs LCD.
+
+    PYTHONPATH=src python -m benchmarks.decode_bench --smoke
+
+Measures the quantities the paper's 6.2x serving claim rides on and writes
+them to BENCH_decode.json so the speedup trajectory is tracked PR over PR:
+
+  * end-to-end tokens/s for the dense and LCD paths through launch/serve.py
+    (one batched prefill + one lax.scan decode with a donated KV cache);
+  * the trace-count invariant: exactly 2 traced computations per generation
+    (one prefill, one scan) — NOT one dispatch per token;
+  * per-layer fused-kernel timings: the single-pass smooth+quant+LUT GEMM
+    (decode GEMV shape) vs the dense matmul, plus the v5e roofline byte model
+    (packed int4 codes vs bf16 weight stream).
+
+--smoke runs a reduced config for a few tokens with the Pallas kernels in
+interpreter mode — CPU-runnable on every CI pass (numbers are correctness
+telemetry there, not perf claims; on TPU the same harness reports real time).
+"""
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.api import is_clustered
+from repro.kernels.ops import lut_gemm_fused, lut_serving, packed_view
+from repro.launch.serve import serve
+
+HBM_BW = 819e9  # v5e
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
+
+def _layer_kernel_rows(params, batch: int, interpret: bool):
+    """Time the fused serving GEMM per unique clustered layer shape at the
+    decode GEMV shape (M = batch)."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_clustered)[0]
+    rows, seen = [], set()
+    rng = np.random.default_rng(0)
+    for kp, leaf in flat:
+        if not is_clustered(leaf):
+            continue
+        ct = leaf
+        if ct.codes.ndim == 3:        # stacked layers: one slice stands for all
+            ct = jax.tree_util.tree_map(lambda a: a[0], ct)
+        d_in, d_out = ct.codes.shape
+        if (d_in, d_out) in seen:
+            continue
+        seen.add((d_in, d_out))
+        x = jnp.asarray(rng.normal(size=(batch, d_in)).astype(np.float32))
+        inv = (ct.inv_scale if ct.inv_scale is not None
+               else 1.0 / ct.smooth).astype(jnp.float32)
+        quant = ct.act_scale is not None
+        act = ct.act_scale if quant else jnp.float32(1.0)
+        packed = packed_view(ct)
+        w = jnp.asarray(rng.normal(size=(d_in, d_out)).astype(np.float32))
+
+        us_fused, _ = timed(lambda: lut_gemm_fused(
+            x, inv, packed, ct.codebook, act, quantize=quant,
+            interpret=interpret).block_until_ready())
+        us_dense, _ = timed(lambda: ((x / ct.smooth) @ w).block_until_ready())
+        bytes_bf16 = d_in * d_out * 2
+        bytes_int4 = d_in * d_out // 2 + 16 * 4
+        rows.append({
+            "path": jax.tree_util.keystr(kp), "d_in": int(d_in),
+            "d_out": int(d_out), "m": batch, "fused_us": round(us_fused, 2),
+            "dense_us": round(us_dense, 2), "quantized_acts": bool(quant),
+            "v5e_roofline_speedup": round(bytes_bf16 / bytes_int4, 2),
+        })
+        emit(f"decode/layer_{d_in}x{d_out}", us_fused,
+             f"dense_us={us_dense:.1f};roofline={bytes_bf16 / bytes_int4:.2f}x")
+    return rows
+
+
+def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
+    if smoke:
+        batch, prompt_len, gen_tokens = 2, 8, 8
+    else:
+        batch, prompt_len, gen_tokens = 8, 64, 128
+    on_tpu = jax.default_backend() == "tpu"
+
+    dense_stats, lcd_stats = {}, {}
+    _, params = serve(arch, use_reduced=smoke, lcd=False, batch=batch,
+                      prompt_len=prompt_len, gen_tokens=gen_tokens,
+                      stats=dense_stats)
+    # off-TPU, force the fused Pallas kernels through the interpreter so the
+    # LCD row measures (and regression-guards) the real serving dispatch, not
+    # the gather fallback
+    with lut_serving(None if on_tpu else "interpret"):
+        _, cparams = serve(arch, use_reduced=smoke, lcd=True, batch=batch,
+                           prompt_len=prompt_len, gen_tokens=gen_tokens,
+                           params=params, stats=lcd_stats)
+
+    for name, st in (("dense", dense_stats), ("lcd", lcd_stats)):
+        assert st["traces"] == {"prefill": 1, "decode": 1}, (
+            f"{name}: scan engine must trace exactly one prefill and one "
+            f"decode scan, got {st['traces']}")
+        emit(f"decode/{name}_tokens_per_s", st["decode_s"] * 1e6,
+             f"tok_s={st['tokens_per_s']:.1f};traces="
+             f"{st['traces']['prefill']}+{st['traces']['decode']}")
+
+    layers = _layer_kernel_rows(cparams, batch, interpret=not on_tpu)
+
+    out = {
+        "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
+        "batch": batch, "prompt_len": prompt_len, "gen_tokens": gen_tokens,
+        "dense": dense_stats, "lcd": lcd_stats,
+        "lcd_vs_dense_tokens_per_s": round(
+            lcd_stats["tokens_per_s"] / max(dense_stats["tokens_per_s"], 1e-9), 3),
+        "layers": layers,
+        "note": ("interpret-mode wall times are correctness telemetry, not "
+                 "perf claims" if not on_tpu else "compiled TPU timings"),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("decode/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, few tokens, CPU/interpret friendly")
+    ap.add_argument("--arch", default="llama2-7b")
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, arch=args.arch)
+    print(json.dumps({k: out[k] for k in
+                      ("lcd_vs_dense_tokens_per_s", "backend", "smoke")}))
+
+
+if __name__ == "__main__":
+    main()

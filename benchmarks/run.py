@@ -11,11 +11,16 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single suite: table1|table2|table3|figs|kernel|roofline")
+                    help="run a single suite: "
+                         "table1|table2|table3|figs|kernel|roofline|decode")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="decode suite: reduced config, few tokens, CPU/"
+                         "interpret friendly (default; --no-smoke for full)")
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
     args = ap.parse_args()
 
-    from benchmarks import (fig_benchmarks, kernel_bench, roofline,
-                            table1_clustering, table2_baselines,
+    from benchmarks import (decode_bench, fig_benchmarks, kernel_bench,
+                            roofline, table1_clustering, table2_baselines,
                             table3_smoothing)
 
     suites = {
@@ -25,6 +30,9 @@ def main() -> None:
         "figs": fig_benchmarks.run,
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
+        # serving-engine perf (tokens/s + per-layer fused kernel timings);
+        # emits BENCH_decode.json on every run so the trajectory is tracked
+        "decode": lambda: decode_bench.run(smoke=args.smoke),
     }
     print("name,us_per_call,derived")
     todo = [args.only] if args.only else list(suites)

@@ -35,10 +35,31 @@ from repro.utils import logger, human_count
 
 class ClusteredTensor(NamedTuple):
     """LCD-compressed linear weight. Logical value = codebook[codes] / smooth[:, None]
-    applied as (x / smooth) @ codebook[codes] — see clustered_matmul."""
+    applied as (x / smooth) @ codebook[codes] — see clustered_matmul.
+
+    Serving artifacts are first-class fields, computed ONCE at compress_model /
+    dense_to_clustered time (they used to be rebuilt per call through a
+    host-side id-keyed cache — a device sync on every GEMM and a correctness
+    hazard when Python reused a freed array's id):
+
+      packed    — int4 code pairs (two per byte along d_in); what the Pallas
+                  serving kernel streams from HBM (¼ the bytes of bf16).
+      inv_scale — the Eq. 11 fused multiplier 1/(s_m·s_q) per input channel
+                  (1/s_m when no activation scale is calibrated).
+      act_scale — s_q, the symmetric int8 scale of the smoothed activations;
+                  None means "not calibrated": the serving kernel then runs
+                  its float variant (smoothing folded, no quantization).
+
+    All three default to None so the tuple stays constructible from bare
+    distillation outputs; the serving path falls back gracefully (see
+    kernels/ops.packed_view).
+    """
     codes: jax.Array       # (d_in, d_out) int8 centroid indices
     codebook: jax.Array    # (K,) f32 centroids of the smoothed weight
     smooth: jax.Array      # (d_in,) f32 smoothing vector (ones if unsmoothed)
+    packed: Optional[jax.Array] = None     # (ceil(d_in/2), d_out) uint8
+    inv_scale: Optional[jax.Array] = None  # (d_in,) f32 = 1/(s_m·s_q)
+    act_scale: Optional[jax.Array] = None  # () f32 s_q; None = uncalibrated
 
     @property
     def shape(self):  # duck-type a little like an array for shape checks
@@ -46,7 +67,7 @@ class ClusteredTensor(NamedTuple):
 
     @property
     def n_centroids(self) -> int:
-        return int(self.codebook.shape[0])
+        return int(self.codebook.shape[-1])
 
 
 def is_clustered(x: Any) -> bool:
@@ -86,13 +107,23 @@ def clustered_matmul(x: jax.Array, ct: ClusteredTensor, *, dtype=None) -> jax.Ar
 
 
 def dense_to_clustered(w: np.ndarray, codes: np.ndarray, codebook: np.ndarray,
-                       smooth: Optional[np.ndarray] = None) -> ClusteredTensor:
+                       smooth: Optional[np.ndarray] = None,
+                       act_scale: Optional[float] = None) -> ClusteredTensor:
+    """Assemble a ClusteredTensor with its serving artifacts precomputed:
+    packed int4 codes and the Eq. 11 inv_scale (host-side, once, here — never
+    per call on the serving path)."""
+    from repro.core.lut import pack4
+
     d_in = w.shape[0]
     s = np.ones((d_in,), np.float32) if smooth is None else np.asarray(smooth, np.float32)
+    sq = 1.0 if act_scale is None else float(act_scale)
     return ClusteredTensor(
         codes=jnp.asarray(codes.astype(np.int8)),
         codebook=jnp.asarray(codebook, jnp.float32),
         smooth=jnp.asarray(s),
+        packed=jnp.asarray(pack4(codes.astype(np.uint8))),
+        inv_scale=jnp.asarray((1.0 / (s * sq)).astype(np.float32)),
+        act_scale=None if act_scale is None else jnp.float32(act_scale),
     )
 
 
@@ -207,13 +238,18 @@ def compress_model(
             return x
         w = np.asarray(jax.device_get(x), np.float32)
 
-        # smoothing (needs input absmax; falls back to identity otherwise)
+        # smoothing (needs input absmax; falls back to identity otherwise).
+        # A calibrated smoothing also yields s_q, which arms the serving
+        # kernel's full int8 Eq. 11 path; identity leaves act_scale=None so
+        # serving runs the float fused variant (no made-up quant scale).
         if smooth_amax and path in smooth_amax:
             sres = adaptive_smooth(smooth_amax[path][None, :])
             s = sres.s
+            act_scale = sres.act_scale
             smoothing[path] = sres.kind
         else:
             s = np.ones((w.shape[-2],), np.float32)
+            act_scale = None
             smoothing[path] = "identity"
 
         if fisher is not None and path in fisher:
@@ -226,7 +262,8 @@ def compress_model(
             codes, cents, rep = _one_slice(path, w, h, s)
             counts[path] = len(cents)
             per_layer[path] = rep
-            ct = dense_to_clustered(w, codes, cents, smooth=s)
+            ct = dense_to_clustered(w, codes, cents, smooth=s,
+                                    act_scale=act_scale)
         else:
             # stacked (L, d_in, d_out): per-slice LCD — this IS the paper's
             # layer-wise dynamic centroid allocation (Fig. 8). Codebooks pad
@@ -243,11 +280,20 @@ def compress_model(
             per_layer[path] = slices[0][2]
             for l, (_, c, rep_l) in enumerate(slices):
                 per_layer[f"{path}[{l}]"] = rep_l
+            from repro.core.lut import pack4
+            sq = 1.0 if act_scale is None else float(act_scale)
+            s_full = np.broadcast_to(s, (w.shape[0], w.shape[1])).copy()
             ct = ClusteredTensor(
                 codes=jnp.asarray(codes.astype(np.int8)),
                 codebook=jnp.asarray(cbs, jnp.float32),
-                smooth=jnp.asarray(np.broadcast_to(
-                    s, (w.shape[0], w.shape[1])).copy()),
+                smooth=jnp.asarray(s_full),
+                packed=jnp.asarray(np.stack(
+                    [pack4(codes[l].astype(np.uint8))
+                     for l in range(codes.shape[0])])),
+                inv_scale=jnp.asarray((1.0 / (s_full * sq)).astype(np.float32)),
+                # leading L axis so lax.scan slices it with the other leaves
+                act_scale=None if act_scale is None else jnp.full(
+                    (w.shape[0],), act_scale, jnp.float32),
             )
         n_clustered += w.size
         logger.info(f"LCD {path}: {w.shape} -> K={counts[path]} "

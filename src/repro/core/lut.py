@@ -63,6 +63,23 @@ def pack4(codes: np.ndarray) -> np.ndarray:
     return (lo | (hi << 4)).astype(np.uint8)
 
 
+def pack4_jax(codes: jnp.ndarray) -> jnp.ndarray:
+    """Device-side pack4 along axis -2: (..., d_in, d_out) -> (..., d_in/2, d_out).
+
+    jit-traceable (no host sync) — the fallback for ClusteredTensors built
+    before packed codes became a first-class field; compress_model packs once
+    at compression time so the serving path never calls this.
+    """
+    c = codes.astype(jnp.uint8)
+    if c.shape[-2] % 2:
+        pad = [(0, 0)] * c.ndim
+        pad[-2] = (0, 1)
+        c = jnp.pad(c, pad)
+    lo = c[..., 0::2, :]
+    hi = c[..., 1::2, :]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
 def unpack4(packed: jnp.ndarray, d_in: int) -> jnp.ndarray:
     """Inverse of pack4: (d_in/2, d_out) uint8 -> (d_in, d_out) int32."""
     lo = (packed & 0xF).astype(jnp.int32)
@@ -85,6 +102,16 @@ def lut_matmul_ref(
     """Y[m, n] = s_q * sum_j  sign(q[m,j]) * T[|q[m,j]|, codes[j,n]].
 
     Gather-based bucket lookup, sign applied at accumulation (paper §4.2).
+
+    Symmetric-table contract (DESIGN.md §2): the table stores only the 128
+    non-negative levels |q| ∈ [0, 127], so int8's asymmetric extreme q = −128
+    has no bucket row — `mag = min(|q|, 127)` SATURATES it to −127 (an error
+    of one LSB, i.e. s_q·c_k, on that entry). This makes lut_matmul_ref differ
+    from `lut_matmul_dequant_ref` (which uses q verbatim) at exactly q = −128
+    and nowhere else. The production pipeline never hits the case: the fused
+    kernel's Eq. 11 transform clips symmetrically to [−127, 127]
+    (kernels/lut_matmul.py `_transform_tile`), which
+    tests/test_lut_and_smoothing.py::TestLUTInference asserts.
     """
     k = codebook.shape[0]
     table = jnp.arange(0, 128, dtype=jnp.float32)[:, None] * codebook[None, :]  # (128, K)

@@ -1,9 +1,15 @@
 """Pallas TPU kernels for LCD's performance-critical paths.
 
-  lut_matmul.py   — fused int4-code dequant + MXU matmul (the serving GEMM;
-                    TPU-native form of the paper's §4 bucket-LUT, DESIGN.md §2)
-  smooth_quant.py — fused smooth+quantize input transform (Eq. 11)
-  ops.py          — padded/blocked jit wrappers + CPU fallbacks
+  lut_matmul.py   — int4-code dequant + MXU matmul (the serving GEMM; TPU-
+                    native form of the paper's §4 bucket-LUT, DESIGN.md §2),
+                    including the single-pass fused smooth+quant+LUT variants
+                    (lut_matmul_fused / lut_matmul_fused_gemv)
+  smooth_quant.py — standalone smooth+quantize input transform (Eq. 11);
+                    kept for calibration tooling — the serving path runs the
+                    transform inside the fused GEMM instead
+  ops.py          — padded/blocked jit wrappers, variant selection, CPU
+                    fallbacks, and the lut_serving dispatch context
   ref.py          — pure-jnp oracles (asserted in tests/test_kernels.py)
 """
-from repro.kernels.ops import clustered_linear, lut_gemm, lut_gemm_int8  # noqa: F401
+from repro.kernels.ops import (clustered_linear, lut_gemm, lut_gemm_fused,  # noqa: F401
+                               lut_gemm_int8, lut_serving)

@@ -12,11 +12,24 @@ TPU-native translation of the paper's §4 bucket-LUT GEMM (DESIGN.md §2):
   * the dequantized bf16 tile feeds a standard MXU matmul against the
     activation tile; accumulation in f32 scratch across the K grid dimension.
 
-Two entry points:
+Four entry points:
   lut_matmul_f32  — float activations (already smoothed), weights = codebook[codes].
   lut_matmul_int8 — int8 activation indices q (Eq. 11 output) with the activation
                     scale folded in at the end: Y = s_q * (q @ codebook[codes]);
                     bit-identical to the paper's signed bucket accumulation.
+  lut_matmul_fused      — single-pass serving GEMM (DESIGN.md §2): the Eq. 11
+                    input transformation q = clip(round(x · inv_scale)) runs
+                    inside the first pipeline stage of every K-step, so the
+                    smoothed/quantized activation tile lives only in VMEM and
+                    never round-trips HBM (the seed ran smooth-divide,
+                    smooth_quant and the LUT GEMM as three HBM-bound passes).
+  lut_matmul_fused_gemv — decode specialization of the fused kernel for
+                    M < 128 (auto-regressive GEMV): the M grid dimension is
+                    collapsed into a single sublane-aligned block and the grid
+                    becomes N-major (N/bn, K/bk); the Pallas pipeline then
+                    double-buffers the packed-code stream — the only HBM-bound
+                    operand of a decode step — across consecutive grid steps
+                    while the MXU consumes the previous tile.
 
 Block shapes default to MXU-aligned (128 multiples); the K (=d_in) dimension is
 streamed so the VMEM working set is  bm*bk (x) + bk*bn/2 (codes) + bm*bn (acc).
@@ -156,3 +169,149 @@ def lut_matmul_int8(
         interpret=interpret,
     )(q, packed_codes, codebook)
     return (y * act_scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused smooth+quant+LUT serving GEMM (Eq. 11 folded into the K loop)
+# ---------------------------------------------------------------------------
+
+def _transform_tile(x_ref, inv_ref, quantize: bool):
+    """Eq. 11 input transformation on one (bm, bk) VMEM tile.
+
+    quantize=True : q = clip(round(x · inv), ±127) with inv = 1/(s_m·s_q) —
+                    symmetric clip so |q| ≤ 127 (the bucket-table contract,
+                    core/lut.py); q stays f32 in VMEM (values are exact ints).
+    quantize=False: xs = x · inv with inv = 1/s_m — the smoothing divide only,
+                    for uncalibrated tensors (no activation scale known).
+    """
+    x = x_ref[...].astype(jnp.float32)
+    inv = inv_ref[...].astype(jnp.float32)           # (1, bk), broadcasts rows
+    xs = x * inv
+    if quantize:
+        xs = jnp.clip(jnp.round(xs), -127.0, 127.0)
+    return xs
+
+
+def _fused_kernel(x_ref, inv_ref, packed_ref, cb_ref, o_ref, acc_ref, *,
+                  bk: int, bn: int, nsteps: int, quantize: bool, k_axis: int):
+    """One body for both fused variants; K is grid axis `k_axis` (innermost)
+    so acc_ref carries partials. GEMM: grid (M/bm, N/bn, K/bk), k_axis=2.
+    GEMV: grid (N/bn, K/bk), k_axis=1."""
+    ks = pl.program_id(k_axis)
+
+    @pl.when(ks == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xs = _transform_tile(x_ref, inv_ref, quantize)
+    w = _decode_tile(packed_ref, cb_ref[...], bk, bn, jnp.float32)
+    acc_ref[...] += jnp.dot(xs, w, preferred_element_type=jnp.float32)
+
+    @pl.when(ks == nsteps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("quantize", "bm", "bn", "bk", "interpret", "out_dtype")
+)
+def lut_matmul_fused(
+    x: jax.Array,            # (M, K) float — RAW activations (not smoothed)
+    inv_scale: jax.Array,    # (K,) f32 = 1/(s_m·s_q) (quantize) or 1/s_m
+    packed_codes: jax.Array, # (K//2, N) uint8 — packed int4 centroid codes
+    codebook: jax.Array,     # (KC,) f32 — padded with zeros beyond the active K
+    *,
+    quantize: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Y = transform(x) @ codebook[codes], transform fused into every K-step.
+
+    The caller applies the trailing s_q rescale (quantize=True); XLA fuses that
+    scalar multiply into the output copy, so the pipeline is one kernel + one
+    epilogue — no intermediate activation tensor in HBM.
+    """
+    m, k = x.shape
+    k2, n = packed_codes.shape
+    assert k2 * 2 == k, (x.shape, packed_codes.shape)
+    assert inv_scale.shape == (k,) and codebook.shape == (KC,)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples: {(m, k, n)} vs {(bm, bk, bn)}"
+    )
+    nsteps = k // bk
+    grid = (m // bm, n // bn, nsteps)
+    kernel = functools.partial(
+        _fused_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize, k_axis=2
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((1, bk), lambda i, j, s: (0, s)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((KC,), lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, inv_scale[None, :], packed_codes, codebook)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("quantize", "bm", "bn", "bk", "interpret", "out_dtype")
+)
+def lut_matmul_fused_gemv(
+    x: jax.Array,            # (M, K), M = bm < 128 (decode micro-batch, padded to 8)
+    inv_scale: jax.Array,    # (K,) f32
+    packed_codes: jax.Array, # (K//2, N) uint8
+    codebook: jax.Array,     # (KC,) f32
+    *,
+    quantize: bool = True,
+    bm: int = 8,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Decode-specialized fused GEMV: one M block, N-major grid (N/bn, K/bk).
+
+    For M < 128 the general kernel wastes an entire grid dimension and pads M
+    to the MXU tile; here M collapses to a single sublane-aligned block kept
+    resident in VMEM for the whole call while packed codes stream through —
+    the only operand advancing with the grid, which the Pallas pipeline
+    double-buffers (next (s, j) tile DMA overlaps the current tile's
+    decode+FMA) — the memory-bound regime where int4 codes buy the paper's
+    6.2x. Same kernel body as the GEMM variant (k_axis selects the grid axis),
+    so the two stay numerically locked together.
+    """
+    m, k = x.shape
+    k2, n = packed_codes.shape
+    assert m == bm and bm <= 128, (m, bm)
+    assert k2 * 2 == k and inv_scale.shape == (k,) and codebook.shape == (KC,)
+    assert n % bn == 0 and k % bk == 0, (
+        f"pad shapes to block multiples: {(m, k, n)} vs {(bm, bk, bn)}"
+    )
+    nsteps = k // bk
+    grid = (n // bn, nsteps)
+    kernel = functools.partial(
+        _fused_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize, k_axis=1
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, s: (0, s)),
+            pl.BlockSpec((1, bk), lambda j, s: (0, s)),
+            pl.BlockSpec((bk // 2, bn), lambda j, s: (s, j)),
+            pl.BlockSpec((KC,), lambda j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, s: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, inv_scale[None, :], packed_codes, codebook)

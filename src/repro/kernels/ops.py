@@ -1,33 +1,39 @@
-"""Public jit'd wrappers around the Pallas kernels: shape padding, block-size
+"""Public jit'd wrappers around the Pallas kernels: shape padding, block/variant
 selection, CPU fallback.
 
 `clustered_linear(x, ct)` is the serving-path entry the models call: on TPU it
-streams packed int4 codes through lut_matmul; elsewhere (CPU tests, dry-run
-lowering on the host platform) it falls back to the mathematically identical
-gather contraction so the whole framework runs everywhere.
+runs the fused smooth+quant+LUT GEMM (DESIGN.md §2) streaming the tensor's
+first-class packed int4 codes; elsewhere (CPU tests, dry-run lowering on the
+host platform) it falls back to the mathematically identical gather
+contraction so the whole framework runs everywhere. `lut_serving(mode)` forces
+the dispatch — "interpret" runs the real kernels through the Pallas
+interpreter, which is how the CPU CI and `benchmarks/decode_bench.py --smoke`
+exercise the serving engine end-to-end.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.api import ClusteredTensor, clustered_matmul
-from repro.core.lut import pack4
-from repro.kernels import ref
-from repro.kernels.lut_matmul import KC, lut_matmul_f32, lut_matmul_int8
-from repro.kernels.smooth_quant import smooth_quant
+from repro.core.lut import pack4_jax
+from repro.kernels.lut_matmul import (KC, lut_matmul_f32, lut_matmul_fused,
+                                      lut_matmul_fused_gemv, lut_matmul_int8)
 from repro.utils import round_up
 
 
 def _pick_blocks(m: int, k: int, n: int):
     """MXU-aligned blocks sized to keep the VMEM working set under ~8 MiB:
-    bm*bk*4 + bk*bn/2 + bm*bn*4 bytes."""
-    bm = min(128, m) if m % 128 else 128
-    bm = m if m < 128 else 128
+    bm*bk*4 + bk*bn/2 + bm*bn*4 bytes.
+
+    GEMV-aware: decode-shaped calls (m < 128) collapse M into one
+    sublane-aligned block (multiple of 8 for f32) consumed by the N-major
+    fused GEMV kernel instead of padding M up to a full MXU tile."""
+    bm = round_up(m, 8) if m < 128 else 128
     bn = 256 if n % 256 == 0 else 128
     bk = 512 if k % 512 == 0 else 256
     return bm, bn, bk
@@ -89,35 +95,118 @@ def lut_gemm_int8(
     return y[:m0, :n0]
 
 
+@functools.partial(jax.jit, static_argnames=("quantize", "interpret"))
+def lut_gemm_fused(
+    x: jax.Array,            # (M, K) RAW activations (smoothing NOT applied)
+    inv_scale: jax.Array,    # (K,) f32 — Eq. 11 fused multiplier
+    packed_codes: jax.Array, # (ceil(K/2), N) uint8
+    codebook: jax.Array,     # (K_active,) f32
+    act_scale: jax.Array,    # () f32 s_q (pass 1.0 when quantize=False)
+    *,
+    quantize: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-pass serving GEMM: smooth(+quant) fused into the LUT matmul's
+    K loop — no standalone smooth/smooth_quant pass, no intermediate
+    activation tensor in HBM. Decode shapes (M < 128) dispatch to the N-major
+    GEMV variant (DESIGN.md §2 selection table)."""
+    cb = pad_codebook(codebook)
+    m, k = x.shape
+    n = packed_codes.shape[1]
+    if k % 2:  # odd d_in: packed codes carry a zero-padded half-row
+        x = jnp.pad(x, ((0, 0), (0, 1)))
+        inv_scale = jnp.pad(inv_scale, (0, 1))
+        k += 1
+    bm, bn, bk = _pick_blocks(m, k, n)
+    xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn)
+    invp = jnp.pad(inv_scale.astype(jnp.float32), (0, xp.shape[1] - k))
+    if m < 128:
+        y = lut_matmul_fused_gemv(xp, invp, cp, cb, quantize=quantize,
+                                  bm=xp.shape[0], bn=bn, bk=bk,
+                                  interpret=interpret)
+    else:
+        y = lut_matmul_fused(xp, invp, cp, cb, quantize=quantize,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = y[:m0, :n0]
+    return y * act_scale if quantize else y
+
+
+# ---------------------------------------------------------------------------
+# Serving dispatch
+# ---------------------------------------------------------------------------
+
+_FORCED_MODE: Optional[str] = None  # None | "kernel" | "interpret" | "ref"
+
+
+@contextlib.contextmanager
+def lut_serving(mode: Optional[str]):
+    """Force how clustered_linear dispatches inside the context:
+
+      "kernel"    — compiled Pallas fused path (TPU)
+      "interpret" — same kernels through the Pallas interpreter (CPU CI /
+                    decode_bench --smoke: real kernel code, no TPU required)
+      "ref"       — gather contraction (trainable, runs anywhere)
+      None        — auto: kernel on TPU backends, ref elsewhere
+    """
+    global _FORCED_MODE
+    prev, _FORCED_MODE = _FORCED_MODE, mode
+    try:
+        yield
+    finally:
+        _FORCED_MODE = prev
+
+
+def packed_view(ct: ClusteredTensor) -> jax.Array:
+    """The tensor's packed int4 codes, without any host round-trip.
+
+    Preference order: the first-class `packed` field (computed once at
+    compress time — this replaced an id-keyed host-side cache that synced the
+    device every call and could alias a freed array's id); codes already
+    stored packed (abstract/materialized serving trees); else a device-side
+    repack traced into the caller's jit.
+    """
+    if ct.packed is not None:
+        return ct.packed
+    d_in = ct.smooth.shape[-1]
+    if ct.codes.shape[-2] * 2 == d_in + (d_in % 2):
+        return ct.codes.astype(jnp.uint8)     # stored packed already
+    return pack4_jax(ct.codes)
+
+
+def _transform_params(ct: ClusteredTensor):
+    """(inv_scale, act_scale, quantize) for the fused kernel — precomputed
+    fields when present, else derived from the smoothing vector alone."""
+    quantize = ct.act_scale is not None
+    if ct.inv_scale is not None:
+        inv = ct.inv_scale
+    else:
+        inv = 1.0 / ct.smooth
+        if quantize:
+            inv = inv / ct.act_scale
+    act = ct.act_scale if quantize else jnp.float32(1.0)
+    return inv.astype(jnp.float32), act, quantize
+
+
 def clustered_linear(
     x: jax.Array,
     ct: ClusteredTensor,
     *,
     use_kernel: Optional[bool] = None,
 ) -> jax.Array:
-    """Model-facing clustered matmul. use_kernel=None auto-selects: the Pallas
-    path on TPU backends, the gather contraction elsewhere (identical numerics)."""
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if not use_kernel:
+    """Model-facing clustered matmul. use_kernel=None auto-selects (see
+    lut_serving): the fused Pallas path on TPU backends, the gather
+    contraction elsewhere (identical numerics)."""
+    mode = _FORCED_MODE
+    if use_kernel is not None:
+        mode = "kernel" if use_kernel else "ref"
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref" or ct.codebook.ndim != 1:
+        # stacked/expert codebooks take the gather path (vmapped in models)
         return clustered_matmul(x, ct)
-    xs = x / ct.smooth.astype(x.dtype)
-    lead = xs.shape[:-1]
-    x2 = xs.reshape(-1, xs.shape[-1])
-    packed = pack_codes(ct)
-    y = lut_gemm(x2, packed, ct.codebook, interpret=False)
+    inv, act, quantize = _transform_params(ct)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = lut_gemm_fused(x2, inv, packed_view(ct), ct.codebook, act,
+                       quantize=quantize, interpret=(mode == "interpret"))
     return y.reshape(*lead, -1).astype(x.dtype)
-
-
-@functools.cache
-def _pack_cache():
-    return {}
-
-
-def pack_codes(ct: ClusteredTensor) -> jax.Array:
-    """Pack a ClusteredTensor's int8 codes to int4 pairs (host-side, cached by id)."""
-    cache = _pack_cache()
-    key = id(ct.codes)
-    if key not in cache:
-        cache[key] = jnp.asarray(pack4(np.asarray(jax.device_get(ct.codes)).astype(np.uint8)))
-    return cache[key]

@@ -36,6 +36,28 @@ def lut_matmul_int8_ref(
     return (q.astype(jnp.float32) @ w) * act_scale
 
 
+def lut_matmul_fused_ref(
+    x: jax.Array,           # (M, K) raw activations
+    inv_scale: jax.Array,   # (K,) = 1/(s_m·s_q)  (or 1/s_m when quantize=False)
+    packed_codes: jax.Array,
+    codebook: jax.Array,
+    act_scale: jax.Array,   # scalar s_q (ignored when quantize=False)
+    *,
+    quantize: bool = True,
+) -> jax.Array:
+    """Oracle for the fused serving GEMM: Eq. 11 transform (symmetric clip,
+    |q| ≤ 127 — the bucket-table contract in core/lut.py) composed with the
+    gather-dequant contraction `lut_matmul_dequant_ref`."""
+    k = x.shape[-1]
+    codes = unpack4(packed_codes, k)
+    xs = x.astype(jnp.float32) * inv_scale
+    if not quantize:
+        return xs @ codebook[codes]
+    q = jnp.clip(jnp.round(xs), -127, 127).astype(jnp.int8)
+    from repro.core.lut import lut_matmul_dequant_ref
+    return lut_matmul_dequant_ref(q, codes, codebook, act_scale)
+
+
 def smooth_quant_ref(x: jax.Array, inv_scale: jax.Array, bits: int = 8) -> jax.Array:
     qmin = -(2.0 ** (bits - 1))
     qmax = 2.0 ** (bits - 1) - 1

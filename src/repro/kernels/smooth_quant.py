@@ -5,6 +5,11 @@ precomputed per input channel — the paper's observation that smoothing and
 quantization collapse into a single multiply. Pure element-wise VPU work,
 blocked over (rows, channels) so the per-channel scale vector tiles along the
 channel dimension only.
+
+NOTE: this standalone kernel is no longer on the serving path — the transform
+runs fused inside the LUT GEMM's K loop (lut_matmul.lut_matmul_fused,
+DESIGN.md §2) so q never round-trips HBM. It remains the reference/calibration
+tool (per-tensor scale sweeps, activation histograms).
 """
 from __future__ import annotations
 

@@ -1,17 +1,30 @@
-"""Serving driver: batched autoregressive decode, FP16/bf16 or LCD-clustered.
+"""Serving driver: scan-compiled batched autoregressive decode, FP16/bf16 or
+LCD-clustered.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --lcd --tokens 32 --batch 4
 
-The LCD path runs the paper's §4 pipeline end-to-end: weights as centroid
-codes + codebooks (ClusteredTensor), activations smoothed, matmuls through the
-clustered path (gather contraction on CPU, lut_matmul Pallas kernel on TPU).
+The engine traces exactly TWO computations per generation (DESIGN.md §2):
+
+  1. prefill — ONE batched call embeds/attends/caches the whole prompt
+     (the seed fed the prompt token-by-token through the decode step);
+  2. decode  — ONE jit containing a lax.scan over the generated tokens, with
+     the KV cache donated into the loop so XLA updates it in place instead of
+     allocating a fresh (L, B, S, KV, D) buffer per token. The seed dispatched
+     one jitted step per token from a Python loop — per-token dispatch + cache
+     copy overhead that dominated decode wall time at small batch.
+
+The LCD path runs the paper's §4 pipeline end-to-end: weights as packed int4
+centroid codes + codebooks (ClusteredTensor), and every projection through the
+fused smooth+quant+LUT GEMM (gather contraction on CPU, Pallas kernels on TPU
+or under kernels.ops.lut_serving("interpret")).
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
+from functools import partial
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +38,50 @@ from repro.models.registry import get_model
 from repro.utils import human_bytes, logger, tree_size_bytes
 
 
+def build_decode_fns(model, cfg, gen_tokens: int):
+    """(prefill_fn, decode_fn, trace_counts): the engine's two traced
+    computations. trace_counts is mutated at TRACE time (a Python side effect
+    inside the jitted functions), so after a full generation it records how
+    many computations were actually compiled — asserted to be {1, 1} by
+    benchmarks/decode_bench.py and tests/test_decode_engine.py."""
+    traces = {"prefill": 0, "decode": 0}
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def prefill(params, cache, prompt):
+        traces["prefill"] += 1
+        logits, cache = model.decode(
+            params, cache, {"tokens": prompt, "pos": jnp.asarray(0, jnp.int32)})
+        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
+        return tok.astype(jnp.int32), cache
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode(params, cache, first_tok):
+        traces["decode"] += 1
+
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = model.decode(
+                params, cache, {"tokens": tok, "pos": cache["pos"]})
+            nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
+            return (nxt.astype(jnp.int32), cache), tok[:, 0]
+
+        (_, cache), toks = jax.lax.scan(
+            body, (first_tok, cache), None, length=gen_tokens)
+        return toks.swapaxes(0, 1), cache       # (B, gen_tokens)
+
+    return prefill, decode, traces
+
+
 def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
           target_centroids: int = 8, batch: int = 4, prompt_len: int = 16,
-          gen_tokens: int = 32, seed: int = 0, params=None, greedy=True):
+          gen_tokens: int = 32, seed: int = 0, params=None, greedy=True,
+          stats: Optional[Dict[str, Any]] = None):
+    """Generate `gen_tokens` per sequence; returns (tokens (B, gen), params).
+
+    Pass a dict as `stats` to receive timing/trace telemetry (tokens/s,
+    prefill/decode wall time, trace counts) — benchmarks/decode_bench.py uses
+    it to track the serving-speedup trajectory.
+    """
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
@@ -38,13 +92,14 @@ def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
         if params is None:
             params = model.init(jax.random.key(seed))
         dense_bytes = tree_size_bytes(params)
-        if lcd:
+        if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
+                params, is_leaf=is_clustered)):
             params, report = compress_model(params,
                                             target_centroids=target_centroids)
             logger.info("LCD: " + report.summary())
             logger.info(f"weights: {human_bytes(dense_bytes)} dense -> "
                         f"{human_bytes(tree_size_bytes(params))} clustered "
-                        f"(int8 codes; packed int4 halves again)")
+                        f"(packed int4 codes first-class)")
 
         max_seq = prompt_len + gen_tokens
         cache = model.init_cache(batch, max_seq)
@@ -52,23 +107,26 @@ def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
         prompt = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
                              jnp.int32)
 
-        decode = jax.jit(lambda p, c, b: model.decode(p, c, b))
-        # prefill token-by-token (exercises the decode path throughout)
-        tok = prompt[:, :1]
+        prefill, decode, traces = build_decode_fns(model, cfg, gen_tokens)
+
         t0 = time.perf_counter()
-        out_tokens = []
-        for i in range(max_seq - 1):
-            logits, cache = decode(params, cache,
-                                   {"tokens": tok, "pos": jnp.asarray(i)})
-            nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
-            tok = prompt[:, i + 1:i + 2] if i + 1 < prompt_len else nxt.astype(jnp.int32)
-            if i + 1 >= prompt_len:
-                out_tokens.append(np.asarray(tok[:, 0]))
-        dt = time.perf_counter() - t0
-        gen = np.stack(out_tokens, axis=1) if out_tokens else np.zeros((batch, 0))
+        first_tok, cache = prefill(params, cache, prompt)
+        jax.block_until_ready(first_tok)
+        t1 = time.perf_counter()
+        gen, cache = decode(params, cache, first_tok)
+        gen = np.asarray(jax.block_until_ready(gen))
+        t2 = time.perf_counter()
+
+        dt = t2 - t0
+        tok_s = gen.shape[1] * batch / max(t2 - t1, 1e-9)
         logger.info(f"{arch}{' +LCD' if lcd else ''}: generated "
                     f"{gen.shape[1]} tokens x {batch} seqs in {dt:.2f}s "
-                    f"({gen.shape[1] * batch / max(dt, 1e-9):.1f} tok/s CPU)")
+                    f"(prefill {t1 - t0:.2f}s, decode {t2 - t1:.2f}s, "
+                    f"{tok_s:.1f} tok/s) — traces: {traces}")
+        if stats is not None:
+            stats.update(tokens_per_s=tok_s, prefill_s=t1 - t0,
+                         decode_s=t2 - t1, total_s=dt, traces=dict(traces),
+                         gen_tokens=int(gen.shape[1]), batch=batch)
         return gen, params
 
 

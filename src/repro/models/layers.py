@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import (ClusteredTensor, clustered_matmul,
-                            clustered_dequant, is_clustered, _unpack_codes)
+from repro.core.api import ClusteredTensor, is_clustered, _unpack_codes
 from repro.distributed.sharding import maybe_shard
 from repro.models.config import ModelConfig
 
@@ -48,9 +47,15 @@ def resolve_weight(w, dtype) -> jax.Array:
 
 def linear(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
     """Dense projection. `w` may be a plain array or an LCD ClusteredTensor —
-    the paper's technique is first-class: any projection can serve clustered."""
+    the paper's technique is first-class: any projection can serve clustered.
+
+    Clustered weights dispatch through kernels.ops.clustered_linear: the fused
+    smooth+quant+LUT Pallas GEMM on TPU (or under lut_serving("interpret")),
+    the trainable gather contraction elsewhere — so this one entry point
+    covers training, CPU CI, and the serving engine (DESIGN.md §2)."""
     if is_clustered(w):
-        y = clustered_matmul(x, w, dtype=x.dtype)
+        from repro.kernels.ops import clustered_linear
+        y = clustered_linear(x, w)
     else:
         y = x @ w.astype(x.dtype)
     if b is not None:

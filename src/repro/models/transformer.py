@@ -214,12 +214,17 @@ CACHE_NAMES = {"k": "layers,batch,seq_kv,kv,.", "v": "layers,batch,seq_kv,kv,.",
 def decode_step(
     params: Dict[str, Any],
     cache: Dict[str, Any],
-    tokens: jax.Array,            # (B, 1)
+    tokens: jax.Array,            # (B, S) — S=1 decode, S=prompt_len prefill
     pos: jax.Array,               # scalar int32 — current length
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decode step for the whole stack. Cache layout (L, B, S, KV, D) scans
-    with the layer parameters; each layer updates its slice in place."""
+    with the layer parameters; each layer updates its slice in place.
+
+    S > 1 is the batched-prefill path of the serving engine (launch/serve.py):
+    the whole prompt is embedded, attended and cached in ONE traced
+    computation — the cache advances by S and the returned logits are for the
+    last prompt token."""
     x = params["embed"].astype(cfg.jnp_dtype)[tokens]          # (B, 1, d)
     windows = jnp.asarray(layer_windows(cfg))
 
@@ -256,7 +261,7 @@ def decode_step(
     if cfg.final_softcap:
         logits = (cfg.final_softcap * jnp.tanh(
             logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
-    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    new_cache = {"k": ks, "v": vs, "pos": pos + tokens.shape[-1]}
     if int8_kv:
         new_cache["k_scale"], new_cache["v_scale"] = kss, vss
     return logits[:, -1], new_cache

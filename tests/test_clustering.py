@@ -3,6 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# property tests below are hypothesis-driven; absent the module, skip this
+# file cleanly instead of erroring the whole suite at collection
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import clustering as C

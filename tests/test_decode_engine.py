@@ -1,0 +1,178 @@
+"""Serving-engine tests: scan-compiled decode loop (one prefill + one scan),
+batched prefill consistency, and the fused serving path end-to-end through a
+real model (Pallas interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import compress_model, is_clustered
+from repro.kernels.ops import clustered_linear, lut_serving
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(arch_id="tiny-serve", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=256, head_dim=16, dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+class TestBatchedPrefill:
+    def test_prefill_matches_token_by_token(self, tiny):
+        """ONE decode call over the whole prompt == the seed's per-token loop:
+        same final logits, same cache contents, cache pos advanced by S."""
+        cfg, model, params = tiny
+        b, p, max_seq = 2, 7, 16
+        toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab,
+                                                             (b, p)), jnp.int32)
+        cache0 = model.init_cache(b, max_seq)
+        logits_batched, cache_b = model.decode(
+            params, cache0, {"tokens": toks, "pos": jnp.asarray(0, jnp.int32)})
+
+        cache = model.init_cache(b, max_seq)
+        for i in range(p):
+            logits_seq, cache = model.decode(
+                params, cache, {"tokens": toks[:, i:i + 1],
+                                "pos": jnp.asarray(i, jnp.int32)})
+
+        assert int(cache_b["pos"]) == p == int(cache["pos"])
+        np.testing.assert_allclose(np.asarray(logits_batched),
+                                   np.asarray(logits_seq), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(cache_b["k"]),
+                                   np.asarray(cache["k"]), rtol=2e-4, atol=2e-4)
+
+
+class TestScanDecodeEngine:
+    def _generate(self, model, cfg, params, b=2, p=6, gen=5):
+        from repro.launch.serve import build_decode_fns
+        prefill, decode, traces = build_decode_fns(model, cfg, gen)
+        cache = model.init_cache(b, p + gen)
+        prompt = jnp.asarray(np.random.default_rng(1).integers(
+            0, cfg.vocab, (b, p)), jnp.int32)
+        tok, cache = prefill(params, cache, prompt)
+        out, cache = decode(params, cache, tok)
+        return np.asarray(out), traces, prompt
+
+    def test_exactly_two_traced_computations(self, tiny):
+        """The whole generation compiles ONE prefill and ONE scan — not one
+        dispatch per token (the engine's headline invariant)."""
+        cfg, model, params = tiny
+        out, traces, _ = self._generate(model, cfg, params)
+        assert out.shape == (2, 5)
+        assert traces == {"prefill": 1, "decode": 1}
+
+    def test_scan_matches_python_loop(self, tiny):
+        """Token parity with the seed's per-token greedy loop."""
+        cfg, model, params = tiny
+        b, p, gen = 2, 6, 5
+        out, _, prompt = self._generate(model, cfg, params, b, p, gen)
+
+        cache = model.init_cache(b, p + gen)
+        tok = prompt[:, :1]
+        ref_toks = []
+        for i in range(p + gen - 1):
+            logits, cache = model.decode(
+                params, cache, {"tokens": tok, "pos": jnp.asarray(i, jnp.int32)})
+            nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
+            tok = (prompt[:, i + 1:i + 2] if i + 1 < p
+                   else nxt.astype(jnp.int32))
+            if i + 1 >= p:
+                ref_toks.append(np.asarray(tok[:, 0]))
+        np.testing.assert_array_equal(out, np.stack(ref_toks, axis=1))
+
+    def test_lcd_fused_serving_matches_ref(self, tiny):
+        """Full generation through the fused Pallas kernels (interpret mode)
+        == the gather-contraction serving path, token for token — i.e. no
+        standalone smooth/quant pass is needed anywhere on the serving path."""
+        cfg, model, params = tiny
+        cparams, _ = compress_model(params, target_centroids=8)
+        out_ref, traces_ref, _ = self._generate(model, cfg, cparams, gen=3)
+        with lut_serving("interpret"):
+            out_kernel, traces_k, _ = self._generate(model, cfg, cparams, gen=3)
+        np.testing.assert_array_equal(out_ref, out_kernel)
+        assert traces_k == {"prefill": 1, "decode": 1}
+
+
+class TestPackedFirstClass:
+    def test_compress_roundtrips_packed_codes(self, tiny):
+        """compress_model emits packed int4 codes as a FIELD of every
+        ClusteredTensor (no host-side id-keyed cache): unpacking them must
+        reproduce the int8 codes exactly, and the Eq. 11 inv_scale must equal
+        1/(s_m·s_q)."""
+        from repro.core.lut import unpack4
+        cfg, model, params = tiny
+        cparams, _ = compress_model(params, target_centroids=8)
+        cts = [l for l in jax.tree_util.tree_leaves(
+            cparams, is_leaf=is_clustered) if is_clustered(l)]
+        assert cts, "tiny model must have clustered tensors"
+        for ct in cts:
+            assert ct.packed is not None and ct.packed.dtype == jnp.uint8
+            d_in = ct.smooth.shape[-1]
+            if ct.codes.ndim == 2:
+                np.testing.assert_array_equal(
+                    np.asarray(unpack4(ct.packed, d_in)),
+                    np.asarray(ct.codes.astype(jnp.int32)))
+            else:  # stacked layers: packed per slice along the L axis
+                for l in range(ct.codes.shape[0]):
+                    np.testing.assert_array_equal(
+                        np.asarray(unpack4(ct.packed[l], d_in)),
+                        np.asarray(ct.codes[l].astype(jnp.int32)))
+            sq = 1.0 if ct.act_scale is None else np.asarray(ct.act_scale)
+            np.testing.assert_allclose(
+                np.asarray(ct.inv_scale),
+                1.0 / (np.asarray(ct.smooth) * sq), rtol=1e-6)
+
+    def test_no_host_pack_cache(self):
+        """The id-keyed host cache is gone; packing is a compress-time field
+        plus a traceable device-side fallback."""
+        import repro.kernels.ops as ops
+        assert not hasattr(ops, "_pack_cache")
+        assert not hasattr(ops, "pack_codes")
+
+    def test_clustered_linear_kernel_parity_uncalibrated(self):
+        """Uncalibrated tensor (act_scale=None): the fused float variant ==
+        the gather contraction exactly (smoothing folded, no quantization)."""
+        rng = np.random.default_rng(2)
+        w = rng.normal(0, 0.05, (64, 96)).astype(np.float32)
+        cparams, _ = compress_model({"proj": {"w_up": w}}, target_centroids=8)
+        ct = cparams["proj"]["w_up"]
+        assert is_clustered(ct) and ct.act_scale is None
+        x = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+        y_ref = clustered_linear(x, ct, use_kernel=False)
+        with lut_serving("interpret"):
+            y_kernel = clustered_linear(x, ct)
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_clustered_linear_kernel_parity_calibrated(self):
+        """Calibrated tensor (smooth_amax given → s_q carried): the fused
+        int8 Eq. 11 path == the fused oracle; and it stays within activation-
+        quantization error of the float gather contraction."""
+        from repro.kernels.ref import lut_matmul_fused_ref
+        rng = np.random.default_rng(3)
+        w = rng.normal(0, 0.05, (64, 96)).astype(np.float32)
+        amax = (np.abs(rng.normal(0, 1, 64)) + 0.5).astype(np.float32)
+        cparams, _ = compress_model(
+            {"proj": {"w_up": w}}, target_centroids=8,
+            smooth_amax={"['proj']['w_up']": amax})
+        ct = cparams["proj"]["w_up"]
+        assert is_clustered(ct) and ct.act_scale is not None
+        x = jnp.asarray((rng.normal(size=(3, 64)) * amax * 0.5)
+                        .astype(np.float32))
+        with lut_serving("interpret"):
+            y_kernel = clustered_linear(x, ct)
+        y_oracle = lut_matmul_fused_ref(x, ct.inv_scale, ct.packed,
+                                        jnp.pad(ct.codebook,
+                                                (0, 16 - ct.codebook.shape[0])),
+                                        ct.act_scale)
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_oracle),
+                                   rtol=1e-5, atol=1e-4)
+        y_float = np.asarray(clustered_linear(x, ct, use_kernel=False))
+        rel = (np.linalg.norm(np.asarray(y_kernel) - y_float)
+               / max(np.linalg.norm(y_float), 1e-9))
+        assert rel < 0.05, rel

@@ -5,10 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.lut import pack4
+from repro.core.lut import lut_matmul_dequant_ref, pack4, unpack4
 from repro.kernels import ref
-from repro.kernels.lut_matmul import lut_matmul_f32, lut_matmul_int8
-from repro.kernels.ops import lut_gemm, lut_gemm_int8, pad_codebook
+from repro.kernels.lut_matmul import (lut_matmul_f32, lut_matmul_fused,
+                                      lut_matmul_fused_gemv, lut_matmul_int8)
+from repro.kernels.ops import (_pick_blocks, lut_gemm, lut_gemm_fused,
+                               lut_gemm_int8, pad_codebook)
 from repro.kernels.smooth_quant import smooth_quant
 
 
@@ -90,6 +92,89 @@ class TestLutMatmulInt8:
                                  jnp.asarray(cb), s)
         np.testing.assert_allclose(np.asarray(y_bucket), np.asarray(y_kernel),
                                    rtol=1e-5, atol=1e-4)
+
+
+class TestLutMatmulFused:
+    """Single-pass smooth+quant+LUT serving GEMM vs the gather-dequant oracle
+    (lut_matmul_dequant_ref), across ragged decode shapes: M ∈ {1, 3, 8} and
+    K/N NOT multiples of the kernel block sizes."""
+
+    def _mk(self, m, k, n, n_cents=11, seed=0):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 2, size=(m, k)).astype(np.float32))
+        k_even = k + (k % 2)
+        codes = rng.integers(0, n_cents, size=(k_even, n)).astype(np.uint8)
+        codes[k:] = 0
+        cb = np.sort(rng.normal(0, 0.05, n_cents)).astype(np.float32)
+        s = (np.abs(rng.normal(1, 0.2, k)) + 0.5).astype(np.float32)
+        sq = float(np.abs(x).max() / 127.0)
+        inv = jnp.asarray((1.0 / (s * sq)).astype(np.float32))
+        return x, codes, jnp.asarray(cb), jnp.asarray(s), inv, jnp.float32(sq)
+
+    def _oracle(self, x, codes, cb, inv, sq, k):
+        """Eq. 11 transform (symmetric clip) + gather-dequant contraction."""
+        xp = jnp.pad(x, ((0, 0), (0, codes.shape[0] - k)))
+        invp = jnp.pad(inv, (0, codes.shape[0] - k))
+        q = jnp.clip(jnp.round(xp * invp), -127, 127).astype(jnp.int8)
+        return lut_matmul_dequant_ref(q, jnp.asarray(codes.astype(np.int32)),
+                                      cb, sq)
+
+    @pytest.mark.parametrize("m", [1, 3, 8])
+    @pytest.mark.parametrize("k,n", [(300, 190), (130, 17), (257, 100)])
+    def test_quantized_matches_dequant_oracle(self, m, k, n):
+        x, codes, cb, s, inv, sq = self._mk(m, k, n, seed=m * k + n)
+        y = lut_gemm_fused(x, inv, jnp.asarray(pack4(codes)), cb, sq,
+                           quantize=True, interpret=True)
+        y_ref = self._oracle(x, codes, cb, inv, sq, k)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [(128, 300, 190), (200, 512, 384)])
+    def test_gemm_variant_matches_oracle(self, m, k, n):
+        """M ≥ 128 dispatches the 3-D-grid kernel; same numerics."""
+        x, codes, cb, s, inv, sq = self._mk(m, k, n, seed=m + n)
+        y = lut_gemm_fused(x, inv, jnp.asarray(pack4(codes)), cb, sq,
+                           quantize=True, interpret=True)
+        y_ref = self._oracle(x, codes, cb, inv, sq, k)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m", [1, 3, 8])
+    def test_float_variant_smooth_only(self, m):
+        """quantize=False: the smoothing divide alone is fused (uncalibrated
+        tensors) — equals (x/s) @ codebook[codes]."""
+        k, n = 300, 190
+        x, codes, cb, s, inv, sq = self._mk(m, k, n, seed=m)
+        y = lut_gemm_fused(x, 1.0 / s, jnp.asarray(pack4(codes)), cb,
+                           jnp.float32(1.0), quantize=False, interpret=True)
+        w = np.asarray(cb)[codes[:k]]
+        y_ref = (np.asarray(x) / np.asarray(s)) @ w
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-5, atol=1e-4)
+
+    def test_gemv_equals_gemm_kernel(self):
+        """The N-major GEMV and the 3-D-grid kernel agree on the same blocks."""
+        rng = np.random.default_rng(0)
+        m, k, n = 8, 512, 256
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        inv = jnp.asarray((np.abs(rng.normal(1, 0.1, k)) + 1).astype(np.float32))
+        codes = rng.integers(0, 16, size=(k, n)).astype(np.uint8)
+        cb = jnp.asarray(np.sort(rng.normal(0, 0.05, 16)).astype(np.float32))
+        packed = jnp.asarray(pack4(codes))
+        a = lut_matmul_fused_gemv(x, inv, packed, cb, quantize=True,
+                                  bm=8, bn=128, bk=256, interpret=True)
+        b = lut_matmul_fused(x, inv, packed, cb, quantize=True,
+                             bm=8, bn=128, bk=256, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_pick_blocks_gemv_aware(self):
+        """Regression for the dead first assignment in _pick_blocks: decode
+        shapes get a sublane-aligned (multiple of 8) single M block."""
+        for m in (1, 3, 8, 70, 127):
+            bm, bn, bk = _pick_blocks(m, 4096, 4096)
+            assert bm % 8 == 0 and bm >= m and bm <= 128, (m, bm)
+        assert _pick_blocks(128, 4096, 4096)[0] == 128
+        assert _pick_blocks(1000, 4096, 4096)[0] == 128
 
 
 class TestOpsWrappers:

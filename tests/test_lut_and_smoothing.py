@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # only the property test needs hypothesis; keep the rest collectable
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import clustering as C
 from repro.core.lut import (build_lut_layer, lut_forward, lut_matmul_dequant_ref,
@@ -61,13 +66,23 @@ class TestSmoothing:
 
 
 class TestPacking:
-    @settings(max_examples=20, deadline=None)
-    @given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 32))
-    def test_prop_pack_unpack_roundtrip(self, seed, k, n):
-        codes = np.random.default_rng(seed).integers(
-            0, 16, size=(2 * k, n)).astype(np.uint8)
-        up = np.asarray(unpack4(jnp.asarray(pack4(codes)), 2 * k))
-        np.testing.assert_array_equal(up, codes)
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=20, deadline=None)
+        @given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 32))
+        def test_prop_pack_unpack_roundtrip(self, seed, k, n):
+            codes = np.random.default_rng(seed).integers(
+                0, 16, size=(2 * k, n)).astype(np.uint8)
+            up = np.asarray(unpack4(jnp.asarray(pack4(codes)), 2 * k))
+            np.testing.assert_array_equal(up, codes)
+
+    def test_pack4_jax_matches_host_pack(self):
+        """Device-side fallback pack == the host pack, odd d_in included."""
+        from repro.core.lut import pack4_jax
+        for k, n in [(6, 5), (7, 3), (128, 16)]:
+            codes = np.random.default_rng(k).integers(
+                0, 16, size=(k, n)).astype(np.uint8)
+            np.testing.assert_array_equal(
+                np.asarray(pack4_jax(jnp.asarray(codes))), pack4(codes))
 
     def test_odd_rows_padded(self):
         codes = np.arange(15, dtype=np.uint8).reshape(5, 3) % 16
@@ -113,3 +128,34 @@ class TestLUTInference:
         cb = jnp.asarray(np.array([0.5, 0, 0, 0, 0, 0, 0, 0], np.float32))
         y = lut_matmul_ref(q, codes, cb, jnp.float32(1.0))
         assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_symmetric_table_contract(self):
+        """The documented contract (core/lut.py): the bucket table holds only
+        |q| ≤ 127, so q = −128 saturates to the −127 row — identical output to
+        q = −127, and one LSB (s_q·c_k per entry) away from the dequant form
+        which uses q verbatim."""
+        codes = jnp.asarray(np.zeros((8, 4), np.int32))
+        cb = jnp.asarray(np.array([0.5, 0, 0, 0, 0, 0, 0, 0], np.float32))
+        s = jnp.float32(1.0)
+        y_sat = lut_matmul_ref(jnp.full((4, 8), -128, jnp.int8), codes, cb, s)
+        y_127 = lut_matmul_ref(jnp.full((4, 8), -127, jnp.int8), codes, cb, s)
+        np.testing.assert_array_equal(np.asarray(y_sat), np.asarray(y_127))
+        # dequant form does NOT saturate: differs by exactly d_in * s_q * c_0
+        y_deq = lut_matmul_dequant_ref(
+            jnp.full((4, 8), -128, jnp.int8), codes, cb, s)
+        np.testing.assert_allclose(np.asarray(y_deq - y_sat), -8 * 0.5,
+                                   rtol=0, atol=1e-6)
+
+    def test_fused_transform_never_emits_minus_128(self):
+        """The serving kernel's Eq. 11 transform clips symmetrically, so the
+        saturating case never reaches the table (DESIGN.md §2)."""
+        from repro.kernels.ref import lut_matmul_fused_ref
+        x = jnp.asarray(np.full((4, 8), -1e9, np.float32))   # drives q to min
+        inv = jnp.ones((8,), jnp.float32)
+        codes = np.zeros((8, 4), np.uint8)
+        cb = jnp.asarray(np.array([0.5] + [0.0] * 15, np.float32))
+        y = lut_matmul_fused_ref(x, inv, jnp.asarray(pack4(codes)), cb,
+                                 jnp.float32(1.0))
+        # 8 channels * clip(q)=-127 * c0=0.5  (would be -512 with q=-128)
+        np.testing.assert_allclose(np.asarray(y), -127.0 * 8 * 0.5,
+                                   rtol=0, atol=1e-4)
