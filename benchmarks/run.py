@@ -12,7 +12,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single suite: "
-                         "table1|table2|table3|figs|kernel|roofline|decode")
+                         "table1|table2|table3|figs|kernel|roofline|decode|"
+                         "serving")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="decode suite: reduced config, few tokens, CPU/"
                          "interpret friendly (default; --no-smoke for full)")
@@ -20,8 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (decode_bench, fig_benchmarks, kernel_bench,
-                            roofline, table1_clustering, table2_baselines,
-                            table3_smoothing)
+                            roofline, serving_bench, table1_clustering,
+                            table2_baselines, table3_smoothing)
 
     suites = {
         "table1": table1_clustering.run,
@@ -30,9 +31,14 @@ def main() -> None:
         "figs": fig_benchmarks.run,
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
-        # serving-engine perf (tokens/s + per-layer fused kernel timings);
-        # emits BENCH_decode.json on every run so the trajectory is tracked
+        # static-batch serving perf (tokens/s + per-layer fused kernel
+        # timings); emits BENCH_decode.json so the trajectory is tracked
         "decode": lambda: decode_bench.run(smoke=args.smoke),
+        # continuous-batching engine under Poisson traffic (paged KV cache,
+        # per-request latency percentiles); emits BENCH_serving.json and in
+        # --smoke mode asserts single-request parity — the documented
+        # pre-merge smoke gate (README)
+        "serving": lambda: serving_bench.run(smoke=args.smoke),
     }
     print("name,us_per_call,derived")
     todo = [args.only] if args.only else list(suites)

@@ -1,0 +1,169 @@
+"""Continuous-batching serving benchmark: the paged engine under Poisson
+traffic, dense vs LCD (DESIGN.md §5).
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke
+
+Measures what the static decode benchmark cannot — multi-tenant behavior:
+
+  * aggregate generated tokens/s with requests that arrive, prefill, decode
+    and finish at different times (Poisson inter-arrivals, mixed prompt
+    lengths), for the dense and the LCD fused serving paths;
+  * per-request latency: p50/p99 of submit -> finish and submit -> first
+    token, the numbers a "millions of users" deployment is judged on;
+  * the engine contracts, asserted on every run: a bounded set of compiled
+    step shapes (at most two), and — with >= 4 staggered requests — every
+    request's tokens EXACTLY equal to a single-request run of its prompt
+    (continuous batching must never change anyone's output).
+
+--smoke runs a reduced config through the Pallas interpreter for the LCD row —
+CPU-runnable on every CI pass (wall times there are correctness telemetry,
+not perf claims; on TPU the same harness reports real time). Results land in
+BENCH_serving.json so the trajectory is tracked PR over PR.
+"""
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.ops import lut_serving
+from repro.launch.engine import EngineConfig, ServingEngine, build_engine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+
+def _poisson_workload(rng, n_requests: int, max_prompt: int, gen_tokens: int,
+                      mean_gap_steps: float):
+    """(arrival_step, prompt, gen) per request: exponential inter-arrivals
+    quantized to scheduler steps, mixed prompt lengths."""
+    t, out = 0.0, []
+    for _ in range(n_requests):
+        t += rng.exponential(mean_gap_steps)
+        p_len = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
+        out.append((int(t), p_len, gen_tokens))
+    return out
+
+
+def _run_traffic(engine: ServingEngine, workload, vocab: int, seed: int):
+    """Drive the engine step-by-step, submitting each request when the step
+    counter passes its arrival step. Returns the finished Request list."""
+    rng = np.random.default_rng(seed)
+    pending = [(arr, rng.integers(0, vocab, p), g) for arr, p, g in workload]
+    reqs = []
+    while pending or engine.busy:
+        while pending and pending[0][0] <= engine.steps:
+            _, prompt, g = pending.pop(0)
+            reqs.append(engine.submit(prompt, g))
+        if engine.busy:
+            engine.step()
+        else:
+            engine.steps += 1          # idle tick: let the next arrival land
+    engine.assert_bounded_traces()
+    return reqs
+
+
+def _percentiles(xs):
+    return {"p50": round(float(np.percentile(xs, 50)), 4),
+            "p99": round(float(np.percentile(xs, 99)), 4)}
+
+
+def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
+               workload, seed: int, params, verify: bool):
+    engine, params = build_engine(arch, use_reduced=smoke, lcd=lcd,
+                                  ecfg=ecfg, params=params)
+    cfg = engine.model.cfg
+    t0 = engine.clock()
+    reqs = _run_traffic(engine, workload, cfg.vocab, seed)
+    wall = engine.clock() - t0
+    gen_total = sum(len(r.out_tokens) for r in reqs)
+    lat = [r.finish_t - r.submit_t for r in reqs]
+    ttft = [r.first_token_t - r.submit_t for r in reqs]
+
+    if verify:
+        # continuous batching must not change any request's output: re-decode
+        # each prompt ALONE and compare exactly. One solo engine serves all
+        # the re-runs sequentially (slots/blocks fully recycle between them,
+        # stale cache contents are masked by lengths), so the check costs two
+        # compiles total instead of two per request.
+        solo_eng = ServingEngine(engine.model, params, ecfg, mesh=engine.mesh)
+        for r in reqs:
+            solo = solo_eng.submit(r.prompt, r.max_new_tokens)
+            solo_eng.run()
+            assert solo.out_tokens == r.out_tokens, (
+                f"{name}: request {r.rid} diverged under continuous batching")
+        solo_eng.assert_bounded_traces()
+
+    row = {
+        "requests": len(reqs), "generated_tokens": gen_total,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(gen_total / max(wall, 1e-9), 2),
+        "latency_s": _percentiles(lat), "ttft_s": _percentiles(ttft),
+        "scheduler_steps": engine.steps, "traces": dict(engine.traces),
+        "preemptions": sum(r.preemptions for r in reqs),
+        "verified_vs_single_request": bool(verify),
+    }
+    emit(f"serving/{name}_tokens_per_s", wall * 1e6,
+         f"tok_s={row['tokens_per_s']};p50={row['latency_s']['p50']};"
+         f"p99={row['latency_s']['p99']};traces={len(engine.traces)}")
+    return row, params
+
+
+def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
+    if smoke:
+        n_req, max_prompt, gen = 5, 12, 6
+        ecfg = EngineConfig(num_slots=3, block_size=4, num_blocks=24,
+                            max_blocks_per_slot=6, prefill_chunk=8)
+    else:
+        n_req, max_prompt, gen = 32, 128, 64
+        ecfg = EngineConfig(num_slots=8, block_size=16, num_blocks=256,
+                            max_blocks_per_slot=16, prefill_chunk=64)
+    on_tpu = jax.default_backend() == "tpu"
+    workload = _poisson_workload(np.random.default_rng(0), n_req, max_prompt,
+                                 gen, mean_gap_steps=2.0)
+    assert len(workload) >= 4, "parity contract needs >= 4 staggered requests"
+
+    dense, params = _bench_one("dense", arch=arch, smoke=smoke, lcd=False,
+                               ecfg=ecfg, workload=workload, seed=7,
+                               params=None, verify=smoke)
+    # off-TPU, force the fused Pallas kernels through the interpreter so the
+    # LCD row measures the real serving dispatch, not the gather fallback
+    with lut_serving(None if on_tpu else "interpret"):
+        lcd, _ = _bench_one("lcd", arch=arch, smoke=smoke, lcd=True,
+                            ecfg=ecfg, workload=workload, seed=7,
+                            params=params, verify=smoke)
+
+    out = {
+        "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
+        "engine": {"num_slots": ecfg.num_slots, "block_size": ecfg.block_size,
+                   "num_blocks": ecfg.num_blocks,
+                   "prefill_chunk": ecfg.prefill_chunk},
+        "workload": {"requests": n_req, "max_prompt": max_prompt,
+                     "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
+        "dense": dense, "lcd": lcd,
+        "lcd_vs_dense_tokens_per_s": round(
+            lcd["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3),
+        "note": ("interpret-mode wall times are correctness telemetry, not "
+                 "perf claims" if not on_tpu else "compiled TPU timings"),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("serving/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, few requests, CPU/interpret "
+                         "friendly; also runs the single-request parity check")
+    ap.add_argument("--arch", default="llama2-7b")
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, arch=args.arch)
+    print(json.dumps({k: out[k] for k in
+                      ("lcd_vs_dense_tokens_per_s", "backend", "smoke")}))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,3 +2,23 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+import pytest  # noqa: E402
+
+# The tier-1 pre-merge gate (README "Verify"): the paper-math and serving-
+# engine suites — fast and green on a plain CPU. Kernel-interpreter,
+# full-zoo and HLO-cost suites stay in the full run (`pytest -q`); they need
+# more time and, for some, a working Pallas interpreter.
+TIER1_MODULES = {
+    "test_clustering",
+    "test_lut_and_smoothing",
+    "test_compress_api",
+    "test_decode_engine",
+    "test_serving_engine",
+}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.fspath.purebasename in TIER1_MODULES:
+            item.add_marker(pytest.mark.tier1)

@@ -2,7 +2,7 @@
 vocab=202048, MoE 16 experts top-1, early fusion
 [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
 
-Simplification (DESIGN.md §6): routed-only 16-expert top-1 MoE (the released
+Simplification (DESIGN.md §7): routed-only 16-expert top-1 MoE (the released
 model adds a shared expert; the assigned config specifies 16e top-1)."""
 from repro.models.config import ModelConfig, register
 

@@ -128,7 +128,7 @@ def dense_to_clustered(w: np.ndarray, codes: np.ndarray, codebook: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Eligibility: which parameters get clustered (DESIGN.md §5 table)
+# Eligibility: which parameters get clustered (DESIGN.md §6 table)
 # ---------------------------------------------------------------------------
 
 # path-regexes NEVER clustered: embeddings, norms, biases, router/gates, SSM/RWKV

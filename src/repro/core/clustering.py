@@ -8,7 +8,7 @@ tensor is a 1-D problem. On sorted data, 1-D DBSCAN is exact and linear-time:
 a point is a core point iff its eps-window (found by two binary searches) holds at
 least MinPts points, and clusters are maximal chains of eps-reachable core points,
 which on a sorted axis are contiguous runs. We run the *same algorithm* as the
-paper, just with the optimal 1-D implementation (recorded in DESIGN.md §6).
+paper, just with the optimal 1-D implementation (recorded in DESIGN.md §7).
 
 All distillation-time operations (assignment, weighted refresh, merge, objective)
 are pure-jnp and jittable with a fixed K_max + active mask, so the whole per-layer

@@ -45,6 +45,12 @@ DEFAULT_RULES: Dict[str, Axis] = {
     "seq_kv": ("pod", "data", "model"),
     "embed": ("pod", "data"),    # FSDP dim of params
     "embed_nofsdp": None,
+    # continuous-batching serving engine (DESIGN.md §5): request slots shard
+    # like a batch dim; the physical block pool stays replicated-per-shard on
+    # the model axis (each chip holds its kv-head shard of EVERY block, so a
+    # slot's block table is valid on all chips without any re-mapping).
+    "slots": ("pod", "data"),
+    "blocks": None,
     "vocab": "model",
     "heads": "model",
     "kv": "model",

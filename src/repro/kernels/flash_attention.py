@@ -16,7 +16,16 @@ asserted against ref.py in interpret mode across shapes/windows/softcaps
 (tests/test_kernels.py::TestFlashAttention).
 
 Grid: (B*H, Sq/bq); the kernel loops over KV blocks with lax.fori_loop.
-Supports causal masking, sliding windows (gemma2) and logit softcap.
+Supports causal masking, sliding windows (gemma2), logit softcap, and a
+static `k_len` bound that masks keys past the live length of a padded cache
+(the decode-time analogue of the serving engine's length masking).
+
+Paged serving (DESIGN.md §5): the continuous-batching engine needs PER-SLOT
+ragged lengths — each batch row attends over a different number of keys —
+which this kernel's static masks cannot express. That path runs through the
+jnp fallback in models/layers.py (`_attn_chunk` with 2-D q_pos + per-row
+k_len); a paged flash kernel with a scalar-prefetched length vector is the
+natural successor once serving moves to multi-chip decode.
 """
 from __future__ import annotations
 
@@ -34,7 +43,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
                   scale: float, causal: bool, window: int, softcap: float,
-                  q_offset: int):
+                  q_offset: int, k_len: int):
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32) * scale              # (bq, d)
     q_pos = q_offset + qi * bq + jax.lax.iota(jnp.int32, bq)
@@ -56,6 +65,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
             mask &= q_pos[:, None] >= k_pos[None, :]
         if window > 0:
             mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if k_len > 0:   # padded-cache decode: keys past the live length
+            mask &= k_pos[None, :] < k_len
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=1))        # (bq,)
         alpha = jnp.exp(m - m_new)
@@ -73,7 +84,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "bq", "bk", "causal", "window", "softcap", "q_offset", "interpret"))
+    "bq", "bk", "causal", "window", "softcap", "q_offset", "k_len",
+    "interpret"))
 def flash_attention(
     q: jax.Array,          # (BH, Sq, D) — batch*heads flattened
     k: jax.Array,          # (BH, Sk, D)
@@ -85,6 +97,7 @@ def flash_attention(
     window: int = 0,
     softcap: float = 0.0,
     q_offset: int = 0,
+    k_len: int = 0,        # >0: mask keys at positions >= k_len (padded cache)
     interpret: bool = False,
 ) -> jax.Array:
     bh, sq, d = q.shape
@@ -95,7 +108,8 @@ def flash_attention(
     grid = (bh, sq // bq)
     kernel = functools.partial(
         _flash_kernel, bq=bq, bk=bk, sk=sk, scale=1.0 / np.sqrt(d),
-        causal=causal, window=window, softcap=softcap, q_offset=q_offset)
+        causal=causal, window=window, softcap=softcap, q_offset=q_offset,
+        k_len=k_len)
     return pl.pallas_call(
         kernel,
         grid=grid,

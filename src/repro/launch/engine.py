@@ -1,0 +1,492 @@
+"""LCD serving engines: the scan-compiled static-batch path (PR 1) and the
+continuous-batching engine with a paged KV cache (DESIGN.md §5).
+
+`launch/serve.py` is the CLI over both; this module is the importable API.
+
+Static batch (`serve`, `build_decode_fns`)
+    One batch of identical-length prompts starts and finishes together:
+    exactly TWO traced computations per generation (one batched prefill + one
+    lax.scan decode with a donated (L, B, S, KV, D) cache).
+
+Continuous batching (`ServingEngine`)
+    Real traffic is requests with different prompt lengths, arrival times and
+    completion times. The engine holds a fixed number of request SLOTS and a
+    pool of fixed-size KV BLOCKS:
+
+      * a free-list `BlockAllocator` hands blocks to slots on demand, so a
+        finishing short request frees exactly its blocks for a queued long one
+        (the whole cache no longer lives or dies together);
+      * each scheduler `step()` packs prefilling slots (a prompt chunk),
+        decoding slots (one token) and idle slots (nothing) into ONE traced
+        computation — per-slot position/length/activity are data, not shapes;
+      * the traced step therefore comes in exactly TWO shapes: token-window
+        width `prefill_chunk` (any slot prefilling) and width 1 (pure decode).
+        `assert_bounded_traces()` enforces the contract; per-slot math is
+        independent, so engine output is bit-equal to a single-request run
+        (tests/test_serving_engine.py).
+
+    Out-of-block pressure is resolved by recompute preemption: the youngest
+    running request is evicted back to the queue (its blocks freed) and later
+    re-prefills its prompt plus the tokens it had already generated.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import compress_model, is_clustered
+from repro.distributed.sharding import use_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import get_config, reduced
+from repro.models.registry import Model, get_model
+from repro.utils import human_bytes, logger, tree_size_bytes
+
+
+# ---------------------------------------------------------------------------
+# Static-batch path (PR 1): one prefill + one scan decode, 2 traces
+# ---------------------------------------------------------------------------
+
+def build_decode_fns(model, cfg, gen_tokens: int):
+    """(prefill_fn, decode_fn, trace_counts): the engine's two traced
+    computations. trace_counts is mutated at TRACE time (a Python side effect
+    inside the jitted functions), so after a full generation it records how
+    many computations were actually compiled — asserted to be {1, 1} by
+    benchmarks/decode_bench.py and tests/test_decode_engine.py."""
+    traces = {"prefill": 0, "decode": 0}
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def prefill(params, cache, prompt):
+        traces["prefill"] += 1
+        logits, cache = model.decode(
+            params, cache, {"tokens": prompt, "pos": jnp.asarray(0, jnp.int32)})
+        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
+        return tok.astype(jnp.int32), cache
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def decode(params, cache, first_tok):
+        traces["decode"] += 1
+
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = model.decode(
+                params, cache, {"tokens": tok, "pos": cache["pos"]})
+            nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
+            return (nxt.astype(jnp.int32), cache), tok[:, 0]
+
+        (_, cache), toks = jax.lax.scan(
+            body, (first_tok, cache), None, length=gen_tokens)
+        return toks.swapaxes(0, 1), cache       # (B, gen_tokens)
+
+    return prefill, decode, traces
+
+
+def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
+          target_centroids: int = 8, batch: int = 4, prompt_len: int = 16,
+          gen_tokens: int = 32, seed: int = 0, params=None, greedy=True,
+          stats: Optional[Dict[str, Any]] = None):
+    """Static-batch generation: `gen_tokens` per sequence for one batch of
+    identical prompts; returns (tokens (B, gen), params).
+
+    Pass a dict as `stats` to receive timing/trace telemetry (tokens/s,
+    prefill/decode wall time, trace counts) — benchmarks/decode_bench.py uses
+    it to track the serving-speedup trajectory. For staggered multi-request
+    traffic use `ServingEngine` instead.
+    """
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg, dtype="float32")
+    model = get_model(cfg)
+    mesh = make_host_mesh()
+
+    with use_rules(mesh, fsdp=False):
+        if params is None:
+            params = model.init(jax.random.key(seed))
+        dense_bytes = tree_size_bytes(params)
+        if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
+                params, is_leaf=is_clustered)):
+            params, report = compress_model(params,
+                                            target_centroids=target_centroids)
+            logger.info("LCD: " + report.summary())
+            logger.info(f"weights: {human_bytes(dense_bytes)} dense -> "
+                        f"{human_bytes(tree_size_bytes(params))} clustered "
+                        f"(packed int4 codes first-class)")
+
+        max_seq = prompt_len + gen_tokens
+        cache = model.init_cache(batch, max_seq)
+        rng = np.random.default_rng(seed)
+        prompt = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
+                             jnp.int32)
+
+        prefill, decode, traces = build_decode_fns(model, cfg, gen_tokens)
+
+        t0 = time.perf_counter()
+        first_tok, cache = prefill(params, cache, prompt)
+        jax.block_until_ready(first_tok)
+        t1 = time.perf_counter()
+        gen, cache = decode(params, cache, first_tok)
+        gen = np.asarray(jax.block_until_ready(gen))
+        t2 = time.perf_counter()
+
+        dt = t2 - t0
+        tok_s = gen.shape[1] * batch / max(t2 - t1, 1e-9)
+        logger.info(f"{arch}{' +LCD' if lcd else ''}: generated "
+                    f"{gen.shape[1]} tokens x {batch} seqs in {dt:.2f}s "
+                    f"(prefill {t1 - t0:.2f}s, decode {t2 - t1:.2f}s, "
+                    f"{tok_s:.1f} tok/s) — traces: {traces}")
+        if stats is not None:
+            stats.update(tokens_per_s=tok_s, prefill_s=t1 - t0,
+                         decode_s=t2 - t1, total_s=dt, traces=dict(traces),
+                         gen_tokens=int(gen.shape[1]), batch=batch)
+        return gen, params
+
+
+# ---------------------------------------------------------------------------
+# Paged-block allocator
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free-list allocator over the physical KV block pool.
+
+    Invariants (DESIGN.md §5): every block id is either on the free list or
+    owned by exactly one slot; `alloc` is all-or-nothing (no partial grants);
+    `free` returns blocks in O(1) with no compaction — block tables absorb
+    fragmentation, physical order never matters."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: collections.deque = collections.deque(range(num_blocks))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert 0 <= b < self.num_blocks and b not in self._free, b
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# Requests and engine configuration
+# ---------------------------------------------------------------------------
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int
+    state: str = QUEUED
+    slot: Optional[int] = None
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    fed: int = 0                       # tokens of `feed` already in the cache
+    preemptions: int = 0
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    # tokens to (re)prefill this running stint, SNAPSHOTTED at admission:
+    # the prompt plus anything generated before a preemption. Tokens decoded
+    # after admission are fed one at a time, not appended here — otherwise a
+    # decoding request would look permanently "prefilling" and pin the step
+    # at the wide trace shape.
+    feed: Optional[np.ndarray] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    @property
+    def prefilling(self) -> bool:
+        return self.feed is not None and self.fed < len(self.feed)
+
+    def resume_feed(self) -> np.ndarray:
+        """prompt + already-generated tokens — after a recompute preemption
+        the generated tokens are re-ingested as prompt so greedy decoding
+        resumes where it left off."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)])
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 4                # concurrent sequences per traced step
+    block_size: int = 16              # tokens per KV block
+    num_blocks: int = 64              # physical pool size (all slots share it)
+    max_blocks_per_slot: int = 16     # block-table width (max seq / block_size)
+    prefill_chunk: int = 16           # token-window width of the mixed step
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_blocks_per_slot * self.block_size
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+class ServingEngine:
+    """Continuous-batching scheduler over the paged decode path.
+
+    Slot lifecycle (DESIGN.md §5): submit -> QUEUED -> (admit: slot + prompt
+    blocks granted) -> RUNNING prefill (chunked) -> RUNNING decode (1 token
+    per step, blocks allocated lazily at block-size boundaries) -> FINISHED
+    (slot and blocks freed, immediately reusable by the queue).
+
+        engine = ServingEngine(model, params, EngineConfig(...))
+        engine.submit(prompt, max_new_tokens=32)
+        finished = engine.run()          # drive until queue + slots drain
+        engine.assert_bounded_traces()   # <= 2 compiled step shapes
+    """
+
+    def __init__(self, model: Model, params, ecfg: EngineConfig = EngineConfig(),
+                 mesh=None, clock=time.perf_counter):
+        assert model.supports_paging(), (
+            f"family '{model.cfg.family}' has no paged decode path")
+        assert ecfg.num_blocks >= ecfg.max_blocks_per_slot, ecfg
+        self.model, self.params, self.ecfg = model, params, ecfg
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.clock = clock
+        self.alloc = BlockAllocator(ecfg.num_blocks)
+        self.slots: List[Optional[Request]] = [None] * ecfg.num_slots
+        # unallocated entries point at block 0; reads there are masked by
+        # lengths, writes by n_new — never observable
+        self.block_tables = np.zeros(
+            (ecfg.num_slots, ecfg.max_blocks_per_slot), np.int32)
+        self.lengths = np.zeros(ecfg.num_slots, np.int32)
+        self.queue: collections.deque = collections.deque()
+        self.finished: List[Request] = []
+        with use_rules(self.mesh, fsdp=False):
+            self.cache = model.init_paged_cache(ecfg.num_blocks, ecfg.block_size)
+        self.traces: Dict[int, int] = {}     # token-window width T -> count
+        self._step_fns: Dict[int, Any] = {}
+        self._next_rid = 0
+        self.steps = 0
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        need = len(prompt) + max_new_tokens
+        assert need <= self.ecfg.max_seq, (
+            f"request needs {need} tokens; engine max_seq is "
+            f"{self.ecfg.max_seq} (max_blocks_per_slot * block_size)")
+        r = Request(self._next_rid, prompt, max_new_tokens,
+                    submit_t=self.clock())
+        self._next_rid += 1
+        self.queue.append(r)
+        return r
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        """Drive `step()` until every submitted request finishes."""
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.busy:
+                return done
+            done.extend(self.step())
+        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    def assert_bounded_traces(self) -> None:
+        """The bounded-trace contract: the step compiles in at most TWO
+        shapes — (num_slots, prefill_chunk) and (num_slots, 1) — each exactly
+        once, no matter how requests arrive or interleave."""
+        allowed = {1, self.ecfg.prefill_chunk}
+        assert set(self.traces) <= allowed, (
+            f"unexpected step widths {set(self.traces)} (allowed {allowed})")
+        assert all(c == 1 for c in self.traces.values()), (
+            f"a step shape retraced: {self.traces}")
+
+    # -- scheduler ----------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """One scheduler iteration: admit from the queue, run one traced
+        step over every active slot, harvest finished requests. Returns the
+        requests that finished during this step."""
+        self._admit()
+        active = [(s, r) for s, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        ecfg = self.ecfg
+        t = ecfg.prefill_chunk if any(r.prefilling for _, r in active) else 1
+
+        # pass 1 — reserve blocks. This may EVICT other active slots
+        # (recompute preemption), so it must complete before any tokens are
+        # packed: a slot evicted here simply drops out of pass 2.
+        def want(r):
+            return min(len(r.feed) - r.fed, t) if r.prefilling else 1
+        for s, r in active:
+            if self.slots[s] is not r:
+                continue               # evicted by an earlier reservation
+            self._ensure_blocks(r, int(self.lengths[s]) + want(r))
+
+        # pass 2 — pack the surviving slots into one traced batch
+        tokens = np.zeros((ecfg.num_slots, t), np.int32)
+        n_new = np.zeros(ecfg.num_slots, np.int32)
+        active = [(s, r) for s, r in enumerate(self.slots) if r is not None]
+        for s, r in active:
+            w = want(r)
+            if len(r.blocks) * ecfg.block_size < int(self.lengths[s]) + w:
+                continue               # starved of blocks: waits this step
+            if r.prefilling:
+                tokens[s, :w] = r.feed[r.fed:r.fed + w]
+            else:
+                tokens[s, 0] = r.out_tokens[-1]
+            n_new[s] = w
+
+        with use_rules(self.mesh, fsdp=False):
+            next_tok, self.cache = self._step_fn(t)(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths), jnp.asarray(n_new),
+                jnp.asarray(self.block_tables))
+        next_tok = np.asarray(next_tok)
+        self.steps += 1
+
+        done: List[Request] = []
+        for s, r in active:
+            if self.slots[s] is not r or not n_new[s]:
+                continue               # evicted by _ensure_blocks, or starved
+            r.fed += int(n_new[s])
+            self.lengths[s] += int(n_new[s])
+            if not r.prefilling:       # last valid token's logits are usable
+                if r.first_token_t is None:
+                    r.first_token_t = self.clock()
+                r.out_tokens.append(int(next_tok[s]))
+                if r.done:
+                    self._finish(r)
+                    done.append(r)
+        return done
+
+    # -- internals ----------------------------------------------------------
+
+    def _step_fn(self, t: int):
+        if t not in self._step_fns:
+            model, cfg = self.model, self.model.cfg
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def step(params, cache, tokens, lengths, n_new, block_tables):
+                self.traces[t] = self.traces.get(t, 0) + 1   # trace-time only
+                logits, cache = model.paged_decode(
+                    params, cache, tokens, lengths, n_new, block_tables)
+                nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
+                return nxt.astype(jnp.int32), cache
+
+            self._step_fns[t] = step
+        return self._step_fns[t]
+
+    def _admit(self) -> None:
+        """FCFS admission: a queued request enters the first free slot once
+        the allocator can grant every block its full feed needs (decode-time
+        blocks are still allocated lazily — a finishing request may free
+        capacity mid-flight that a later _ensure_blocks picks up)."""
+        for s in range(self.ecfg.num_slots):
+            if self.slots[s] is not None or not self.queue:
+                continue
+            r = self.queue[0]
+            feed = r.resume_feed()
+            need = -(-len(feed) // self.ecfg.block_size)
+            blocks = self.alloc.alloc(need)
+            if blocks is None:
+                return                 # FCFS: don't let a short request starve
+            self.queue.popleft()
+            r.feed = feed
+            r.state, r.slot, r.blocks, r.fed = RUNNING, s, blocks, 0
+            self.slots[s] = r
+            self.lengths[s] = 0
+            self.block_tables[s] = 0
+            self.block_tables[s, :len(blocks)] = blocks
+
+    def _ensure_blocks(self, r: Request, tokens_needed: int) -> bool:
+        """Grow `r`'s block table to cover `tokens_needed` cached tokens.
+        On pool exhaustion, evict the youngest other running request
+        (recompute preemption) and retry; False if `r` itself was evicted or
+        still cannot be served this step."""
+        while True:
+            need = -(-tokens_needed // self.ecfg.block_size) - len(r.blocks)
+            if need <= 0:
+                return True
+            got = self.alloc.alloc(need)
+            if got is not None:
+                self.block_tables[r.slot, len(r.blocks):len(r.blocks) + len(got)] = got
+                r.blocks.extend(got)
+                continue
+            victim = self._youngest_running(exclude=r)
+            if victim is None:
+                return False           # nothing to evict; r waits this step
+            self._evict(victim)
+            if victim is r:            # cannot happen (excluded), but be safe
+                return False
+
+    def _youngest_running(self, exclude: Request) -> Optional[Request]:
+        running = [r for r in self.slots
+                   if r is not None and r is not exclude]
+        return max(running, key=lambda r: r.rid) if running else None
+
+    def _evict(self, r: Request) -> None:
+        """Recompute preemption: return `r` to the FRONT of the queue with its
+        blocks freed; on re-admission it re-prefills prompt + generated."""
+        logger.info(f"engine: preempting request {r.rid} "
+                    f"({len(r.out_tokens)}/{r.max_new_tokens} tokens done)")
+        s = r.slot
+        self.alloc.free(r.blocks)
+        r.blocks, r.slot, r.fed, r.feed = [], None, 0, None
+        r.state, r.preemptions = QUEUED, r.preemptions + 1
+        self.slots[s] = None
+        self.lengths[s] = 0
+        self.block_tables[s] = 0
+        self.queue.appendleft(r)
+
+    def _finish(self, r: Request) -> None:
+        s = r.slot
+        self.alloc.free(r.blocks)
+        r.blocks, r.slot, r.feed = [], None, None
+        r.state, r.finish_t = FINISHED, self.clock()
+        self.slots[s] = None
+        self.lengths[s] = 0
+        self.block_tables[s] = 0
+        self.finished.append(r)
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructor shared by the CLI, benchmarks and examples
+# ---------------------------------------------------------------------------
+
+def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
+                 target_centroids: int = 8, ecfg: EngineConfig = EngineConfig(),
+                 seed: int = 0, params=None):
+    """(engine, params): model + (optionally LCD-compressed) params wrapped in
+    a ready ServingEngine."""
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg, dtype="float32")
+    model = get_model(cfg)
+    mesh = make_host_mesh()
+    with use_rules(mesh, fsdp=False):
+        if params is None:
+            params = model.init(jax.random.key(seed))
+        if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
+                params, is_leaf=is_clustered)):
+            params, report = compress_model(params,
+                                            target_centroids=target_centroids)
+            logger.info("LCD: " + report.summary())
+    return ServingEngine(model, params, ecfg, mesh=mesh), params

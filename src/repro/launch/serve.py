@@ -1,133 +1,65 @@
-"""Serving driver: scan-compiled batched autoregressive decode, FP16/bf16 or
-LCD-clustered.
+"""Serving CLI — a thin command-line front-end over `repro.launch.engine`.
+
+Static batch (PR 1's scan-compiled path; one batch starts/finishes together):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --lcd --tokens 32 --batch 4
 
-The engine traces exactly TWO computations per generation (DESIGN.md §2):
+Continuous batching (DESIGN.md §5; staggered requests, paged KV cache):
 
-  1. prefill — ONE batched call embeds/attends/caches the whole prompt
-     (the seed fed the prompt token-by-token through the decode step);
-  2. decode  — ONE jit containing a lax.scan over the generated tokens, with
-     the KV cache donated into the loop so XLA updates it in place instead of
-     allocating a fresh (L, B, S, KV, D) buffer per token. The seed dispatched
-     one jitted step per token from a Python loop — per-token dispatch + cache
-     copy overhead that dominated decode wall time at small batch.
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --reduced \
+        --lcd --continuous --requests 6 --tokens 16
 
-The LCD path runs the paper's §4 pipeline end-to-end: weights as packed int4
-centroid codes + codebooks (ClusteredTensor), and every projection through the
-fused smooth+quant+LUT GEMM (gather contraction on CPU, Pallas kernels on TPU
-or under kernels.ops.lut_serving("interpret")).
+All engine logic — the two-trace static path (`serve`, `build_decode_fns`)
+and the slot/block continuous engine (`ServingEngine`) — lives in
+`repro.launch.engine`; this module only parses flags and reports. The names
+`serve` and `build_decode_fns` are re-exported here for compatibility with
+existing imports (benchmarks/decode_bench.py, tests/test_decode_engine.py).
 """
 from __future__ import annotations
 
 import argparse
-import time
-from functools import partial
-from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import compress_model, is_clustered
-from repro.distributed.sharding import use_rules
-from repro.launch.mesh import make_host_mesh
-from repro.models.config import get_config, reduced
-from repro.models.registry import get_model
-from repro.utils import human_bytes, logger, tree_size_bytes
+# re-exported API (the engine module is the implementation)
+from repro.launch.engine import (BlockAllocator, EngineConfig, Request,  # noqa: F401
+                                 ServingEngine, build_decode_fns,
+                                 build_engine, serve)
+from repro.utils import logger
 
 
-def build_decode_fns(model, cfg, gen_tokens: int):
-    """(prefill_fn, decode_fn, trace_counts): the engine's two traced
-    computations. trace_counts is mutated at TRACE time (a Python side effect
-    inside the jitted functions), so after a full generation it records how
-    many computations were actually compiled — asserted to be {1, 1} by
-    benchmarks/decode_bench.py and tests/test_decode_engine.py."""
-    traces = {"prefill": 0, "decode": 0}
-
-    @partial(jax.jit, donate_argnums=(1,))
-    def prefill(params, cache, prompt):
-        traces["prefill"] += 1
-        logits, cache = model.decode(
-            params, cache, {"tokens": prompt, "pos": jnp.asarray(0, jnp.int32)})
-        tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
-        return tok.astype(jnp.int32), cache
-
-    @partial(jax.jit, donate_argnums=(1,))
-    def decode(params, cache, first_tok):
-        traces["decode"] += 1
-
-        def body(carry, _):
-            tok, cache = carry
-            logits, cache = model.decode(
-                params, cache, {"tokens": tok, "pos": cache["pos"]})
-            nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, None]
-            return (nxt.astype(jnp.int32), cache), tok[:, 0]
-
-        (_, cache), toks = jax.lax.scan(
-            body, (first_tok, cache), None, length=gen_tokens)
-        return toks.swapaxes(0, 1), cache       # (B, gen_tokens)
-
-    return prefill, decode, traces
-
-
-def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
-          target_centroids: int = 8, batch: int = 4, prompt_len: int = 16,
-          gen_tokens: int = 32, seed: int = 0, params=None, greedy=True,
-          stats: Optional[Dict[str, Any]] = None):
-    """Generate `gen_tokens` per sequence; returns (tokens (B, gen), params).
-
-    Pass a dict as `stats` to receive timing/trace telemetry (tokens/s,
-    prefill/decode wall time, trace counts) — benchmarks/decode_bench.py uses
-    it to track the serving-speedup trajectory.
-    """
-    cfg = get_config(arch)
-    if use_reduced:
-        cfg = reduced(cfg, dtype="float32")
-    model = get_model(cfg)
-    mesh = make_host_mesh()
-
-    with use_rules(mesh, fsdp=False):
-        if params is None:
-            params = model.init(jax.random.key(seed))
-        dense_bytes = tree_size_bytes(params)
-        if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
-                params, is_leaf=is_clustered)):
-            params, report = compress_model(params,
-                                            target_centroids=target_centroids)
-            logger.info("LCD: " + report.summary())
-            logger.info(f"weights: {human_bytes(dense_bytes)} dense -> "
-                        f"{human_bytes(tree_size_bytes(params))} clustered "
-                        f"(packed int4 codes first-class)")
-
-        max_seq = prompt_len + gen_tokens
-        cache = model.init_cache(batch, max_seq)
-        rng = np.random.default_rng(seed)
-        prompt = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
-                             jnp.int32)
-
-        prefill, decode, traces = build_decode_fns(model, cfg, gen_tokens)
-
-        t0 = time.perf_counter()
-        first_tok, cache = prefill(params, cache, prompt)
-        jax.block_until_ready(first_tok)
-        t1 = time.perf_counter()
-        gen, cache = decode(params, cache, first_tok)
-        gen = np.asarray(jax.block_until_ready(gen))
-        t2 = time.perf_counter()
-
-        dt = t2 - t0
-        tok_s = gen.shape[1] * batch / max(t2 - t1, 1e-9)
-        logger.info(f"{arch}{' +LCD' if lcd else ''}: generated "
-                    f"{gen.shape[1]} tokens x {batch} seqs in {dt:.2f}s "
-                    f"(prefill {t1 - t0:.2f}s, decode {t2 - t1:.2f}s, "
-                    f"{tok_s:.1f} tok/s) — traces: {traces}")
-        if stats is not None:
-            stats.update(tokens_per_s=tok_s, prefill_s=t1 - t0,
-                         decode_s=t2 - t1, total_s=dt, traces=dict(traces),
-                         gen_tokens=int(gen.shape[1]), batch=batch)
-        return gen, params
+def _run_continuous(args) -> None:
+    ecfg = EngineConfig(num_slots=args.slots, block_size=args.block_size,
+                        num_blocks=args.blocks,
+                        max_blocks_per_slot=args.blocks_per_slot,
+                        prefill_chunk=args.prefill_chunk)
+    engine, _ = build_engine(args.arch, use_reduced=args.reduced,
+                             lcd=args.lcd, target_centroids=args.centroids,
+                             ecfg=ecfg)
+    rng = np.random.default_rng(0)
+    cfg = engine.model.cfg
+    # staggered submissions: a fresh request every other scheduler step, with
+    # varying prompt lengths — the continuous-batching case the static path
+    # cannot serve without padding everyone to the slowest request
+    pending = [rng.integers(0, cfg.vocab, rng.integers(4, args.prompt_len + 1))
+               for _ in range(args.requests)]
+    finished = []
+    while pending or engine.busy:
+        if pending and engine.steps % 2 == 0:
+            engine.submit(pending.pop(0), max_new_tokens=args.tokens)
+        if engine.busy:
+            finished.extend(engine.step())
+        else:
+            engine.steps += 1          # idle tick: let the next arrival land
+    engine.assert_bounded_traces()
+    for r in finished:
+        logger.info(f"request {r.rid}: prompt {len(r.prompt)} -> "
+                    f"{len(r.out_tokens)} tokens "
+                    f"(latency {r.finish_t - r.submit_t:.2f}s, "
+                    f"preemptions {r.preemptions})")
+    logger.info(f"continuous engine: {len(finished)} requests in "
+                f"{engine.steps} steps, traces {engine.traces}")
 
 
 def main() -> None:
@@ -139,10 +71,23 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
+    # continuous-batching mode
+    ap.add_argument("--continuous", action="store_true",
+                    help="run the paged continuous-batching engine with "
+                         "staggered requests instead of one static batch")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--blocks", type=int, default=48)
+    ap.add_argument("--blocks-per-slot", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
-    serve(args.arch, use_reduced=args.reduced, lcd=args.lcd,
-          target_centroids=args.centroids, batch=args.batch,
-          prompt_len=args.prompt_len, gen_tokens=args.tokens)
+    if args.continuous:
+        _run_continuous(args)
+    else:
+        serve(args.arch, use_reduced=args.reduced, lcd=args.lcd,
+              target_centroids=args.centroids, batch=args.batch,
+              prompt_len=args.prompt_len, gen_tokens=args.tokens)
 
 
 if __name__ == "__main__":

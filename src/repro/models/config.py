@@ -189,7 +189,7 @@ SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-1.2b"}
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """Whether (arch, shape) is a meaningful cell (DESIGN.md §5 skips)."""
+    """Whether (arch, shape) is a meaningful cell (DESIGN.md §6 skips)."""
     if shape.name == "long_500k" and cfg.arch_id not in SUBQUADRATIC:
         return False, "quadratic full attention at 512k decode — skipped per spec"
     return True, ""

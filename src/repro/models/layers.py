@@ -110,7 +110,8 @@ def _softcap(scores: jax.Array, cap: float) -> jax.Array:
     return cap * jnp.tanh(scores / cap) if cap > 0 else scores
 
 
-def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
+def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale,
+                k_len=None):
     """q: (B, Cq, H, D); k/v: (B, Sk, KV, D) with KV | H. Returns (B, Cq, H, D).
 
     Memory-diet softmax (§Perf iteration 'bf16-scores'): the S×S score/prob
@@ -120,6 +121,11 @@ def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
     relative prob error — below the quantization noise LCD itself introduces
     (validated by tests/test_models.py decode-vs-forward at 2e-3 on f32
     configs; bf16 archs see <1e-2 logits drift).
+
+    Ragged batches (the paged serving engine, DESIGN.md §5): `q_pos` may be
+    (B, Cq) — per-row absolute positions — and `k_len` a (B,) count of valid
+    keys per row; keys at or beyond `k_len` are masked out, which is how padded
+    slots and freed cache blocks are excluded without a second code path.
     """
     b, cq, h, d = q.shape
     kv = k.shape[2]
@@ -133,11 +139,20 @@ def _attn_chunk(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale):
     # `window` may be a traced per-layer value (gemma2 alternates local/global
     # inside one scanned body): apply it branch-free, 0 -> effectively infinite.
     weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
-    mask = jnp.ones((cq, k.shape[1]), bool)
+    q_pos = jnp.asarray(q_pos)
+    if q_pos.ndim == 1:                 # shared positions: mask is (Cq, Sk)
+        qp, kp = q_pos[:, None], k_pos[None, :]
+    else:                               # per-slot positions: mask is (B, Cq, Sk)
+        qp, kp = q_pos[:, :, None], k_pos[None, None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
     if causal:
-        mask &= q_pos[:, None] >= k_pos[None, :]
-    mask &= (q_pos[:, None] - k_pos[None, :]) < weff
-    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        mask &= qp >= kp
+    mask &= (qp - kp) < weff
+    if k_len is not None:
+        kl = jnp.asarray(k_len)[:, None, None]
+        mask = (mask if mask.ndim == 3 else mask[None]) & (kp < kl)
+    mexp = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    scores = jnp.where(mexp, scores, -jnp.inf)
     m = jnp.max(scores, axis=-1, keepdims=True)                     # f32 rows
     m = jnp.maximum(m, -1e30)  # fully-masked rows (window+causal): avoid nan
     e = jnp.exp(scores - m).astype(cdt)                             # bf16 store
@@ -279,6 +294,73 @@ def attn_block(
                   softcap=cfg.attn_softcap, q_offset=q_off)
     o = o.reshape(b, s, nh * hd)
     return linear(o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged attention block (continuous-batching serving engine, DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def paged_attn_block(
+    p: Dict[str, Any],
+    x: jax.Array,                 # (S_slots, T, d_model) — T new tokens/slot
+    cfg: ModelConfig,
+    *,
+    layer_window: jax.Array | int,
+    kc: jax.Array,                # (num_blocks, block_size, KV, D) paged K
+    vc: jax.Array,                # (num_blocks, block_size, KV, D) paged V
+    block_tables: jax.Array,      # (S_slots, max_blocks) int32 logical->physical
+    lengths: jax.Array,           # (S_slots,) tokens already in the cache
+    n_new: jax.Array,             # (S_slots,) valid tokens among the T fed
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One attention block over the paged KV cache (DESIGN.md §5).
+
+    Every slot advances by up to T tokens in the same traced computation —
+    prefilling slots feed a prompt chunk (n_new up to T), decoding slots feed
+    one token (n_new = 1), idle slots feed nothing (n_new = 0). The three
+    ragged quantities (per-slot position, per-slot length, per-slot activity)
+    are all masks; the trace shape depends only on (S_slots, T).
+
+    Writes go through each slot's block table: token `lengths[s] + t` lands in
+    physical block `block_tables[s, (lengths[s]+t) // block_size]`. Padded
+    tokens are redirected to an out-of-range block id and dropped by the
+    scatter. Reads gather the slot's blocks back into logical order, so the
+    attention math is identical to a contiguous cache of the same length —
+    which is what makes engine output bit-equal to single-request decoding
+    (tests/test_serving_engine.py)."""
+    b, t, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads_eff, cfg.n_kv_heads
+    nb, bs = kc.shape[0], kc.shape[1]
+
+    q = linear(x, p["wq"], p.get("bq")).reshape(b, t, nh, hd)
+    k = linear(x, p["wk"], p.get("bk")).reshape(b, t, nkv, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(b, t, nkv, hd)
+    pos = lengths[:, None] + jnp.arange(t, dtype=lengths.dtype)[None, :]  # (S, T)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    # scatter this step's K/V into the slots' blocks; padded tokens get an
+    # out-of-range block id, which mode="drop" discards
+    valid = jnp.arange(t)[None, :] < n_new[:, None]
+    blk = jnp.take_along_axis(block_tables, jnp.minimum(
+        pos // bs, block_tables.shape[1] - 1), axis=1)          # (S, T)
+    blk = jnp.where(valid, blk, nb)
+    off = pos % bs
+    kc = kc.at[blk, off].set(k.astype(kc.dtype), mode="drop")
+    vc = vc.at[blk, off].set(v.astype(vc.dtype), mode="drop")
+
+    # gather each slot's logical view: (S, max_blocks*block_size, KV, D)
+    kv_k = kc[block_tables].reshape(b, -1, nkv, hd).astype(x.dtype)
+    kv_v = vc[block_tables].reshape(b, -1, nkv, hd).astype(x.dtype)
+    q = maybe_shard(q, "slots", None, None, None)
+    kv_k = maybe_shard(kv_k, "slots", None, "kv", None)
+    kv_v = maybe_shard(kv_v, "slots", None, "kv", None)
+
+    k_pos = jnp.arange(kv_k.shape[1])
+    o = _attn_chunk(q, kv_k, kv_v, pos, k_pos, causal=True,
+                    window=layer_window, softcap=cfg.attn_softcap,
+                    scale=1.0 / np.sqrt(hd), k_len=lengths + n_new)
+    o = o.reshape(b, t, nh * hd)
+    return linear(o, p["wo"]), kc, vc
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,12 @@ class Model:
     _init_cache: Callable
     _abstract_cache: Callable
     cache_names: Dict[str, str]
+    # paged serving path (continuous-batching engine, DESIGN.md §5);
+    # None for families without it (rwkv/hybrid carry recurrent state, not a
+    # growable KV cache, so slot-paging does not apply to them)
+    _paged_decode: Optional[Callable] = None
+    _init_paged_cache: Optional[Callable] = None
+    paged_cache_names: Optional[Dict[str, str]] = None
 
     def init(self, key: jax.Array):
         return PT.init_params(key, self.table, self.cfg.jnp_dtype)
@@ -53,6 +59,20 @@ class Model:
 
     def param_count(self) -> int:
         return PT.param_count(self.table)
+
+    # --- paged serving path (launch/engine.py) -----------------------------
+
+    def supports_paging(self) -> bool:
+        return self._paged_decode is not None
+
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        assert self.supports_paging(), f"{self.cfg.family}: no paged decode"
+        return self._init_paged_cache(self.cfg, num_blocks, block_size)
+
+    def paged_decode(self, params, cache, tokens, lengths, n_new, block_tables):
+        assert self.supports_paging(), f"{self.cfg.family}: no paged decode"
+        return self._paged_decode(params, cache, tokens, lengths, n_new,
+                                  block_tables, self.cfg)
 
 
 # --- family adapters ---------------------------------------------------------
@@ -109,10 +129,18 @@ _FAMILIES = {
               whisper.init_cache, whisper.abstract_cache, whisper.CACHE_NAMES),
 }
 
+# families whose KV cache pages (decoder-only transformer stacks)
+_PAGED_FAMILIES = {"dense", "moe", "vlm"}
+
 
 def get_model(cfg: ModelConfig) -> Model:
     table_fn, apply_fn, decode_fn, ic, ac, cn = _FAMILIES[cfg.family]
-    return Model(cfg, table_fn(cfg), apply_fn, decode_fn, ic, ac, cn)
+    paged = cfg.family in _PAGED_FAMILIES
+    return Model(
+        cfg, table_fn(cfg), apply_fn, decode_fn, ic, ac, cn,
+        _paged_decode=transformer.paged_decode_step if paged else None,
+        _init_paged_cache=transformer.init_paged_cache if paged else None,
+        paged_cache_names=transformer.PAGED_CACHE_NAMES if paged else None)
 
 
 # --- loss ---------------------------------------------------------------------

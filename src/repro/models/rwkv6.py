@@ -13,7 +13,7 @@ data-dependent through a second LoRA); the decay — the architecture's defining
 dynamic — keeps its full data-dependent form.
 
 Projections (r/k/v/g/o, channel-mix) are LCD-clusterable; decay/LoRA/shift
-parameters stay FP (they feed exp(), DESIGN.md §5).
+parameters stay FP (they feed exp(), DESIGN.md §6).
 
 Full-sequence mode runs projections as whole-sequence matmuls and scans only
 the O(S · H·P²) recurrence; decode carries (S_state, x_prev_tm, x_prev_cm).

@@ -23,7 +23,8 @@ import numpy as np
 from repro.distributed.sharding import maybe_shard
 from repro.models import params as PT
 from repro.models.config import ModelConfig
-from repro.models.layers import attn_block, linear, mlp_block, moe_block, norm
+from repro.models.layers import (attn_block, linear, mlp_block, moe_block,
+                                 norm, paged_attn_block)
 
 D = PT.ParamDecl
 
@@ -265,3 +266,78 @@ def decode_step(
     if int8_kv:
         new_cache["k_scale"], new_cache["v_scale"] = kss, vss
     return logits[:, -1], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous-batching serving engine, DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Dict[str, Any]:
+    """Block-pool KV cache: physical blocks are owned by the engine's free-list
+    allocator (launch/engine.py); the model only sees per-step block tables.
+    Unlike `init_cache` there is no `pos` — per-slot lengths live with the
+    scheduler, not the cache."""
+    if cfg.kv_cache_dtype == "int8":
+        raise NotImplementedError(
+            "paged KV cache: int8 KV quantization not yet wired (per-block "
+            "scales need their own pool); serve the engine with bf16/f32 KV")
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, _cache_dtype(cfg)),
+            "v": jnp.zeros(shape, _cache_dtype(cfg))}
+
+
+PAGED_CACHE_NAMES = {"k": "layers,blocks,.,kv,.", "v": "layers,blocks,.,kv,."}
+
+
+def paged_decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],        # {"k","v"}: (L, num_blocks, block_size, KV, D)
+    tokens: jax.Array,            # (S_slots, T) — T-token window per slot
+    lengths: jax.Array,           # (S_slots,) tokens already cached per slot
+    n_new: jax.Array,             # (S_slots,) valid tokens among the T fed
+    block_tables: jax.Array,      # (S_slots, max_blocks) int32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One interleaved prefill/decode step for every slot (DESIGN.md §5).
+
+    The single traced computation serves prefilling, decoding and idle slots
+    at once: per-slot position/length/activity are data (masks), so the engine
+    compiles exactly one computation per token-window width T — the bounded-
+    trace contract tests/test_serving_engine.py asserts. Returns the logits of
+    each slot's LAST valid token (its next-token distribution) and the
+    updated block pool."""
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]          # (S, T, d)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, layer):
+        x, aux = carry
+        p, w, kc, vc = layer
+        h = norm(x, p["ln_attn"], cfg.norm)
+        attn_out, kc, vc = paged_attn_block(
+            p["attn"], h, cfg, layer_window=w, kc=kc, vc=vc,
+            block_tables=block_tables, lengths=lengths, n_new=n_new)
+        x = x + attn_out
+        h = norm(x, p["ln_mlp"], cfg.norm)
+        if cfg.n_experts:
+            mlp_out, a = moe_block(p["mlp"], h, cfg)
+        else:
+            mlp_out, a = mlp_block(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+        return (x + mlp_out, aux + a), (kc, vc)
+
+    (x, _aux), (ks, vs) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], windows, cache["k"], cache["v"]))
+
+    x = norm(x, params["ln_final"], cfg.norm)
+    # lm_head only at each slot's last valid token — the padded tail of a
+    # prefill chunk never reaches the vocab matmul
+    last = jnp.take_along_axis(
+        x, jnp.maximum(n_new - 1, 0)[:, None, None], axis=1)[:, 0]   # (S, d)
+    head = params.get("lm_head", None)
+    logits = (last @ head.astype(last.dtype)) if head is not None else (
+        last @ params["embed"].astype(last.dtype).T)
+    if cfg.final_softcap:
+        logits = (cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
+    return logits, {"k": ks, "v": vs}

@@ -18,7 +18,7 @@ each a scanned stack of Mamba layers followed by one shared-attention call —
 the HLO stays one-mamba-body + one-attn-body regardless of depth.
 
 SSM dynamics parameters (A_log, dt_bias, conv, D) stay FP under LCD
-(exp-sensitivity, DESIGN.md §5); all projections are clusterable.
+(exp-sensitivity, DESIGN.md §6); all projections are clusterable.
 """
 from __future__ import annotations
 

@@ -1,0 +1,234 @@
+"""Continuous-batching engine tests (DESIGN.md §5): block allocator
+invariants, slot reuse with block free/realloc, bit-for-bit parity between
+multi-request and single-request decoding, the bounded-trace contract, and
+the LCD fused path through the engine (Pallas interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import compress_model
+from repro.kernels.ops import lut_serving
+from repro.launch.engine import BlockAllocator, EngineConfig, ServingEngine
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(arch_id="tiny-engine", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=256, head_dim=16, dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompt(seed, n, vocab=256):
+    return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
+
+
+def _solo_tokens(model, params, prompt, gen, ecfg):
+    """Single-request run through a FRESH engine with the same geometry —
+    the per-request reference the engine's outputs must match exactly."""
+    eng = ServingEngine(model, params, ecfg)
+    r = eng.submit(prompt, gen)
+    eng.run()
+    return list(r.out_tokens)
+
+
+class TestBlockAllocator:
+    def test_all_or_nothing_and_reuse(self):
+        a = BlockAllocator(4)
+        got = a.alloc(3)
+        assert sorted(got) == [0, 1, 2] and a.num_free == 1
+        assert a.alloc(2) is None and a.num_free == 1   # no partial grant
+        a.free([1])
+        assert sorted(a.alloc(2)) == [1, 3]             # freed block reused
+        assert a.num_free == 0
+
+    def test_double_free_rejected(self):
+        a = BlockAllocator(2)
+        blocks = a.alloc(1)
+        a.free(blocks)
+        with pytest.raises(AssertionError):
+            a.free(blocks)
+
+
+class TestSlotAndBlockReuse:
+    def test_finishing_request_frees_blocks_for_queued_one(self, tiny):
+        """The paged cache's reason to exist: with a pool too small for all
+        three requests at once, the queued request must wait for blocks, be
+        granted physical blocks the short request freed, and its tokens must
+        still equal a single-request run of the same prompt bit-for-bit."""
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=3, block_size=4, num_blocks=6,
+                            max_blocks_per_slot=4, prefill_chunk=16)
+        eng = ServingEngine(model, params, ecfg)
+        short = eng.submit(_prompt(1, 6), 2)      # 8 tokens  = 2 blocks
+        long1 = eng.submit(_prompt(2, 8), 8)      # 16 tokens -> 4 blocks
+        queued = eng.submit(_prompt(3, 9), 7)     # needs 3 blocks up front
+
+        eng.step()
+        short_blocks = set(short.blocks)
+        assert short_blocks and long1.blocks
+        # a slot is free, but the POOL can't cover the queued prompt yet
+        assert queued.slot is None and queued.state == "queued"
+
+        while short.state != "finished":
+            eng.step()
+        assert queued.state == "queued"           # still blocked on blocks
+
+        while queued.slot is None and eng.busy:
+            eng.step()
+        # the queued request was served out of physical blocks the short
+        # request returned to the free list
+        assert set(queued.blocks) & short_blocks
+
+        eng.run()
+        assert queued.state == "finished"
+        # every request's tokens match its single-request run exactly
+        for r, (s, n, g) in ((short, (1, 6, 2)), (long1, (2, 8, 8)),
+                             (queued, (3, 9, 7))):
+            assert r.out_tokens == _solo_tokens(model, params, _prompt(s, n),
+                                                g, ecfg), r.rid
+        assert eng.alloc.num_free == ecfg.num_blocks
+
+    def test_slot_reuse_after_finish(self, tiny):
+        """With ONE slot, the second request runs only after the first frees
+        it, in the same physical blocks (free-list reuse, no compaction)."""
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=1, block_size=4, num_blocks=2,
+                            max_blocks_per_slot=2, prefill_chunk=8)
+        eng = ServingEngine(model, params, ecfg)
+        a = eng.submit(_prompt(4, 4), 3)
+        b = eng.submit(_prompt(5, 5), 3)
+        eng.step()
+        a_blocks = set(a.blocks)
+        assert b.slot is None
+        while a.state != "finished":
+            eng.step()
+        while b.slot is None and eng.busy:
+            eng.step()
+        assert b.slot == 0                         # the slot a vacated
+        assert set(b.blocks) <= a_blocks | {0, 1}  # same 2-block pool
+        eng.run()
+        assert b.state == "finished"
+        assert eng.alloc.num_free == ecfg.num_blocks
+        assert b.out_tokens == _solo_tokens(model, params, _prompt(5, 5), 3,
+                                            ecfg)
+
+
+class TestMultiRequestParity:
+    def test_staggered_requests_match_single_request_bitwise(self, tiny):
+        """>= 4 requests arriving mid-flight, different prompt lengths: every
+        request's greedy tokens equal its single-request run EXACTLY. Per-slot
+        math is independent (masks, not shapes), so sharing the traced step
+        with other requests must not perturb anyone's output."""
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=3, block_size=4, num_blocks=24,
+                            max_blocks_per_slot=6, prefill_chunk=8)
+        eng = ServingEngine(model, params, ecfg)
+        specs = [(10, 5, 6), (11, 9, 5), (12, 3, 7), (13, 12, 4), (14, 7, 6)]
+        reqs = []
+        pending = list(specs)
+        while pending or eng.busy:
+            if pending and eng.steps % 2 == 0:   # staggered arrivals
+                s, n, g = pending.pop(0)
+                reqs.append((eng.submit(_prompt(s, n), g), s, n, g))
+            if eng.busy:
+                eng.step()
+        eng.assert_bounded_traces()
+        for r, s, n, g in reqs:
+            assert r.state == "finished"
+            solo = _solo_tokens(model, params, _prompt(s, n), g, ecfg)
+            assert r.out_tokens == solo, (r.rid, r.out_tokens, solo)
+
+    def test_parity_with_static_scan_engine(self, tiny):
+        """The paged engine and PR 1's static-batch scan path produce the
+        same greedy tokens for the same prompt (the two serving paths agree,
+        so the docs can present them as one system)."""
+        from repro.launch.engine import build_decode_fns
+        cfg, model, params = tiny
+        p_len, gen = 6, 5
+        prompt = _prompt(21, p_len)
+
+        prefill, decode, _ = build_decode_fns(model, cfg, gen)
+        cache = model.init_cache(1, p_len + gen)
+        tok, cache = prefill(params, cache, jnp.asarray(prompt[None]))
+        static_out, _ = decode(params, cache, tok)
+        static_toks = [int(x) for x in np.asarray(static_out)[0]]
+
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=8,
+                            max_blocks_per_slot=4, prefill_chunk=8)
+        paged_toks = _solo_tokens(model, params, prompt, gen, ecfg)
+        assert paged_toks == static_toks
+
+
+class TestBoundedTraces:
+    def test_two_step_shapes_total(self, tiny):
+        """However requests arrive, the engine compiles at most TWO step
+        computations — width prefill_chunk and width 1 — each once."""
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=16,
+                            max_blocks_per_slot=4, prefill_chunk=4)
+        eng = ServingEngine(model, params, ecfg)
+        eng.submit(_prompt(31, 6), 6)
+        eng.run()                       # prefill chunks then pure decode
+        eng.submit(_prompt(32, 5), 4)   # second request: NO new traces
+        eng.submit(_prompt(33, 3), 4)
+        eng.run()
+        eng.assert_bounded_traces()
+        assert set(eng.traces) == {1, ecfg.prefill_chunk}
+        assert sum(eng.traces.values()) == 2
+
+    def test_retrace_is_detected(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig())
+        eng.traces = {1: 1, 7: 1}       # simulate an off-contract width
+        with pytest.raises(AssertionError):
+            eng.assert_bounded_traces()
+
+
+class TestPreemption:
+    def test_eviction_requeues_and_completes(self, tiny):
+        """Pool pressure mid-decode: the youngest request is evicted
+        (recompute preemption), re-prefills prompt + generated tokens, and
+        still completes with its full token budget."""
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=2, block_size=2, num_blocks=8,
+                            max_blocks_per_slot=8, prefill_chunk=4)
+        eng = ServingEngine(model, params, ecfg)
+        r1 = eng.submit(_prompt(41, 4), 10)    # grows to 14 tokens = 7 blocks
+        r2 = eng.submit(_prompt(42, 4), 10)    # both cannot fit (14 > 8 blocks)
+        eng.run()
+        eng.assert_bounded_traces()
+        assert r1.state == r2.state == "finished"
+        assert len(r1.out_tokens) == len(r2.out_tokens) == 10
+        assert r1.preemptions + r2.preemptions >= 1
+        assert eng.alloc.num_free == ecfg.num_blocks   # everything returned
+
+
+class TestLCDThroughEngine:
+    def test_fused_interpret_serving_matches_ref(self, tiny):
+        """Two staggered requests through the LCD fused kernels (interpret
+        mode) == the gather-contraction engine run, token for token — the
+        continuous engine and the fused GEMM compose."""
+        cfg, model, params = tiny
+        cparams, _ = compress_model(params, target_centroids=8)
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=8,
+                            max_blocks_per_slot=4, prefill_chunk=8)
+
+        def run_two():
+            eng = ServingEngine(model, cparams, ecfg)
+            a = eng.submit(_prompt(51, 6), 3)
+            eng.step()                      # a mid-prefill when b arrives
+            b = eng.submit(_prompt(52, 4), 3)
+            eng.run()
+            eng.assert_bounded_traces()
+            return a.out_tokens, b.out_tokens
+
+        ref = run_two()
+        with lut_serving("interpret"):
+            fused = run_two()
+        assert ref == fused
