@@ -1,6 +1,7 @@
 """Shared benchmark infrastructure: trained tiny teacher models (cached per
 process) + CSV emission in the harness's `name,us_per_call,derived` format."""
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import functools

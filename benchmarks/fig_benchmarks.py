@@ -4,12 +4,10 @@ import glob
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed, trained_proxy
-from repro.core import clustering as C
 from repro.core.distill import LCDConfig, distill_layer
 from repro.core.hessian import diag_hessian_from_inputs
 from repro.core.quantize import clustering_vs_quant_mse

@@ -3,7 +3,6 @@
 On CPU we report (a) interpret-mode wall time (correctness path, NOT a perf
 claim) and (b) the roofline byte model for v5e: weight-stream bytes per GEMV
 for bf16 vs packed int4 codes — the quantity the decode speedup rides on."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

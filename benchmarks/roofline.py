@@ -3,9 +3,7 @@ per-(arch x shape x mesh) three-term roofline rows + a markdown table for
 EXPERIMENTS.md."""
 import glob
 import json
-import os
 
-import numpy as np
 
 from benchmarks.common import emit
 

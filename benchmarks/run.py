@@ -1,8 +1,11 @@
 """Benchmark entry point: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only table2]
+    PYTHONPATH=src python -m benchmarks.run --only decode,serving,spec --smoke
 
-Emits `name,us_per_call,derived` CSV rows (benchmarks/common.emit).
+Emits `name,us_per_call,derived` CSV rows (benchmarks/common.emit). Exits
+nonzero if ANY selected suite raises — the parity assertions inside the
+serving/spec smoke suites are what the CI bench-smoke job gates on.
 """
 import argparse
 import sys
@@ -11,18 +14,20 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single suite: "
+                    help="comma-separated suite subset: "
                          "table1|table2|table3|figs|kernel|roofline|decode|"
-                         "serving")
+                         "serving|spec")
     ap.add_argument("--smoke", action="store_true", default=True,
-                    help="decode suite: reduced config, few tokens, CPU/"
-                         "interpret friendly (default; --no-smoke for full)")
+                    help="decode/serving/spec suites: reduced config, few "
+                         "tokens, CPU/interpret friendly (default; "
+                         "--no-smoke for full)")
     ap.add_argument("--no-smoke", dest="smoke", action="store_false")
     args = ap.parse_args()
 
     from benchmarks import (decode_bench, fig_benchmarks, kernel_bench,
-                            roofline, serving_bench, table1_clustering,
-                            table2_baselines, table3_smoothing)
+                            roofline, serving_bench, spec_bench,
+                            table1_clustering, table2_baselines,
+                            table3_smoothing)
 
     suites = {
         "table1": table1_clustering.run,
@@ -39,9 +44,16 @@ def main() -> None:
         # --smoke mode asserts single-request parity — the documented
         # pre-merge smoke gate (README)
         "serving": lambda: serving_bench.run(smoke=args.smoke),
+        # self-speculative decoding: accepted-length distribution + latency
+        # vs the plain engine; --smoke asserts bit-equal parity and mean
+        # accepted length > 1 (DESIGN.md §8); emits BENCH_spec.json
+        "spec": lambda: spec_bench.run(smoke=args.smoke),
     }
     print("name,us_per_call,derived")
-    todo = [args.only] if args.only else list(suites)
+    todo = args.only.split(",") if args.only else list(suites)
+    unknown = [n for n in todo if n not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from {list(suites)}")
     failures = 0
     for name in todo:
         try:

@@ -1,0 +1,144 @@
+"""Self-speculative serving benchmark: the PR 2 continuous-batching engine
+with and without a 2-bit LCD draft (DESIGN.md §8).
+
+    PYTHONPATH=src python -m benchmarks.spec_bench --smoke
+
+Measures what speculative decoding is bought with and what it buys:
+
+  * accepted-length distribution — how many tokens each verify round of the
+    target model advances (1 = nothing accepted, k+1 = full acceptance plus
+    the bonus token). The mean is the speed multiplier on target dispatches,
+    the number a TPU deployment banks: the draft runs through the 4x-cheaper
+    2-bit LUT path, so every accepted token is a target forward saved.
+  * per-request p50/p99 latency and tokens/s for the speculative engine next
+    to the plain PR 2 engine on the SAME Poisson workload;
+  * the correctness contracts, asserted on every --smoke run: speculative
+    output is BIT-EQUAL to the non-speculative engine per request (greedy
+    verification must never change anyone's tokens), the bounded-trace set
+    holds with speculation on, and the mean accepted length exceeds 1 (the
+    draft earns its keep on the trained smoke model).
+
+The smoke model is the trained llama2-7b proxy (benchmarks/common.py): a
+2-bit clustering of RANDOM weights agrees with its parent near-never, while
+one of TRAINED weights — peaked, structured logits — drafts long prefixes;
+acceptance is a property of the model, not of the harness. CPU wall times
+through the gather fallback are correctness telemetry, not perf claims.
+Results land in BENCH_spec.json so the trajectory is tracked PR over PR.
+"""
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, trained_proxy
+from benchmarks.serving_bench import (_percentiles, _poisson_workload,
+                                      _run_traffic)
+from repro.core.clustered_params import make_draft_params
+from repro.launch.engine import EngineConfig, ServingEngine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
+
+
+def _bench_engine(name, model, params, ecfg, workload, vocab, seed,
+                  draft_params=None):
+    engine = ServingEngine(model, params, ecfg, draft_params=draft_params)
+    t0 = engine.clock()
+    reqs = _run_traffic(engine, workload, vocab, seed)
+    wall = engine.clock() - t0
+    gen_total = sum(len(r.out_tokens) for r in reqs)
+    row = {
+        "requests": len(reqs), "generated_tokens": gen_total,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(gen_total / max(wall, 1e-9), 2),
+        "latency_s": _percentiles([r.finish_t - r.submit_t for r in reqs]),
+        "ttft_s": _percentiles([r.first_token_t - r.submit_t for r in reqs]),
+        "scheduler_steps": engine.steps,
+        "traces": {str(k): v for k, v in engine.traces.items()},
+    }
+    if draft_params is not None:
+        row.update(engine.acceptance_summary())
+    emit(f"spec/{name}", wall * 1e6,
+         f"tok_s={row['tokens_per_s']};p50={row['latency_s']['p50']};"
+         f"p99={row['latency_s']['p99']}")
+    return row, reqs
+
+
+def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
+    if smoke:
+        n_req, max_prompt, gen = 5, 12, 6
+        geom = dict(num_slots=3, block_size=4, num_blocks=24,
+                    max_blocks_per_slot=6, prefill_chunk=8)
+    else:
+        n_req, max_prompt, gen = 24, 48, 32
+        geom = dict(num_slots=6, block_size=8, num_blocks=96,
+                    max_blocks_per_slot=12, prefill_chunk=16)
+
+    cfg, model, params, _, _, _ = trained_proxy("llama2-7b-proxy")
+    draft_params, draft_report = make_draft_params(
+        params, draft_centroids=draft_centroids)
+    workload = _poisson_workload(np.random.default_rng(0), n_req, max_prompt,
+                                 gen, mean_gap_steps=2.0)
+
+    base_row, base_reqs = _bench_engine(
+        "baseline_tokens_per_s", model, params, EngineConfig(**geom),
+        workload, cfg.vocab, seed=7)
+    spec_row, spec_reqs = _bench_engine(
+        "speculative_tokens_per_s", model, params,
+        EngineConfig(speculative_k=k, draft_centroids=draft_centroids, **geom),
+        workload, cfg.vocab, seed=7, draft_params=draft_params)
+
+    # greedy verification must not change anyone's output: same workload, same
+    # prompts, so the two engines must agree request for request, bit for bit
+    mismatches = [r.rid for b, r in zip(base_reqs, spec_reqs)
+                  if b.out_tokens != r.out_tokens]
+    assert not mismatches, (
+        f"speculative output diverged from the plain engine: {mismatches}")
+    if smoke:
+        assert spec_row["mean_accepted_len"] > 1.0, (
+            "2-bit draft accepted nothing on the trained smoke model: "
+            f"{spec_row['accepted_len_hist']}")
+
+    out = {
+        "arch": "llama2-7b-proxy(trained)", "smoke": smoke,
+        "backend": jax.default_backend(),
+        "speculative_k": k, "draft_centroids": draft_centroids,
+        "draft_equiv_bits": round(draft_report.equivalent_bits, 2),
+        "engine": geom,
+        "workload": {"requests": n_req, "max_prompt": max_prompt,
+                     "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
+        "baseline": base_row, "speculative": spec_row,
+        "target_dispatch_multiplier": spec_row["mean_accepted_len"],
+        "verified_bit_equal": True,
+        "note": ("CPU gather-fallback wall times are correctness telemetry; "
+                 "the dispatch multiplier is the hardware-portable number"),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("spec/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
+    emit("spec/mean_accepted_len", 0.0,
+         f"mean={spec_row['mean_accepted_len']:.2f};"
+         f"hist={spec_row['accepted_len_hist']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="trained proxy model, few requests, CPU friendly; "
+                         "asserts bit-equal parity and accepted length > 1")
+    ap.add_argument("--k", type=int, default=3,
+                    help="draft tokens per verify round")
+    ap.add_argument("--draft-centroids", type=int, default=4)
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, k=args.k,
+              draft_centroids=args.draft_centroids)
+    print(json.dumps({
+        "mean_accepted_len": out["speculative"]["mean_accepted_len"],
+        "accepted_len_hist": out["speculative"]["accepted_len_hist"],
+        "backend": out["backend"], "smoke": out["smoke"]}))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,14 +4,12 @@ llama2 proxy. Baselines implemented in-repo: RTN (per-channel), GPTQ
 scaled k-means at fixed K), and LCD at 8 (=3.0 bits) and 10 (=3.3 bits)
 centroids. Reports eval CE + PPL per method (paper's Wikitext2 column is the
 full-scale analogue)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed, trained_proxy
 from repro.core import clustering as C
 from repro.core.api import compress_model, default_predicate
-from repro.core.hessian import diag_hessian_from_inputs
 from repro.core.quantize import gptq, rtn_weight
 
 

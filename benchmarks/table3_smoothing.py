@@ -4,12 +4,10 @@ Rows: origin (no smoothing), fixed s_m = 0.5, fixed s_m = 0.8, adaptive (ours).
 Columns: INT8 / INT4 activation fake-quant at eval, plus the centroid count
 the weight clusterer needs after each folding (the paper's trade-off: heavier
 smoothing makes weights harder to cluster)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, trained_proxy
-from repro.core import clustering as C
 from repro.core.distill import LCDConfig, distill_layer
 from repro.core.hessian import diag_hessian_from_inputs
 from repro.core.quantize import fake_quant_sym

@@ -15,6 +15,7 @@ TIER1_MODULES = {
     "test_compress_api",
     "test_decode_engine",
     "test_serving_engine",
+    "test_speculative",
 }
 
 

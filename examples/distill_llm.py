@@ -12,7 +12,8 @@ LLaMA-2-7B subject, reduced widths), then runs the complete LCD pipeline:
 
 Prints a Table-1-style summary (baseline vs LCD CE, centroid counts).
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
@@ -21,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import compress_model, is_clustered
+from repro.core.api import compress_model
 from repro.data.pipeline import DataConfig, SyntheticLM, calibration_batches
 from repro.models.config import get_config, reduced
 from repro.models.registry import get_model, lm_loss

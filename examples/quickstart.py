@@ -7,12 +7,12 @@
    progressive/speculative centroid optimization) to <= 8 centroids (3 bits);
 3. serve both models and compare quality + weight bytes.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.api import compress_model
 from repro.data.pipeline import DataConfig, SyntheticLM, calibration_batches

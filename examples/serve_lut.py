@@ -5,15 +5,15 @@ the continuous-batching engine with its paged KV cache (DESIGN.md §5).
 
     PYTHONPATH=src python examples/serve_lut.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clustering as C
-from repro.core.lut import build_lut_layer, lut_forward, pack4
+from repro.core.lut import build_lut_layer, pack4
 from repro.core.smoothing import adaptive_smooth, fold_into_weight
 from repro.kernels.ops import lut_gemm_int8
 from repro.core.smoothing import smooth_quant_input
@@ -64,7 +64,7 @@ def layer_demo():
 def engine_demo():
     """Two staggered requests through the continuous-batching engine
     (DESIGN.md §5), narrating each scheduler event it demonstrates."""
-    from repro.launch.engine import EngineConfig, ServingEngine, build_engine
+    from repro.launch.engine import EngineConfig, build_engine
 
     # small pool on purpose: 2 slots, 12 blocks of 4 tokens — enough to show
     # admission, interleaved prefill/decode and block free/reuse

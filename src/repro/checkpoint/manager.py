@@ -15,11 +15,9 @@ Fault-tolerance contract (exercised by tests/test_checkpoint.py):
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
-import tempfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -109,7 +107,7 @@ class CheckpointManager:
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         data = np.load(os.path.join(path, f"shard_{self.host_index}.npz"))
-        import ml_dtypes  # registers bfloat16 etc. with numpy
+        import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
 
         def undo_view(arr, dtype_str):
             want = np.dtype(dtype_str)

@@ -28,9 +28,8 @@ import numpy as np
 
 from repro.core import clustering as C
 from repro.core.distill import DistillReport, LCDConfig, distill_layer, distill_layer_to_k
-from repro.core.hessian import empirical_fisher
-from repro.core.smoothing import SmoothResult, adaptive_smooth, fold_into_weight
-from repro.utils import logger, human_count
+from repro.core.smoothing import adaptive_smooth, fold_into_weight
+from repro.utils import logger
 
 
 class ClusteredTensor(NamedTuple):

@@ -1,4 +1,5 @@
-"""Abstract ClusteredTensor parameter trees for LCD serving at scale.
+"""Abstract ClusteredTensor parameter trees for LCD serving at scale, plus
+the 2-bit draft clustering used for self-speculative decoding.
 
 For the dry-run and the serve path we need the *shape* of an LCD-compressed
 model without running distillation on a 100B-parameter tree: this module maps
@@ -10,16 +11,22 @@ The codes inherit the dense weight's sharding names; codebooks/smooth vectors
 are tiny and replicated. Codes pack two 4-bit indices per byte along d_in —
 the dry-run's memory_analysis then shows the real ~4x weight-byte reduction
 (vs bf16) that the serving roofline banks on.
+
+`make_draft_params` (DESIGN.md §8) builds the serving engine's speculative
+draft: every LCD-compressed model already contains its own cheap approximation
+— the same weights clustered down to 4 centroids (2 bits) — so the draft model
+costs no extra training and no second checkpoint.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import ClusteredTensor, default_predicate
+from repro.core.api import (ClusteredTensor, _unpack_codes, clustered_dequant,
+                            compress_model, default_predicate, is_clustered)
 from repro.models import params as PT
 from repro.models.registry import Model
 
@@ -64,7 +71,6 @@ def clustered_abstract(model: Model) -> Tuple[Any, Any, Dict[str, int]]:
         if _eligible(path, decl):
             *lead, d_in, d_out = decl.shape
             assert d_in % 2 == 0, (path, decl.shape)
-            lead_names = ",".join(names.split(",")[:len(lead)])
             w_names = names.split(",")
             codes_shape = tuple(lead) + (d_in // 2, d_out)
             ct = ClusteredTensor(
@@ -100,8 +106,6 @@ def materialize_clustered(model: Model, key: jax.Array) -> Any:
 
     def one(leaf, k):
         if isinstance(leaf, ClusteredTensor):
-            d2, dout = leaf.codes.shape[-2], leaf.codes.shape[-1]
-            lead = leaf.codes.shape[:-2]
             k1, k2 = jax.random.split(k)
             codes = jax.random.randint(k1, leaf.codes.shape, 0, 255, jnp.int32
                                        ).astype(jnp.uint8)
@@ -115,3 +119,44 @@ def materialize_clustered(model: Model, key: jax.Array) -> Any:
     keys = jax.random.split(key, len(leaves))
     return jax.tree_util.tree_unflatten(
         treedef, [one(l, k) for l, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative draft clustering (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def dequantize_params(params) -> Any:
+    """Replace every ClusteredTensor leaf with its dense f32 equivalent
+    W = codebook[codes] / smooth (handles packed codes and stacked (L, ...)
+    leaves). Dense leaves pass through untouched."""
+
+    def one(leaf):
+        if not is_clustered(leaf):
+            return leaf
+        if leaf.codebook.ndim == 1:
+            return clustered_dequant(leaf)
+        # stacked layers/experts: per-slice codebooks (L, K)
+        codes = _unpack_codes(leaf.codes, leaf.smooth.shape[-1])
+        dense = jax.vmap(lambda cb, cd: cb[cd])(leaf.codebook, codes)
+        return dense / leaf.smooth[..., :, None]
+
+    return jax.tree_util.tree_map(one, params, is_leaf=is_clustered)
+
+
+def make_draft_params(params, *, draft_centroids: int = 4,
+                      predicate=default_predicate) -> Tuple[Any, Any]:
+    """2-bit LCD draft of `params` for self-speculative decoding.
+
+    The draft is the model's OWN weights re-clustered to `draft_centroids`
+    (4 = 2 bits, the paper's extreme low-bit point): no second checkpoint, no
+    draft training. If `params` is already LCD-compressed, clustered leaves
+    are dequantized first so the draft tracks the weights the target actually
+    serves. Embeddings, norms and the lm_head stay full precision (they are
+    never clustered, DESIGN.md §6), so the draft's vocab distribution lives in
+    the same space as the target's — which is what makes greedy draft tokens
+    land often enough to be worth verifying.
+
+    Returns (draft_params, CompressReport)."""
+    dense = dequantize_params(params)
+    return compress_model(dense, target_centroids=draft_centroids,
+                          predicate=predicate)

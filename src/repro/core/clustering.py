@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils import logger
 
 # Maximum number of centroids the fixed-size cluster state can hold. DBCI
 # empirically yields 15-20 (paper §3.1); 32 leaves headroom for speculative

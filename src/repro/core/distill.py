@@ -28,14 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clustering as C
-from repro.utils import logger
 
 
 @dataclasses.dataclass

@@ -15,7 +15,7 @@ distillation where layer inputs are inconvenient to capture.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,13 +20,11 @@ codebook contraction fused into an MXU matmul (DESIGN.md §2): identical numeric
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.utils import round_up
 
 
 @dataclasses.dataclass

@@ -25,8 +25,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import dequantize_sym, quantize_sym, sym_scale
-
 
 @dataclasses.dataclass
 class SmoothResult:

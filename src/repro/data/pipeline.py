@@ -12,7 +12,7 @@ split for the LCD smoothing/Hessian passes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -23,7 +23,6 @@ dot flops match exactly) and against scan-vs-unroll equivalence.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

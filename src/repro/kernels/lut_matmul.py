@@ -37,7 +37,6 @@ streamed so the VMEM working set is  bm*bk (x) + bk*bn/2 (codes) + bm*bn (acc).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ int4 codes) parameterization, i.e. the paper's deployment; default bf16.
 """
 
 import argparse
-import dataclasses
 import json
 import sys
 import time

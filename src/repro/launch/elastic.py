@@ -19,10 +19,8 @@ tests/test_elastic.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.sharding import tree_shardings, use_rules

@@ -28,6 +28,15 @@ Continuous batching (`ServingEngine`)
     Out-of-block pressure is resolved by recompute preemption: the youngest
     running request is evicted back to the queue (its blocks freed) and later
     re-prefills its prompt plus the tokens it had already generated.
+
+Self-speculative decoding (`EngineConfig.speculative_k > 0`, DESIGN.md §8)
+    The model's own 2-bit LCD clustering drafts `k` tokens per round through
+    the cheap serving path; the target model verifies all of them in ONE
+    batched forward over the paged cache and accepts the longest matching
+    prefix, so greedy output stays bit-equal to target-only decoding while
+    each target dispatch advances every slot by 1..k+1 tokens. Rejected
+    tokens roll back by bookkeeping alone: cache entries past `lengths` are
+    unobservable, so not advancing `lengths` IS the rollback.
 """
 from __future__ import annotations
 
@@ -199,6 +208,10 @@ class Request:
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # speculative decoding: draft tokens accepted AND emitted per verify
+    # round (0..k each; round i emits accept_lens[i] + 1 tokens — a round
+    # whose acceptance overshoots the token budget records the capped count)
+    accept_lens: List[int] = dataclasses.field(default_factory=list)
 
     # tokens to (re)prefill this running stint, SNAPSHOTTED at admission:
     # the prompt plus anything generated before a preemption. Tokens decoded
@@ -232,6 +245,10 @@ class EngineConfig:
     num_blocks: int = 64              # physical pool size (all slots share it)
     max_blocks_per_slot: int = 16     # block-table width (max seq / block_size)
     prefill_chunk: int = 16           # token-window width of the mixed step
+    # speculative decoding (DESIGN.md §8): tokens drafted by the 2-bit LCD
+    # draft per verify round; 0 = off. The verify window is speculative_k + 1.
+    speculative_k: int = 0
+    draft_centroids: int = 4          # 2-bit self-draft (build_engine default)
 
     @property
     def max_seq(self) -> int:
@@ -253,15 +270,33 @@ class ServingEngine:
         engine = ServingEngine(model, params, EngineConfig(...))
         engine.submit(prompt, max_new_tokens=32)
         finished = engine.run()          # drive until queue + slots drain
-        engine.assert_bounded_traces()   # <= 2 compiled step shapes
+        engine.assert_bounded_traces()   # bounded set of compiled step shapes
+
+    Speculative mode (ecfg.speculative_k > 0) additionally takes the 2-bit
+    draft clustering as `draft_params` (core/clustered_params.py
+    make_draft_params) and a second block pool mirrors the target's: the
+    draft cache reuses the SAME block tables and allocator grants, so one
+    reservation covers both fidelities.
     """
 
-    def __init__(self, model: Model, params, ecfg: EngineConfig = EngineConfig(),
-                 mesh=None, clock=time.perf_counter):
+    def __init__(self, model: Model, params, ecfg: Optional[EngineConfig] = None,
+                 mesh=None, clock=time.perf_counter, draft_params=None):
+        # default constructed per engine, not evaluated once in the signature
+        # (EngineConfig is frozen today, so the shared instance was inert —
+        # this hardens against any future mutable field)
+        ecfg = EngineConfig() if ecfg is None else ecfg
         assert model.supports_paging(), (
             f"family '{model.cfg.family}' has no paged decode path")
         assert ecfg.num_blocks >= ecfg.max_blocks_per_slot, ecfg
         self.model, self.params, self.ecfg = model, params, ecfg
+        self.spec_k = ecfg.speculative_k
+        self.draft_params = draft_params
+        if self.spec_k:
+            assert model.supports_speculation(), (
+                f"family '{model.cfg.family}' has no paged verify path")
+            assert draft_params is not None, (
+                "speculative decoding needs draft_params (see "
+                "core/clustered_params.py make_draft_params)")
         self.mesh = mesh if mesh is not None else make_host_mesh()
         self.clock = clock
         self.alloc = BlockAllocator(ecfg.num_blocks)
@@ -275,19 +310,29 @@ class ServingEngine:
         self.finished: List[Request] = []
         with use_rules(self.mesh, fsdp=False):
             self.cache = model.init_paged_cache(ecfg.num_blocks, ecfg.block_size)
-        self.traces: Dict[int, int] = {}     # token-window width T -> count
-        self._step_fns: Dict[int, Any] = {}
+            # the draft's own K/V pool (draft weights produce different K/V),
+            # same geometry and block ids as the target's
+            self.draft_cache = (model.init_paged_cache(
+                ecfg.num_blocks, ecfg.block_size) if self.spec_k else None)
+        # trace bookkeeping: width T -> count in normal mode; (role, width) ->
+        # count in speculative mode ("prefill" / "draft" / "verify")
+        self.traces: Dict[Any, int] = {}
+        self._step_fns: Dict[Any, Any] = {}
         self._next_rid = 0
         self.steps = 0
+        self.spec_rounds = 0
 
     # -- public API ---------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        need = len(prompt) + max_new_tokens
+        # speculative rounds write up to k tokens past the accepted length
+        # before rolling back, so a request needs k tokens of cache headroom
+        need = len(prompt) + max_new_tokens + self.spec_k
         assert need <= self.ecfg.max_seq, (
-            f"request needs {need} tokens; engine max_seq is "
-            f"{self.ecfg.max_seq} (max_blocks_per_slot * block_size)")
+            f"request needs {need} tokens (incl. speculative headroom "
+            f"{self.spec_k}); engine max_seq is {self.ecfg.max_seq} "
+            f"(max_blocks_per_slot * block_size)")
         r = Request(self._next_rid, prompt, max_new_tokens,
                     submit_t=self.clock())
         self._next_rid += 1
@@ -308,25 +353,61 @@ class ServingEngine:
         raise RuntimeError(f"engine did not drain in {max_steps} steps")
 
     def assert_bounded_traces(self) -> None:
-        """The bounded-trace contract: the step compiles in at most TWO
-        shapes — (num_slots, prefill_chunk) and (num_slots, 1) — each exactly
-        once, no matter how requests arrive or interleave."""
-        allowed = {1, self.ecfg.prefill_chunk}
+        """The bounded-trace contract: no matter how requests arrive or
+        interleave, the engine compiles a FIXED set of computations, each
+        exactly once. Normal mode: at most two step widths — prefill_chunk
+        and 1. Speculative mode: at most three computations — the combined
+        two-model prefill step (width prefill_chunk), the scan-compiled
+        k-token draft, and the width-(k+1) verify (DESIGN.md §8)."""
+        if self.spec_k:
+            allowed = {("prefill", self.ecfg.prefill_chunk),
+                       ("draft", self.spec_k),
+                       ("verify", self.spec_k + 1)}
+        else:
+            allowed = {1, self.ecfg.prefill_chunk}
         assert set(self.traces) <= allowed, (
-            f"unexpected step widths {set(self.traces)} (allowed {allowed})")
+            f"unexpected step shapes {set(self.traces)} (allowed {allowed})")
         assert all(c == 1 for c in self.traces.values()), (
             f"a step shape retraced: {self.traces}")
+
+    def acceptance_summary(self) -> Dict[str, Any]:
+        """Accepted-length accounting over every request this engine has
+        seen. `accepted_len` counts tokens emitted per verify round (the
+        accepted draft prefix + the target's correction/bonus token), so its
+        mean is the speculative speed multiplier on target dispatches."""
+        live = [x for x in self.slots if x is not None] + list(self.queue)
+        entries = [a for r in self.finished + live for a in r.accept_lens]
+        hist: Dict[int, int] = {}
+        for a in entries:
+            hist[a + 1] = hist.get(a + 1, 0) + 1
+        return {
+            # engine-level verify dispatches vs per-slot accept entries: one
+            # round serves every decoding slot, so entries >= rounds
+            "spec_rounds": self.spec_rounds,
+            "accept_entries": len(entries),
+            "mean_accepted_len": (float(np.mean([a + 1 for a in entries]))
+                                  if entries else 0.0),
+            "accepted_len_hist": {str(n): c for n, c in sorted(hist.items())},
+        }
 
     # -- scheduler ----------------------------------------------------------
 
     def step(self) -> List[Request]:
         """One scheduler iteration: admit from the queue, run one traced
         step over every active slot, harvest finished requests. Returns the
-        requests that finished during this step."""
+        requests that finished during this step.
+
+        In speculative mode a pure-decode step becomes a draft/verify ROUND
+        (`_spec_round`): k draft tokens from the 2-bit model, one batched
+        verify from the target. Steps with a prefilling slot keep the mixed
+        prefill shape — decoding slots still advance one plain token there,
+        through the combined step that feeds both caches."""
         self._admit()
         active = [(s, r) for s, r in enumerate(self.slots) if r is not None]
         if not active:
             return []
+        if self.spec_k and not any(r.prefilling for _, r in active):
+            return self._spec_round(active)
         ecfg = self.ecfg
         t = ecfg.prefill_chunk if any(r.prefilling for _, r in active) else 1
 
@@ -355,10 +436,19 @@ class ServingEngine:
             n_new[s] = w
 
         with use_rules(self.mesh, fsdp=False):
-            next_tok, self.cache = self._step_fn(t)(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(self.lengths), jnp.asarray(n_new),
-                jnp.asarray(self.block_tables))
+            if self.spec_k:
+                # combined step: the draft cache ingests the same tokens so
+                # it stays in lockstep with the target's accepted prefix
+                next_tok, self.cache, self.draft_cache = self._spec_prefill_fn(t)(
+                    self.params, self.draft_params, self.cache,
+                    self.draft_cache, jnp.asarray(tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(n_new),
+                    jnp.asarray(self.block_tables))
+            else:
+                next_tok, self.cache = self._step_fn(t)(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(n_new),
+                    jnp.asarray(self.block_tables))
         next_tok = np.asarray(next_tok)
         self.steps += 1
 
@@ -377,6 +467,92 @@ class ServingEngine:
                     done.append(r)
         return done
 
+    # -- speculative round (DESIGN.md §8) ------------------------------------
+
+    def _spec_round(self, active) -> List[Request]:
+        """One draft/verify round over every decoding slot.
+
+        1. RESERVE: a round writes K/V up to `lengths + k` (the pending token
+           plus k drafts) before any rollback, so each slot's block table must
+           cover lengths + k + 1 tokens up front — a slot that cannot be
+           covered sits the round out (n_new = 0 masks it everywhere).
+        2. DRAFT: one scan-compiled dispatch of the 2-bit model generates k
+           greedy tokens per slot (width-1 steps inside lax.scan; the draft
+           cache advances k positions).
+        3. VERIFY: one width-(k+1) target forward over [pending, d_1..d_k]
+           returns the target's argmax AFTER every fed token. The longest
+           prefix of drafts matching those argmaxes is accepted; the round
+           emits accepted + 1 tokens (the +1 is the target's own next token —
+           the correction on mismatch, the bonus token on full acceptance).
+        4. ROLLBACK: `lengths` advances by exactly the emitted count, so the
+           K/V written for rejected drafts stays past the readable horizon
+           and is overwritten by the next round. The draft cache rolls back
+           the same way — both pools share block tables and `lengths`.
+        """
+        ecfg, k = self.ecfg, self.spec_k
+        for s, r in active:
+            if self.slots[s] is not r:
+                continue               # evicted by an earlier reservation
+            self._ensure_blocks(r, int(self.lengths[s]) + k + 1)
+
+        # participation is decided after ALL reservations: a reservation may
+        # have evicted a slot that reserved earlier
+        live: List[tuple] = []
+        for s, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if len(r.blocks) * ecfg.block_size >= int(self.lengths[s]) + k + 1:
+                assert r.out_tokens, "decoding slot must have a pending token"
+                live.append((s, r))
+        if not live:
+            self.steps += 1            # starved round: everyone waits
+            return []
+
+        pend = np.zeros((ecfg.num_slots, 1), np.int32)
+        n_one = np.zeros(ecfg.num_slots, np.int32)
+        for s, r in live:
+            pend[s, 0] = r.out_tokens[-1]
+            n_one[s] = 1
+
+        with use_rules(self.mesh, fsdp=False):
+            drafts, self.draft_cache = self._draft_fn()(
+                self.draft_params, self.draft_cache, jnp.asarray(pend),
+                jnp.asarray(self.lengths), jnp.asarray(n_one),
+                jnp.asarray(self.block_tables))
+            drafts = np.asarray(drafts)                      # (S, k)
+
+            vtokens = np.zeros((ecfg.num_slots, k + 1), np.int32)
+            n_ver = np.zeros(ecfg.num_slots, np.int32)
+            for s, r in live:
+                vtokens[s, 0] = r.out_tokens[-1]
+                vtokens[s, 1:] = drafts[s]
+                n_ver[s] = k + 1
+            target, self.cache = self._verify_fn()(
+                self.params, self.cache, jnp.asarray(vtokens),
+                jnp.asarray(self.lengths), jnp.asarray(n_ver),
+                jnp.asarray(self.block_tables))
+        target = np.asarray(target)                          # (S, k+1)
+        self.steps += 1
+        self.spec_rounds += 1
+
+        done: List[Request] = []
+        for s, r in live:
+            accepted = 0
+            while accepted < k and target[s, accepted] == drafts[s, accepted]:
+                accepted += 1
+            emit = [int(t) for t in target[s, :accepted + 1]]
+            emit = emit[:r.max_new_tokens - len(r.out_tokens)]
+            # record the REALIZED advance (budget cap included), so the mean
+            # accepted length is the true target-dispatch multiplier
+            r.accept_lens.append(len(emit) - 1)
+            r.out_tokens.extend(emit)
+            # the rollback: only the emitted prefix becomes readable cache
+            self.lengths[s] += len(emit)
+            if r.done:
+                self._finish(r)
+                done.append(r)
+        return done
+
     # -- internals ----------------------------------------------------------
 
     def _step_fn(self, t: int):
@@ -393,6 +569,85 @@ class ServingEngine:
 
             self._step_fns[t] = step
         return self._step_fns[t]
+
+    def _spec_prefill_fn(self, t: int):
+        """Speculative-mode mixed step: ONE traced computation feeds the same
+        token window through BOTH models so the draft cache tracks the target
+        cache through prefill (and through the one-token decode a non-
+        prefilling slot does while others prefill). The target's logits pick
+        the next token; the draft's head output is dead code XLA removes."""
+        key = ("prefill", t)
+        if key not in self._step_fns:
+            model, cfg = self.model, self.model.cfg
+
+            @partial(jax.jit, donate_argnums=(2, 3))
+            def step(params, dparams, cache, dcache, tokens, lengths, n_new,
+                     block_tables):
+                self.traces[key] = self.traces.get(key, 0) + 1
+                logits, cache = model.paged_decode(
+                    params, cache, tokens, lengths, n_new, block_tables)
+                _, dcache = model.paged_decode(
+                    dparams, dcache, tokens, lengths, n_new, block_tables)
+                nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
+                return nxt.astype(jnp.int32), cache, dcache
+
+            self._step_fns[key] = step
+        return self._step_fns[key]
+
+    def _draft_fn(self):
+        """k greedy draft tokens per slot in ONE dispatch: width-1 draft
+        steps scan-compiled (the §2 static-decode structure applied to the
+        2-bit model), draft cache donated through the loop.
+
+        The scan runs k+1 feeds, not k: the last feed pushes d_k through the
+        draft so its K/V lands at position lengths+k BEFORE acceptance is
+        known. Without it a fully-accepted round (lengths += k+1) would leave
+        a permanent hole in the draft cache at d_k's position — the draft
+        would attend stale zeros there forever after, and acceptance would
+        silently collapse a few rounds into every long generation. The
+        (k+1)-th output token is discarded; rejected feeds roll back by the
+        same lengths masking as everything else (DESIGN.md §8)."""
+        key = ("draft", self.spec_k)
+        if key not in self._step_fns:
+            model, cfg, k = self.model, self.model.cfg, self.spec_k
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def draft(dparams, dcache, tok0, lengths, n_one, block_tables):
+                self.traces[key] = self.traces.get(key, 0) + 1
+
+                def body(carry, _):
+                    tok, dcache, dlen = carry
+                    logits, dcache = model.paged_decode(
+                        dparams, dcache, tok, dlen, n_one, block_tables)
+                    nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
+                    nxt = nxt.astype(jnp.int32)
+                    return (nxt[:, None], dcache, dlen + n_one), nxt
+
+                (_, dcache, _), toks = jax.lax.scan(
+                    body, (tok0, dcache, lengths), None, length=k + 1)
+                return toks.swapaxes(0, 1)[:, :k], dcache    # (S, k)
+
+            self._step_fns[key] = draft
+        return self._step_fns[key]
+
+    def _verify_fn(self):
+        """Target verification: one width-(k+1) forward whose argmax at every
+        fed position is the target's next-token choice there (bit-equal to
+        what k+1 sequential width-1 steps would pick)."""
+        key = ("verify", self.spec_k + 1)
+        if key not in self._step_fns:
+            model, cfg = self.model, self.model.cfg
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def verify(params, cache, tokens, lengths, n_new, block_tables):
+                self.traces[key] = self.traces.get(key, 0) + 1
+                logits, cache = model.paged_verify(
+                    params, cache, tokens, lengths, n_new, block_tables)
+                nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
+                return nxt.astype(jnp.int32), cache
+
+            self._step_fns[key] = verify
+        return self._step_fns[key]
 
     def _admit(self) -> None:
         """FCFS admission: a queued request enters the first free slot once
@@ -472,10 +727,15 @@ class ServingEngine:
 # ---------------------------------------------------------------------------
 
 def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
-                 target_centroids: int = 8, ecfg: EngineConfig = EngineConfig(),
-                 seed: int = 0, params=None):
+                 target_centroids: int = 8, ecfg: Optional[EngineConfig] = None,
+                 seed: int = 0, params=None, draft_params=None):
     """(engine, params): model + (optionally LCD-compressed) params wrapped in
-    a ready ServingEngine."""
+    a ready ServingEngine.
+
+    With `ecfg.speculative_k > 0` and no `draft_params`, the 2-bit self-draft
+    is built here by re-clustering the target's weights
+    (core/clustered_params.py make_draft_params)."""
+    ecfg = EngineConfig() if ecfg is None else ecfg
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
@@ -489,4 +749,10 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
             params, report = compress_model(params,
                                             target_centroids=target_centroids)
             logger.info("LCD: " + report.summary())
-    return ServingEngine(model, params, ecfg, mesh=mesh), params
+        if ecfg.speculative_k and draft_params is None:
+            from repro.core.clustered_params import make_draft_params
+            draft_params, report = make_draft_params(
+                params, draft_centroids=ecfg.draft_centroids)
+            logger.info("LCD draft: " + report.summary())
+    return ServingEngine(model, params, ecfg, mesh=mesh,
+                         draft_params=draft_params), params

@@ -16,10 +16,8 @@ mesh from the live host set).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

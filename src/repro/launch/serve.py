@@ -10,6 +10,12 @@ Continuous batching (DESIGN.md §5; staggered requests, paged KV cache):
     PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --reduced \
         --lcd --continuous --requests 6 --tokens 16
 
+Self-speculative decoding (DESIGN.md §8; the model's own 2-bit clustering
+drafts k tokens per verify round, output bit-equal to plain greedy):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --reduced \
+        --continuous --speculative 3 --requests 6 --tokens 16
+
 All engine logic — the two-trace static path (`serve`, `build_decode_fns`)
 and the slot/block continuous engine (`ServingEngine`) — lives in
 `repro.launch.engine`; this module only parses flags and reports. The names
@@ -22,18 +28,24 @@ import argparse
 
 import numpy as np
 
-# re-exported API (the engine module is the implementation)
-from repro.launch.engine import (BlockAllocator, EngineConfig, Request,  # noqa: F401
+# re-exported API (the engine module is the implementation); __all__ marks
+# the compatibility names so the lint gate doesn't read them as unused
+from repro.launch.engine import (BlockAllocator, EngineConfig, Request,
                                  ServingEngine, build_decode_fns,
                                  build_engine, serve)
 from repro.utils import logger
+
+__all__ = ["BlockAllocator", "EngineConfig", "Request", "ServingEngine",
+           "build_decode_fns", "build_engine", "serve", "main"]
 
 
 def _run_continuous(args) -> None:
     ecfg = EngineConfig(num_slots=args.slots, block_size=args.block_size,
                         num_blocks=args.blocks,
                         max_blocks_per_slot=args.blocks_per_slot,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        speculative_k=args.speculative,
+                        draft_centroids=args.draft_centroids)
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
                              ecfg=ecfg)
@@ -60,6 +72,8 @@ def _run_continuous(args) -> None:
                     f"preemptions {r.preemptions})")
     logger.info(f"continuous engine: {len(finished)} requests in "
                 f"{engine.steps} steps, traces {engine.traces}")
+    if args.speculative:
+        logger.info(f"speculative: {engine.acceptance_summary()}")
 
 
 def main() -> None:
@@ -81,7 +95,15 @@ def main() -> None:
     ap.add_argument("--blocks", type=int, default=48)
     ap.add_argument("--blocks-per-slot", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="draft K tokens per verify round through the "
+                         "model's own 2-bit clustering (continuous mode "
+                         "only; 0 = off)")
+    ap.add_argument("--draft-centroids", type=int, default=4,
+                    help="centroid count of the self-draft (4 = 2-bit)")
     args = ap.parse_args()
+    if args.speculative and not args.continuous:
+        ap.error("--speculative requires --continuous")
     if args.continuous:
         _run_continuous(args)
     else:

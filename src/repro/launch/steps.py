@@ -12,21 +12,18 @@ of the FSDP "embed" rule on parameter tables + identical specs on Adam moments.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.distributed.sharding import (ShardingRules, current_rules,
-                                        logical_to_spec, named_sharding,
-                                        parse_names, tree_shardings, use_rules)
-from repro.models.config import ModelConfig, ShapeConfig, input_specs
-from repro.models.registry import Model, get_model, lm_loss
-from repro.optim.compress import EFState, abstract_ef, apply_ef, init_ef
+from repro.distributed.sharding import (named_sharding, parse_names,
+                                        tree_shardings)
+from repro.models.config import ShapeConfig, input_specs
+from repro.models.registry import Model, lm_loss
+from repro.optim.compress import EFState, abstract_ef, apply_ef
 from repro.optim.optimizer import (AdamState, OptConfig, abstract_adam,
-                                   adam_update, init_adam)
+                                   adam_update)
 
 BATCH_NAMES = {
     "tokens": "batch,.",

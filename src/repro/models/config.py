@@ -21,7 +21,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.utils import round_up
 
@@ -143,7 +142,6 @@ class ModelConfig:
             body = self.n_layers * per
         elif self.family == "hybrid":
             di, ns = self.d_inner, self.ssm_state
-            g = 2 * ns  # B,C groups (single group)
             per = d * (2 * di + 2 * ns + self.ssm_heads) + di * d
             n_attn = self.n_layers // max(self.attn_period, 1)
             body = self.n_layers * per + attn + 2 * d * f  # shared attn + shared mlp

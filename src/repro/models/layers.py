@@ -12,15 +12,13 @@ the query heads *inside* the einsum operands; the broadcast never hits HBM.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import ClusteredTensor, is_clustered, _unpack_codes
+from repro.core.api import is_clustered, _unpack_codes
 from repro.distributed.sharding import maybe_shard
 from repro.models.config import ModelConfig
 

@@ -24,12 +24,9 @@ against the sequential scans in tests/test_linear_attn.py to <=1e-3.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 CLAMP = 30.0
 
@@ -48,11 +45,9 @@ def ssd_chunked(xh, Bt, Ct, dt, a_log, d_skip, s0, *, chunk: int = 64):
     """xh: (B,S,H,P) f32; Bt/Ct: (B,S,N); dt: (B,S,H) (post-softplus);
     s0: (B,H,P,N). Returns (y (B,S,H,P), s_final). Matches _ssd_scan."""
     b, s, h, p = xh.shape
-    n = Bt.shape[-1]
     q = min(chunk, s)
     while s % q:
         q //= 2
-    nc = s // q
 
     la = -dt * jnp.exp(a_log)[None, None, :]              # log decay (B,S,H) <= 0
     xs = _chunk(xh, q)                                    # (nc,B,Q,H,P)

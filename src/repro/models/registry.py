@@ -10,7 +10,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,9 @@ class Model:
     _paged_decode: Optional[Callable] = None
     _init_paged_cache: Optional[Callable] = None
     paged_cache_names: Optional[Dict[str, str]] = None
+    # multi-token verification over the paged cache (speculative decoding,
+    # DESIGN.md §8): same trunk as _paged_decode, logits at every position
+    _paged_verify: Optional[Callable] = None
 
     def init(self, key: jax.Array):
         return PT.init_params(key, self.table, self.cfg.jnp_dtype)
@@ -72,6 +75,15 @@ class Model:
     def paged_decode(self, params, cache, tokens, lengths, n_new, block_tables):
         assert self.supports_paging(), f"{self.cfg.family}: no paged decode"
         return self._paged_decode(params, cache, tokens, lengths, n_new,
+                                  block_tables, self.cfg)
+
+    def supports_speculation(self) -> bool:
+        return self._paged_verify is not None
+
+    def paged_verify(self, params, cache, tokens, lengths, n_new, block_tables):
+        assert self.supports_speculation(), (
+            f"{self.cfg.family}: no paged verify")
+        return self._paged_verify(params, cache, tokens, lengths, n_new,
                                   block_tables, self.cfg)
 
 
@@ -140,7 +152,8 @@ def get_model(cfg: ModelConfig) -> Model:
         cfg, table_fn(cfg), apply_fn, decode_fn, ic, ac, cn,
         _paged_decode=transformer.paged_decode_step if paged else None,
         _init_paged_cache=transformer.init_paged_cache if paged else None,
-        paged_cache_names=transformer.PAGED_CACHE_NAMES if paged else None)
+        paged_cache_names=transformer.PAGED_CACHE_NAMES if paged else None,
+        _paged_verify=transformer.paged_verify_step if paged else None)
 
 
 # --- loss ---------------------------------------------------------------------

@@ -24,7 +24,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.sharding import maybe_shard
 from repro.models import params as PT

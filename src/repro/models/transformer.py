@@ -12,8 +12,6 @@ window array threaded through the scan — a single traced body handles both
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -23,8 +21,8 @@ import numpy as np
 from repro.distributed.sharding import maybe_shard
 from repro.models import params as PT
 from repro.models.config import ModelConfig
-from repro.models.layers import (attn_block, linear, mlp_block, moe_block,
-                                 norm, paged_attn_block)
+from repro.models.layers import (attn_block, mlp_block, moe_block, norm,
+                                 paged_attn_block)
 
 D = PT.ParamDecl
 
@@ -111,6 +109,19 @@ def layer_windows(cfg: ModelConfig) -> np.ndarray:
     return np.zeros(cfg.n_layers, np.int32)
 
 
+def lm_head_logits(params: Dict[str, Any], x: jax.Array,
+                   cfg: ModelConfig) -> jax.Array:
+    """Vocab projection (tied or untied) + optional final softcap, shared by
+    every forward/decode/verify head site. `x` is (..., d_model)."""
+    head = params.get("lm_head", None)
+    logits = (x @ head.astype(x.dtype)) if head is not None else (
+        x @ params["embed"].astype(x.dtype).T)
+    if cfg.final_softcap:
+        logits = (cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
+    return logits
+
+
 # ---------------------------------------------------------------------------
 # Forward (full-sequence: train / prefill)
 # ---------------------------------------------------------------------------
@@ -160,12 +171,7 @@ def forward(
     (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (blk, windows))
 
     x = norm(x, params["ln_final"], cfg.norm)
-    head = params.get("lm_head", None)
-    logits = (x @ head.astype(x.dtype)) if head is not None else (
-        x @ params["embed"].astype(x.dtype).T)
-    if cfg.final_softcap:
-        logits = (cfg.final_softcap * jnp.tanh(
-            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
+    logits = lm_head_logits(params, x, cfg)
     logits = maybe_shard(logits, "batch", None, "vocab")
     return logits, aux
 
@@ -256,12 +262,7 @@ def decode_step(
             body, (x, jnp.zeros((), jnp.float32)), (blk, windows, cache["k"], cache["v"]))
 
     x = norm(x, params["ln_final"], cfg.norm)
-    head = params.get("lm_head", None)
-    logits = (x @ head.astype(x.dtype)) if head is not None else (
-        x @ params["embed"].astype(x.dtype).T)
-    if cfg.final_softcap:
-        logits = (cfg.final_softcap * jnp.tanh(
-            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
+    logits = lm_head_logits(params, x, cfg)
     new_cache = {"k": ks, "v": vs, "pos": pos + tokens.shape[-1]}
     if int8_kv:
         new_cache["k_scale"], new_cache["v_scale"] = kss, vss
@@ -290,7 +291,7 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
 PAGED_CACHE_NAMES = {"k": "layers,blocks,.,kv,.", "v": "layers,blocks,.,kv,."}
 
 
-def paged_decode_step(
+def _paged_trunk(
     params: Dict[str, Any],
     cache: Dict[str, Any],        # {"k","v"}: (L, num_blocks, block_size, KV, D)
     tokens: jax.Array,            # (S_slots, T) — T-token window per slot
@@ -299,14 +300,9 @@ def paged_decode_step(
     block_tables: jax.Array,      # (S_slots, max_blocks) int32
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """One interleaved prefill/decode step for every slot (DESIGN.md §5).
-
-    The single traced computation serves prefilling, decoding and idle slots
-    at once: per-slot position/length/activity are data (masks), so the engine
-    compiles exactly one computation per token-window width T — the bounded-
-    trace contract tests/test_serving_engine.py asserts. Returns the logits of
-    each slot's LAST valid token (its next-token distribution) and the
-    updated block pool."""
+    """Embed + scanned layer stack over the paged KV cache; shared by the
+    decode step (last-token logits) and the verify step (all-position logits).
+    Returns (final-norm hidden states (S, T, d), updated block pool)."""
     x = params["embed"].astype(cfg.jnp_dtype)[tokens]          # (S, T, d)
     windows = jnp.asarray(layer_windows(cfg))
 
@@ -329,15 +325,56 @@ def paged_decode_step(
         body, (x, jnp.zeros((), jnp.float32)),
         (params["blocks"], windows, cache["k"], cache["v"]))
 
-    x = norm(x, params["ln_final"], cfg.norm)
+    return norm(x, params["ln_final"], cfg.norm), {"k": ks, "v": vs}
+
+
+def paged_decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],        # {"k","v"}: (L, num_blocks, block_size, KV, D)
+    tokens: jax.Array,            # (S_slots, T) — T-token window per slot
+    lengths: jax.Array,           # (S_slots,) tokens already cached per slot
+    n_new: jax.Array,             # (S_slots,) valid tokens among the T fed
+    block_tables: jax.Array,      # (S_slots, max_blocks) int32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One interleaved prefill/decode step for every slot (DESIGN.md §5).
+
+    The single traced computation serves prefilling, decoding and idle slots
+    at once: per-slot position/length/activity are data (masks), so the engine
+    compiles exactly one computation per token-window width T — the bounded-
+    trace contract tests/test_serving_engine.py asserts. Returns the logits of
+    each slot's LAST valid token (its next-token distribution) and the
+    updated block pool."""
+    x, new_cache = _paged_trunk(params, cache, tokens, lengths, n_new,
+                                block_tables, cfg)
     # lm_head only at each slot's last valid token — the padded tail of a
     # prefill chunk never reaches the vocab matmul
     last = jnp.take_along_axis(
         x, jnp.maximum(n_new - 1, 0)[:, None, None], axis=1)[:, 0]   # (S, d)
-    head = params.get("lm_head", None)
-    logits = (last @ head.astype(last.dtype)) if head is not None else (
-        last @ params["embed"].astype(last.dtype).T)
-    if cfg.final_softcap:
-        logits = (cfg.final_softcap * jnp.tanh(
-            logits.astype(jnp.float32) / cfg.final_softcap)).astype(logits.dtype)
-    return logits, {"k": ks, "v": vs}
+    return lm_head_logits(params, last, cfg), new_cache
+
+
+def paged_verify_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],        # {"k","v"}: (L, num_blocks, block_size, KV, D)
+    tokens: jax.Array,            # (S_slots, T) — T = speculative_k + 1
+    lengths: jax.Array,           # (S_slots,) tokens already cached per slot
+    n_new: jax.Array,             # (S_slots,) valid tokens among the T fed
+    block_tables: jax.Array,      # (S_slots, max_blocks) int32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Multi-token verification step for speculative decoding (DESIGN.md §8).
+
+    Identical trunk to `paged_decode_step` — same scatter/gather through the
+    block tables, same masks — but the vocab head is applied at EVERY window
+    position, so one traced computation yields the target model's next-token
+    choice after each of the k+1 fed tokens (the pending token plus k draft
+    tokens). The engine accepts the longest draft prefix that matches and
+    rolls back the rest by simply not advancing `lengths` past it: entries
+    beyond `lengths` are unobservable (reads are masked by `lengths + n_new`,
+    writes land at `lengths + t`), so stale K/V from rejected tokens is
+    overwritten by the next round. Returns ((S, T, padded_vocab) logits,
+    updated block pool)."""
+    x, new_cache = _paged_trunk(params, cache, tokens, lengths, n_new,
+                                block_tables, cfg)
+    return lm_head_logits(params, x, cfg), new_cache

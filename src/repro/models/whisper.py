@@ -11,7 +11,7 @@ once at prefill; its K/V per decoder layer live in the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -22,11 +22,10 @@ SSM dynamics parameters (A_log, dt_bias, conv, D) stay FP under LCD
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.sharding import maybe_shard
 from repro.models import params as PT

@@ -11,8 +11,7 @@ codebooks end-to-end (the paper's self-distillation applied at model scope).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -4,9 +4,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import logging
-import math
 import time
-from typing import Any, Callable, Iterable, Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp

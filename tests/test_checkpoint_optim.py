@@ -7,9 +7,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.optim.compress import EFState, apply_ef, init_ef
-from repro.optim.optimizer import (AdamState, OptConfig, adam_update,
-                                   init_adam, lr_at)
+from repro.optim.compress import apply_ef, init_ef
+from repro.optim.optimizer import OptConfig, adam_update, init_adam, lr_at
 
 
 class TestCheckpointManager:

@@ -1,5 +1,4 @@
 """Unit + property tests for the clustering substrate (paper §3.1)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,8 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.api import (ClusteredTensor, clustered_dequant, compress_model,
-                            is_clustered)
+from repro.core.api import clustered_dequant, compress_model, is_clustered
 from repro.data.pipeline import DataConfig, SyntheticLM, calibration_batches
 from repro.models.config import ModelConfig
 from repro.models.registry import get_model, lm_loss

@@ -1,5 +1,4 @@
 """Tests for the LCD distillation loop (paper §3.2-3.3)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,11 +1,10 @@
 """Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
 swept over shapes and dtypes (assignment requirement)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.lut import lut_matmul_dequant_ref, pack4, unpack4
+from repro.core.lut import lut_matmul_dequant_ref, pack4
 from repro.kernels import ref
 from repro.kernels.lut_matmul import (lut_matmul_f32, lut_matmul_fused,
                                       lut_matmul_fused_gemv, lut_matmul_int8)
@@ -224,7 +223,10 @@ class TestFlashAttention:
 
     def _mk(self, bh, sq, sk, d, dtype=jnp.float32, seed=0):
         rng = np.random.default_rng(seed)
-        mk = lambda s: jnp.asarray(rng.normal(size=s).astype(np.float32), dtype)
+
+        def mk(s):
+            return jnp.asarray(rng.normal(size=s).astype(np.float32), dtype)
+
         return mk((bh, sq, d)), mk((bh, sk, d)), mk((bh, sk, d))
 
     @pytest.mark.parametrize("bh,sq,sk,d", [(4, 256, 256, 64), (2, 512, 512, 128),

@@ -1,8 +1,6 @@
 """Tests for §3.4 adaptive smoothing and §4 LUT inference semantics."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:  # only the property test needs hypothesis; keep the rest collectable
     from hypothesis import given, settings, strategies as st
@@ -10,7 +8,6 @@ try:  # only the property test needs hypothesis; keep the rest collectable
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import clustering as C
 from repro.core.lut import (build_lut_layer, lut_forward, lut_matmul_dequant_ref,
                             lut_matmul_ref, pack4, unpack4)
 from repro.core.quantize import fake_quant_sym

@@ -37,6 +37,20 @@ def _solo_tokens(model, params, prompt, gen, ecfg):
     return list(r.out_tokens)
 
 
+class TestEngineConfigDefault:
+    def test_default_config_constructed_per_engine(self, tiny):
+        """Hardening: `ecfg: EngineConfig = EngineConfig()` in the signature
+        evaluated ONCE at import, sharing one instance across every engine
+        built without a config (inert while EngineConfig is frozen, a
+        footgun the moment it grows a mutable field); the default is now
+        constructed per engine inside __init__."""
+        cfg, model, params = tiny
+        e1 = ServingEngine(model, params)
+        e2 = ServingEngine(model, params)
+        assert e1.ecfg == EngineConfig()
+        assert e1.ecfg is not e2.ecfg
+
+
 class TestBlockAllocator:
     def test_all_or_nothing_and_reuse(self):
         a = BlockAllocator(4)

@@ -1,11 +1,10 @@
 """Sharding-rule + HLO cost-model tests."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.hlo_cost import HloCostModel, analyze_text
+from repro.distributed.hlo_cost import analyze_text
 from repro.distributed.sharding import (ShardingRules, DEFAULT_RULES,
                                         logical_to_spec, parse_names, use_rules,
                                         current_rules, maybe_shard)

@@ -1,0 +1,196 @@
+"""Self-speculative decoding tests (DESIGN.md §8): bit-equal greedy parity
+with the non-speculative engine across staggered requests, KV rollback
+correctness after partial rejection, acceptance-length bookkeeping, and the
+bounded-trace contract with speculation on."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import compress_model
+from repro.core.clustered_params import make_draft_params
+from repro.launch.engine import EngineConfig, ServingEngine
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+
+K = 3          # draft tokens per verify round used throughout
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(arch_id="tiny-spec", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab=VOCAB, head_dim=16, dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def draft2bit(tiny):
+    """The model's own 2-bit clustering — the self-speculative draft."""
+    _, _, params = tiny
+    draft, report = make_draft_params(params, draft_centroids=4)
+    assert report.equivalent_bits == pytest.approx(2.0)
+    return draft
+
+
+def _prompt(seed, n):
+    return np.random.default_rng(seed).integers(0, VOCAB, n).astype(np.int32)
+
+
+def _ecfg(**kw):
+    base = dict(num_slots=3, block_size=4, num_blocks=24,
+                max_blocks_per_slot=8, prefill_chunk=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run_staggered(model, params, specs, ecfg, draft_params=None):
+    """Drive one engine over staggered arrivals; returns the Request list
+    (one per spec, same order) and the engine itself."""
+    eng = ServingEngine(model, params, ecfg, draft_params=draft_params)
+    reqs, pending = [], list(specs)
+    while pending or eng.busy:
+        if pending and eng.steps % 2 == 0:
+            s, n, g = pending.pop(0)
+            reqs.append(eng.submit(_prompt(s, n), g))
+        if eng.busy:
+            eng.step()
+        else:
+            eng.steps += 1
+    eng.assert_bounded_traces()
+    return reqs, eng
+
+
+SPECS = [(60, 5, 8), (61, 9, 6), (62, 3, 7), (63, 11, 5)]
+
+
+class TestSpecParity:
+    def test_staggered_requests_bit_equal_non_speculative(self, tiny, draft2bit):
+        """THE speculative contract: greedy verification makes engine output
+        bit-equal to the non-speculative engine, request for request, even
+        with >= 4 staggered arrivals sharing slots with different phases."""
+        _, model, params = tiny
+        ref, ref_eng = _run_staggered(model, params, SPECS, _ecfg())
+        spec, eng = _run_staggered(model, params, SPECS,
+                                   _ecfg(speculative_k=K),
+                                   draft_params=draft2bit)
+        assert set(eng.traces) == {("prefill", 8), ("draft", K),
+                                   ("verify", K + 1)}
+        for r_ref, r_spec in zip(ref, spec):
+            assert r_spec.state == "finished"
+            assert r_spec.out_tokens == r_ref.out_tokens, r_spec.rid
+        assert eng.alloc.num_free == eng.ecfg.num_blocks
+
+    def test_parity_with_lcd_target(self, tiny, draft2bit):
+        """Two model fidelities through one engine: an 8-centroid LCD target
+        verified by... itself, drafted by the 2-bit clustering. Output must
+        equal the non-speculative LCD engine's bit for bit."""
+        _, model, params = tiny
+        cparams, _ = compress_model(params, target_centroids=8)
+        draft, _ = make_draft_params(cparams, draft_centroids=4)
+        specs = SPECS[:3]
+        ref, _ = _run_staggered(model, cparams, specs, _ecfg())
+        spec, eng = _run_staggered(model, cparams, specs,
+                                   _ecfg(speculative_k=K), draft_params=draft)
+        for r_ref, r_spec in zip(ref, spec):
+            assert r_spec.out_tokens == r_ref.out_tokens, r_spec.rid
+
+    def test_full_acceptance_with_identical_draft(self, tiny):
+        """Degenerate-but-legal draft: the target itself. EVERY round of a
+        long generation must emit k+1 tokens (k accepted + bonus) — if the
+        draft cache ever went stale (e.g. the k-th draft token's K/V missing
+        after a fully-accepted round advances past it), acceptance would
+        collapse within a few rounds. Output still equals plain greedy."""
+        _, model, params = tiny
+        gen = 18                       # ~5 fully-accepted rounds per request
+        specs = [(70, 6, gen)]
+        ref, _ = _run_staggered(model, params, specs, _ecfg())
+        spec, eng = _run_staggered(model, params, specs,
+                                   _ecfg(speculative_k=K),
+                                   draft_params=params)
+        assert spec[0].out_tokens == ref[0].out_tokens
+        # every round fully accepted; only the last may be budget-capped
+        assert all(a == K for a in spec[0].accept_lens[:-1]), spec[0].accept_lens
+        assert eng.acceptance_summary()["mean_accepted_len"] > K
+
+
+class TestRollback:
+    def test_kv_rollback_after_partial_rejection(self, tiny):
+        """Rollback invariant under PARTIAL rejection: a near-target draft
+        (tiny perturbation of one MLP weight) gets long prefixes accepted and
+        occasional tails rejected. After every scheduler step each decoding
+        slot's readable cache must cover exactly its accepted tokens —
+        prompt + generated - 1 pending — and the final output must still be
+        bit-equal to non-speculative decoding."""
+        _, model, params = tiny
+        noisy = jax.tree_util.tree_map(lambda x: x, params)
+        w = noisy["blocks"]["mlp"]["w_up"]
+        noisy["blocks"]["mlp"]["w_up"] = w + 0.02 * jax.random.normal(
+            jax.random.key(9), w.shape, w.dtype)
+
+        ecfg = _ecfg(speculative_k=K)
+        eng = ServingEngine(model, params, ecfg, draft_params=noisy)
+        r = eng.submit(_prompt(80, 6), 12)
+        ref_eng = ServingEngine(model, params, _ecfg())
+        ref = ref_eng.submit(_prompt(80, 6), 12)
+        ref_eng.run()
+
+        while eng.busy:
+            eng.step()
+            if r.slot is not None and r.out_tokens and not r.prefilling:
+                # the rollback invariant: rejected drafts never become
+                # readable cache — lengths counts prompt + emitted - pending
+                assert int(eng.lengths[r.slot]) == (
+                    len(r.prompt) + len(r.out_tokens) - 1)
+        eng.assert_bounded_traces()
+        assert r.out_tokens == ref.out_tokens
+        accepts = r.accept_lens
+        assert any(a > 0 for a in accepts), "perturbed draft accepted nothing"
+        assert any(a < K for a in accepts), "perturbed draft never rejected"
+
+    def test_rejected_kv_overwritten_not_leaked(self, tiny, draft2bit):
+        """A 2-bit draft of a random-init model is rejected almost every
+        round, so the same cache positions are rewritten round after round —
+        if stale rejected K/V ever leaked into attention, parity with the
+        non-speculative engine would break within a few tokens."""
+        _, model, params = tiny
+        specs = [(81, 4, 10), (82, 7, 9)]
+        ref, _ = _run_staggered(model, params, specs, _ecfg())
+        spec, eng = _run_staggered(model, params, specs,
+                                   _ecfg(speculative_k=K),
+                                   draft_params=draft2bit)
+        for r_ref, r_spec in zip(ref, spec):
+            assert r_spec.out_tokens == r_ref.out_tokens
+        assert eng.alloc.num_free == eng.ecfg.num_blocks
+
+
+class TestAccounting:
+    def test_acceptance_length_bookkeeping(self, tiny, draft2bit):
+        """Every verify round records 0 <= accepted <= k; emitted tokens
+        reconcile EXACTLY with the accept log (first token comes from
+        prefill, round i emits accept_lens[i] + 1 — budget caps included in
+        the recorded value, so the mean is the true dispatch multiplier)."""
+        _, model, params = tiny
+        gen = 9
+        spec, eng = _run_staggered(model, params, [(90, 5, gen)],
+                                   _ecfg(speculative_k=K),
+                                   draft_params=draft2bit)
+        r = spec[0]
+        assert all(0 <= a <= K for a in r.accept_lens)
+        assert 1 + sum(a + 1 for a in r.accept_lens) == len(r.out_tokens) == gen
+
+        summ = eng.acceptance_summary()
+        assert summ["accept_entries"] == len(r.accept_lens)
+        # single request => every engine verify round has exactly one entry
+        assert summ["spec_rounds"] == summ["accept_entries"]
+        assert sum(summ["accepted_len_hist"].values()) == summ["accept_entries"]
+        assert summ["mean_accepted_len"] == pytest.approx(
+            np.mean([a + 1 for a in r.accept_lens]))
+
+    def test_speculation_needs_draft_params(self, tiny):
+        _, model, params = tiny
+        with pytest.raises(AssertionError, match="draft_params"):
+            ServingEngine(model, params, _ecfg(speculative_k=K))

@@ -1,6 +1,5 @@
 """System behaviour: step builders under a mesh, training convergence,
 elastic failure/resume, serve-path equivalences."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -11,11 +10,11 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.distributed.sharding import use_rules
 from repro.launch.elastic import simulate_failure_and_resume
 from repro.launch.mesh import make_elastic_mesh, make_host_mesh
-from repro.launch.steps import build_prefill_step, build_serve_step, build_train_step
+from repro.launch.steps import build_prefill_step, build_train_step
 from repro.launch.train import train
 from repro.models.config import ModelConfig, ShapeConfig, get_config, reduced
 from repro.models.registry import get_model
-from repro.optim.compress import EFState, init_ef
+from repro.optim.compress import EFState
 from repro.optim.optimizer import OptConfig, init_adam
 
 
@@ -96,11 +95,9 @@ class TestServeParity:
         """Dense and clustered serve steps produce tokens of the same shape,
         and a model whose clustered weights EQUAL its dense weights produces
         identical argmax tokens."""
-        from repro.core import clustering as C
-        from repro.core.api import ClusteredTensor, compress_model, is_clustered
+        from repro.core.api import compress_model
 
         model = tiny_model
-        cfg = model.cfg
         params = model.init(jax.random.key(1))
         cparams, _ = compress_model(params, target_centroids=16)
         mesh = make_host_mesh()
