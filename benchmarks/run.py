@@ -6,6 +6,11 @@
 Emits `name,us_per_call,derived` CSV rows (benchmarks/common.emit). Exits
 nonzero if ANY selected suite raises — the parity assertions inside the
 serving/spec smoke suites are what the CI bench-smoke job gates on.
+
+The decode/serving/spec suites also (re)write the checked-in BENCH_*.json
+files; docs/benchmarks.md is the field-by-field schema reference for them
+(which CI job writes each file, how to regenerate on TPU, and the metric-
+citation convention README's tables are linted against).
 """
 import argparse
 import sys

@@ -1,7 +1,9 @@
 """Continuous-batching serving benchmark: the paged engine under Poisson
-traffic, dense vs LCD (DESIGN.md §5).
+traffic — dense vs LCD, float vs int8 KV cache (DESIGN.md §5, §9).
 
     PYTHONPATH=src python -m benchmarks.serving_bench --smoke
+
+Schema of the emitted BENCH_serving.json: docs/benchmarks.md.
 
 Measures what the static decode benchmark cannot — multi-tenant behavior:
 
@@ -10,10 +12,17 @@ Measures what the static decode benchmark cannot — multi-tenant behavior:
     lengths), for the dense and the LCD fused serving paths;
   * per-request latency: p50/p99 of submit -> finish and submit -> first
     token, the numbers a "millions of users" deployment is judged on;
+  * the kv-dtype axis (DESIGN.md §9): the same traffic through the smoothed
+    int8 block pool — p50/p99 next to the float cache, token agreement
+    against it, and the admission arithmetic (blocks per request, max
+    admissible slots at the float pool's byte budget; the run asserts the
+    >= 3x capacity bar);
   * the engine contracts, asserted on every run: a bounded set of compiled
-    step shapes (at most two), and — with >= 4 staggered requests — every
-    request's tokens EXACTLY equal to a single-request run of its prompt
-    (continuous batching must never change anyone's output).
+    step shapes (at most two per engine), and — with >= 4 staggered
+    requests — every request's tokens EXACTLY equal to a single-request run
+    of its prompt with the same kv dtype (continuous batching must never
+    change anyone's output; int8-vs-float parity is a tolerance, not an
+    identity — DESIGN.md §9).
 
 --smoke runs a reduced config through the Pallas interpreter for the LCD row —
 CPU-runnable on every CI pass (wall times there are correctness telemetry,
@@ -21,6 +30,7 @@ not perf claims; on TPU the same harness reports real time). Results land in
 BENCH_serving.json so the trajectory is tracked PR over PR.
 """
 import argparse
+import dataclasses
 import json
 import os
 
@@ -29,7 +39,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.kernels.ops import lut_serving
-from repro.launch.engine import EngineConfig, ServingEngine, build_engine
+from repro.launch.engine import (EngineConfig, ServingEngine, build_engine,
+                                 kv_capacity_report)
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
 
@@ -83,11 +94,14 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
 
     if verify:
         # continuous batching must not change any request's output: re-decode
-        # each prompt ALONE and compare exactly. One solo engine serves all
-        # the re-runs sequentially (slots/blocks fully recycle between them,
-        # stale cache contents are masked by lengths), so the check costs two
-        # compiles total instead of two per request.
-        solo_eng = ServingEngine(engine.model, params, ecfg, mesh=engine.mesh)
+        # each prompt ALONE (same kv dtype) and compare exactly. One solo
+        # engine serves all the re-runs sequentially (slots/blocks fully
+        # recycle between them, stale cache contents are masked by lengths),
+        # so the check costs two compiles total instead of two per request.
+        solo_eng = ServingEngine(engine.model, params, ecfg, mesh=engine.mesh,
+                                 kv_smooth=None if engine.kv_dtype == "float"
+                                 else (engine.cache["k_smooth"],
+                                       engine.cache["v_smooth"]))
         for r in reqs:
             solo = solo_eng.submit(r.prompt, r.max_new_tokens)
             solo_eng.run()
@@ -96,6 +110,7 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
         solo_eng.assert_bounded_traces()
 
     row = {
+        "kv_dtype": engine.kv_dtype,
         "requests": len(reqs), "generated_tokens": gen_total,
         "wall_s": round(wall, 4),
         "tokens_per_s": round(gen_total / max(wall, 1e-9), 2),
@@ -107,7 +122,7 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
     emit(f"serving/{name}_tokens_per_s", wall * 1e6,
          f"tok_s={row['tokens_per_s']};p50={row['latency_s']['p50']};"
          f"p99={row['latency_s']['p99']};traces={len(engine.traces)}")
-    return row, params
+    return row, params, reqs, engine.model.cfg
 
 
 def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
@@ -124,15 +139,41 @@ def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
                                  gen, mean_gap_steps=2.0)
     assert len(workload) >= 4, "parity contract needs >= 4 staggered requests"
 
-    dense, params = _bench_one("dense", arch=arch, smoke=smoke, lcd=False,
-                               ecfg=ecfg, workload=workload, seed=7,
-                               params=None, verify=smoke)
+    dense, params, dense_reqs, cfg = _bench_one(
+        "dense", arch=arch, smoke=smoke, lcd=False, ecfg=ecfg,
+        workload=workload, seed=7, params=None, verify=smoke)
     # off-TPU, force the fused Pallas kernels through the interpreter so the
     # LCD row measures the real serving dispatch, not the gather fallback
     with lut_serving(None if on_tpu else "interpret"):
-        lcd, _ = _bench_one("lcd", arch=arch, smoke=smoke, lcd=True,
-                            ecfg=ecfg, workload=workload, seed=7,
-                            params=params, verify=smoke)
+        lcd, _, _, _ = _bench_one("lcd", arch=arch, smoke=smoke, lcd=True,
+                                  ecfg=ecfg, workload=workload, seed=7,
+                                  params=params, verify=smoke)
+
+    # kv-dtype axis (DESIGN.md §9): the same dense traffic through the
+    # smoothed int8 block pool — p50/p99 next to the float cache plus the
+    # admission arithmetic at the float pool's byte budget
+    ecfg_i8 = dataclasses.replace(ecfg, kv_dtype="int8")
+    int8_row, _, int8_reqs, _ = _bench_one(
+        "int8_kv", arch=arch, smoke=smoke, lcd=False, ecfg=ecfg_i8,
+        workload=workload, seed=7, params=params, verify=smoke)
+    agree = [sum(a == b for a, b in zip(rf.out_tokens, rq.out_tokens))
+             / max(len(rf.out_tokens), 1)
+             for rf, rq in zip(dense_reqs, int8_reqs)]
+    int8_row["token_agreement_vs_float"] = round(float(np.mean(agree)), 4)
+
+    # `cfg` is the EXACT config the benchmarked engines ran (returned by
+    # _bench_one), so this table cannot drift from the implementation. The
+    # capacity bar depends on the float pool's itemsize: ~3.5x against a
+    # 4-byte pool (smoke runs at f32), ~1.95x against a bf16 pool.
+    capacity = kv_capacity_report(cfg, ecfg,
+                                  tokens_per_request=max_prompt + gen)
+    min_ratio = 3.0 if cfg.jnp_dtype.itemsize >= 4 else 1.8
+    assert capacity["slots_ratio_int8_vs_float"] >= min_ratio, (
+        f"int8 KV cache must admit >= {min_ratio}x the slots at fixed pool "
+        f"bytes against a {cfg.dtype} pool: {capacity}")
+    emit("serving/int8_kv_capacity", 0.0,
+         f"slots_ratio={capacity['slots_ratio_int8_vs_float']};"
+         f"agreement={int8_row['token_agreement_vs_float']}")
 
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
@@ -141,7 +182,8 @@ def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
                    "prefill_chunk": ecfg.prefill_chunk},
         "workload": {"requests": n_req, "max_prompt": max_prompt,
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
-        "dense": dense, "lcd": lcd,
+        "dense": dense, "lcd": lcd, "int8_kv": int8_row,
+        "kv_cache": capacity,
         "lcd_vs_dense_tokens_per_s": round(
             lcd["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3),
         "note": ("interpret-mode wall times are correctness telemetry, not "

@@ -12,11 +12,17 @@ Measures what speculative decoding is bought with and what it buys:
     2-bit LUT path, so every accepted token is a target forward saved.
   * per-request p50/p99 latency and tokens/s for the speculative engine next
     to the plain PR 2 engine on the SAME Poisson workload;
+  * the kv-dtype axis (DESIGN.md §9): the speculative engine over smoothed
+    int8 block pools (target AND lockstep draft pool quantized) — p50/p99
+    and acceptance next to the float-cache engine, plus the admission
+    arithmetic including the per-request speculative headroom;
   * the correctness contracts, asserted on every --smoke run: speculative
-    output is BIT-EQUAL to the non-speculative engine per request (greedy
-    verification must never change anyone's tokens), the bounded-trace set
-    holds with speculation on, and the mean accepted length exceeds 1 (the
-    draft earns its keep on the trained smoke model).
+    output is BIT-EQUAL to the non-speculative engine per request WITHIN
+    each kv dtype (greedy verification must never change anyone's tokens),
+    the bounded-trace set holds with speculation on, and the mean accepted
+    length exceeds 1 (the draft earns its keep on the trained smoke model).
+
+Schema of the emitted BENCH_spec.json: docs/benchmarks.md.
 
 The smoke model is the trained llama2-7b proxy (benchmarks/common.py): a
 2-bit clustering of RANDOM weights agrees with its parent near-never, while
@@ -36,19 +42,22 @@ from benchmarks.common import emit, trained_proxy
 from benchmarks.serving_bench import (_percentiles, _poisson_workload,
                                       _run_traffic)
 from repro.core.clustered_params import make_draft_params
-from repro.launch.engine import EngineConfig, ServingEngine
+from repro.launch.engine import (EngineConfig, ServingEngine,
+                                 calibrate_kv_smooth, kv_capacity_report)
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
 
 
 def _bench_engine(name, model, params, ecfg, workload, vocab, seed,
-                  draft_params=None):
-    engine = ServingEngine(model, params, ecfg, draft_params=draft_params)
+                  draft_params=None, kv_smooth=None):
+    engine = ServingEngine(model, params, ecfg, draft_params=draft_params,
+                           kv_smooth=kv_smooth)
     t0 = engine.clock()
     reqs = _run_traffic(engine, workload, vocab, seed)
     wall = engine.clock() - t0
     gen_total = sum(len(r.out_tokens) for r in reqs)
     row = {
+        "kv_dtype": engine.kv_dtype,
         "requests": len(reqs), "generated_tokens": gen_total,
         "wall_s": round(wall, 4),
         "tokens_per_s": round(gen_total / max(wall, 1e-9), 2),
@@ -100,6 +109,37 @@ def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
             "2-bit draft accepted nothing on the trained smoke model: "
             f"{spec_row['accepted_len_hist']}")
 
+    # kv-dtype axis (DESIGN.md §9): both engines over smoothed int8 block
+    # pools — the speculative one quantizes the lockstep draft pool with the
+    # SAME calibrated vectors, and bit-equality must hold within the dtype
+    kv_smooth = calibrate_kv_smooth(model, params)
+    base_i8, base_i8_reqs = _bench_engine(
+        "baseline_int8_tokens_per_s", model, params,
+        EngineConfig(kv_dtype="int8", **geom),
+        workload, cfg.vocab, seed=7, kv_smooth=kv_smooth)
+    spec_i8, spec_i8_reqs = _bench_engine(
+        "speculative_int8_tokens_per_s", model, params,
+        EngineConfig(kv_dtype="int8", speculative_k=k,
+                     draft_centroids=draft_centroids, **geom),
+        workload, cfg.vocab, seed=7, draft_params=draft_params,
+        kv_smooth=kv_smooth)
+    mismatches = [r.rid for b, r in zip(base_i8_reqs, spec_i8_reqs)
+                  if b.out_tokens != r.out_tokens]
+    assert not mismatches, (
+        f"int8 speculative output diverged from the int8 plain engine: "
+        f"{mismatches}")
+    agree = [sum(a == b for a, b in zip(rf.out_tokens, rq.out_tokens))
+             / max(len(rf.out_tokens), 1)
+             for rf, rq in zip(base_reqs, base_i8_reqs)]
+    # speculative requests reserve k extra tokens of headroom (DESIGN.md §8)
+    capacity = kv_capacity_report(cfg, EngineConfig(**geom),
+                                  tokens_per_request=max_prompt + gen + k)
+    capacity["pools_per_engine"] = 2   # target + lockstep draft, same dtype
+    capacity["token_agreement_int8_vs_float"] = round(float(np.mean(agree)), 4)
+    emit("spec/int8_kv_capacity", 0.0,
+         f"slots_ratio={capacity['slots_ratio_int8_vs_float']};"
+         f"agreement={capacity['token_agreement_int8_vs_float']}")
+
     out = {
         "arch": "llama2-7b-proxy(trained)", "smoke": smoke,
         "backend": jax.default_backend(),
@@ -109,6 +149,8 @@ def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
         "workload": {"requests": n_req, "max_prompt": max_prompt,
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
         "baseline": base_row, "speculative": spec_row,
+        "baseline_int8": base_i8, "speculative_int8": spec_i8,
+        "kv_cache": capacity,
         "target_dispatch_multiplier": spec_row["mean_accepted_len"],
         "verified_bit_equal": True,
         "note": ("CPU gather-fallback wall times are correctness telemetry; "

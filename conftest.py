@@ -16,6 +16,7 @@ TIER1_MODULES = {
     "test_decode_engine",
     "test_serving_engine",
     "test_speculative",
+    "test_paged_kv",
 }
 
 

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Docs lint — the CI-blocking check that keeps this repo's prose verifiably
+in sync with the tree (.github/workflows/ci.yml `docs-lint` job).
+
+Two checks, both zero-dependency:
+
+1. DESIGN.md citations. Every `DESIGN.md §N` reference in Python sources
+   (src/, tests/, benchmarks/, examples/, conftest.py) and in the markdown
+   docs (README.md, CONTRIBUTING.md, docs/*.md, DESIGN.md itself) must
+   resolve to a real `## §N` heading in DESIGN.md. Renumbering a section
+   without sweeping its citations fails CI instead of silently rotting.
+
+2. Benchmark metric citations. README.md and docs/*.md cite benchmark
+   numbers with the inline-code convention
+
+       `BENCH_<name>.json:dotted.path.to.metric`
+
+   (e.g. `BENCH_serving.json:lcd.latency_s.p50`). Every such citation must
+   resolve to an existing field of the checked-in JSON — a table that quotes
+   a metric the benchmark no longer emits (or never emitted) fails CI.
+
+Run locally:  python scripts/docs_lint.py
+Exit status:  0 clean; 1 with every violation listed on stderr.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DESIGN_CITE = re.compile(r"DESIGN\.md(?:#§| §|#%C2%A7)(\d+)")
+METRIC_CITE = re.compile(r"`(BENCH_[A-Za-z0-9_]+\.json):([A-Za-z0-9_.]+)`")
+
+
+def _py_sources():
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        yield from sorted((ROOT / sub).rglob("*.py"))
+    yield ROOT / "conftest.py"
+
+
+def _md_sources():
+    for name in ("README.md", "CONTRIBUTING.md", "DESIGN.md", "ROADMAP.md"):
+        p = ROOT / name
+        if p.exists():
+            yield p
+    docs = ROOT / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.glob("*.md"))
+
+
+def check_design_citations(errors: list) -> None:
+    sections = {int(n) for n in
+                re.findall(r"^## §(\d+)\b", (ROOT / "DESIGN.md").read_text(),
+                           re.MULTILINE)}
+    for path in (*_py_sources(), *_md_sources()):
+        if "__pycache__" in path.parts:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for m in DESIGN_CITE.finditer(line):
+                if int(m.group(1)) not in sections:
+                    errors.append(
+                        f"{path.relative_to(ROOT)}:{lineno}: cites "
+                        f"DESIGN.md §{m.group(1)} but DESIGN.md has no "
+                        f"'## §{m.group(1)}' heading")
+
+
+def _resolve(doc, dotted: str) -> bool:
+    node = doc
+    for part in dotted.split("."):
+        if isinstance(node, dict) and part in node:
+            node = node[part]
+        elif isinstance(node, list) and part.isdigit() and int(part) < len(node):
+            node = node[int(part)]
+        else:
+            return False
+    return True
+
+
+def check_metric_citations(errors: list) -> None:
+    cache: dict = {}
+    for path in _md_sources():
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for m in METRIC_CITE.finditer(line):
+                fname, dotted = m.group(1), m.group(2)
+                if fname not in cache:
+                    fpath = ROOT / fname
+                    cache[fname] = (json.loads(fpath.read_text())
+                                    if fpath.exists() else None)
+                doc = cache[fname]
+                if doc is None:
+                    errors.append(f"{path.relative_to(ROOT)}:{lineno}: cites "
+                                  f"{fname} which is not checked in")
+                elif not _resolve(doc, dotted):
+                    errors.append(
+                        f"{path.relative_to(ROOT)}:{lineno}: cites "
+                        f"{fname}:{dotted} but that field does not exist "
+                        f"in the checked-in file")
+
+
+def main() -> int:
+    errors: list = []
+    check_design_citations(errors)
+    check_metric_citations(errors)
+    if errors:
+        print(f"docs-lint: {len(errors)} violation(s)", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("docs-lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,9 +7,15 @@
   smooth_quant.py — standalone smooth+quantize input transform (Eq. 11);
                     kept for calibration tooling — the serving path runs the
                     transform inside the fused GEMM instead
+  paged_attention.py — fused dequantizing paged attention over the int8 KV
+                    block pool (DESIGN.md §9): int8 tiles + scales dequantize
+                    in VMEM, the full-precision cache never exists in HBM
   ops.py          — padded/blocked jit wrappers, variant selection, CPU
                     fallbacks, and the lut_serving dispatch context
-  ref.py          — pure-jnp oracles (asserted in tests/test_kernels.py)
+  ref.py          — pure-jnp oracles (asserted in tests/test_kernels.py and
+                    tests/test_paged_kv.py)
 """
 from repro.kernels.ops import (clustered_linear, lut_gemm, lut_gemm_fused,  # noqa: F401
                                lut_gemm_int8, lut_serving)
+from repro.kernels.paged_attention import (  # noqa: F401
+    paged_attention_mode, paged_dequant_attention)

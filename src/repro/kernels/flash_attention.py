@@ -22,10 +22,11 @@ static `k_len` bound that masks keys past the live length of a padded cache
 
 Paged serving (DESIGN.md §5): the continuous-batching engine needs PER-SLOT
 ragged lengths — each batch row attends over a different number of keys —
-which this kernel's static masks cannot express. That path runs through the
-jnp fallback in models/layers.py (`_attn_chunk` with 2-D q_pos + per-row
-k_len); a paged flash kernel with a scalar-prefetched length vector is the
-natural successor once serving moves to multi-chip decode.
+which this kernel's static masks cannot express. Float block pools run
+through the jnp fallback in models/layers.py (`_attn_chunk` with 2-D q_pos +
+per-row k_len); int8 pools run through the fused dequantizing paged kernel
+(`kernels/paged_attention.py`, DESIGN.md §9), which takes per-slot lengths
+as data.
 """
 from __future__ import annotations
 

@@ -1,0 +1,197 @@
+"""Pallas TPU kernel: fused dequantizing paged attention (DESIGN.md §9).
+
+The int8 paged KV cache (launch/engine.py, `EngineConfig.kv_dtype="int8"`)
+stores each block as int8 codes plus per-(block-slot, kv-head) scales and a
+per-(layer, kv-head, channel) smoothing vector calibrated through
+core/smoothing.py. Reading it through XLA would dequantize the gathered cache
+into a full-precision HBM tensor first — paying back the bytes the
+quantization saved. This kernel keeps the trade honest: the int8 tiles and
+their scales stream HBM→VMEM, the dequantize
+
+    k = codes · scale[token, head] · smooth[head, :]
+
+happens in VMEM registers, and only the (S, T, H, D) attention output ever
+returns to HBM. The dequantized cache never exists as an HBM tensor.
+
+Grid: one program per (slot, kv-head). Each program reads its slot's whole
+logical KV view (the engine's block-table gather happens outside, in int8 —
+that gather IS the cache's HBM traffic, at 1/4 the f32 bytes), dequantizes,
+and runs a masked softmax over the q rows of every query head in the GQA
+group. Per-slot raggedness (`lengths`, `n_new`) and the per-layer sliding
+window arrive as data, so the engine's bounded-trace contract is untouched.
+
+Correctness is asserted against the pure-jnp oracle
+`kernels/ref.py paged_dequant_attention_ref` in interpret mode on CPU
+(tests/test_paged_kv.py) — the kernel body uses only full-block reads, which
+this JAX build's interpreter supports (unlike the dynamic `pl.load` indexing
+of kernels/flash_attention.py, whose interpreter tests are known-red).
+
+`paged_attention_mode(...)` mirrors `kernels/ops.py lut_serving`: it forces
+how `models/layers.py paged_attn_block` consumes an int8 cache —
+"kernel" (compiled, TPU), "interpret" (same kernel through the Pallas
+interpreter), "ref" (the jnp gather-dequant fallback), None = auto.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.utils import round_up
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Serving dispatch (mirrors kernels/ops.py lut_serving)
+# ---------------------------------------------------------------------------
+
+_FORCED_MODE: Optional[str] = None  # None | "kernel" | "interpret" | "ref"
+
+
+@contextlib.contextmanager
+def paged_attention_mode(mode: Optional[str]):
+    """Force how an int8 paged cache is consumed inside the context:
+
+      "kernel"    — compiled fused dequantize-attention kernel (TPU)
+      "interpret" — same kernel through the Pallas interpreter (CPU tests)
+      "ref"       — jnp gather-dequant fallback in models/layers.py
+      None        — auto: kernel on TPU backends, ref elsewhere
+    """
+    global _FORCED_MODE
+    prev, _FORCED_MODE = _FORCED_MODE, mode
+    try:
+        yield
+    finally:
+        _FORCED_MODE = prev
+
+
+def resolved_paged_attention_mode() -> str:
+    if _FORCED_MODE is not None:
+        return _FORCED_MODE
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+def _paged_dequant_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, ksm_ref,
+                          vsm_ref, len_ref, nnew_ref, win_ref, o_ref, *,
+                          t: int, l: int, d: int, gt: int, scale: float,
+                          softcap: float):
+    """One (slot, kv-head) program: dequantize the slot's int8 KV view in
+    VMEM and attend every query head of the GQA group over it.
+
+    Only full-block reads (`ref[...]`): no dynamic in-kernel indexing, so the
+    body lowers on TPU and runs under this build's Pallas interpreter."""
+    q = q_ref[...].reshape(gt, d).astype(jnp.float32) * scale
+    # dequantize in VMEM: codes * per-token-per-head scale * smoothing vector
+    k = (kq_ref[...].reshape(l, d).astype(jnp.float32)
+         * ks_ref[...].reshape(l, 1) * ksm_ref[...].reshape(1, d))
+    v = (vq_ref[...].reshape(l, d).astype(jnp.float32)
+         * vs_ref[...].reshape(l, 1) * vsm_ref[...].reshape(1, d))
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)       # (gt, l)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    length = len_ref[...].reshape(1, 1).astype(jnp.int32)
+    n_new = nnew_ref[...].reshape(1, 1).astype(jnp.int32)
+    window = win_ref[...].reshape(1, 1).astype(jnp.int32)
+    weff = jnp.where(window > 0, window, 1 << 30)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (gt, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (gt, l), 1)
+    # q rows are (group, T) flattened: row r belongs to window position r % T
+    q_pos = length + rows % t
+    mask = (q_pos >= cols) & ((q_pos - cols) < weff) & (cols < length + n_new)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s, axis=1, keepdims=True), NEG_INF)
+    p = jnp.exp(s - m)
+    p = p * mask.astype(jnp.float32)        # fully-masked rows -> all-zero
+    denom = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    out = jnp.dot(p / denom, v, preferred_element_type=jnp.float32)
+    o_ref[...] = out.reshape(1, 1, gt, d).astype(o_ref.dtype)
+
+
+def paged_dequant_attention(
+    q: jax.Array,          # (S, T, H, D) float — post-rope queries
+    kq: jax.Array,         # (S, L, KV, D) int8 — gathered logical K view
+    k_scale: jax.Array,    # (S, L, KV) f32 — per-(token, kv-head) scales
+    vq: jax.Array,         # (S, L, KV, D) int8
+    v_scale: jax.Array,    # (S, L, KV) f32
+    k_smooth: jax.Array,   # (KV, D) f32 — calibrated smoothing vector
+    v_smooth: jax.Array,   # (KV, D) f32
+    lengths: jax.Array,    # (S,) int32 — cached tokens per slot
+    n_new: jax.Array,      # (S,) int32 — valid tokens in this window
+    window: jax.Array,     # scalar int32 — sliding window (0 = global)
+    *,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused dequantize + masked attention over a slot's gathered int8 KV.
+
+    Returns (S, T, H, D) in q's dtype. The gather through the block tables
+    stays int8 (the caller does it); this call is the only consumer of the
+    quantized view, so no dequantized cache tensor ever lands in HBM."""
+    s_slots, t, h, d = q.shape
+    l, kv = kq.shape[1], kq.shape[2]
+    g = h // kv
+    gt = g * t
+
+    # (S, T, H, D) -> (S, KV, g, T, D) -> (S, KV, g*T, D): row r = gi*T + t
+    qt = q.reshape(s_slots, t, kv, g, d).transpose(0, 2, 3, 1, 4)
+    qt = qt.reshape(s_slots, kv, gt, d)
+    kqt = kq.transpose(0, 2, 1, 3)                        # (S, KV, L, D)
+    vqt = vq.transpose(0, 2, 1, 3)
+    kst = k_scale.transpose(0, 2, 1)                      # (S, KV, L)
+    vst = v_scale.transpose(0, 2, 1)
+
+    # sublane-align the q rows and lane-align the KV length; padded keys are
+    # masked by `cols < length + n_new` (lengths never exceed the real L)
+    gt_p = round_up(gt, 8)
+    l_p = round_up(l, 128)
+    if gt_p != gt:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, gt_p - gt), (0, 0)))
+    if l_p != l:
+        kqt = jnp.pad(kqt, ((0, 0), (0, 0), (0, l_p - l), (0, 0)))
+        vqt = jnp.pad(vqt, ((0, 0), (0, 0), (0, l_p - l), (0, 0)))
+        kst = jnp.pad(kst, ((0, 0), (0, 0), (0, l_p - l)))
+        vst = jnp.pad(vst, ((0, 0), (0, 0), (0, l_p - l)))
+
+    kernel = functools.partial(
+        _paged_dequant_kernel, t=t, l=l_p, d=d, gt=gt_p,
+        scale=1.0 / np.sqrt(d), softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(s_slots, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, gt_p, d), lambda s, hh: (s, hh, 0, 0)),
+            pl.BlockSpec((1, 1, l_p, d), lambda s, hh: (s, hh, 0, 0)),
+            pl.BlockSpec((1, 1, l_p), lambda s, hh: (s, hh, 0)),
+            pl.BlockSpec((1, 1, l_p, d), lambda s, hh: (s, hh, 0, 0)),
+            pl.BlockSpec((1, 1, l_p), lambda s, hh: (s, hh, 0)),
+            pl.BlockSpec((1, d), lambda s, hh: (hh, 0)),
+            pl.BlockSpec((1, d), lambda s, hh: (hh, 0)),
+            pl.BlockSpec((1, 1), lambda s, hh: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, hh: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, hh: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gt_p, d), lambda s, hh: (s, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_slots, kv, gt_p, d), q.dtype),
+        interpret=interpret,
+    )(qt, kqt, kst, vqt, vst,
+      k_smooth.astype(jnp.float32), v_smooth.astype(jnp.float32),
+      lengths.astype(jnp.int32).reshape(s_slots, 1),
+      n_new.astype(jnp.int32).reshape(s_slots, 1),
+      jnp.asarray(window, jnp.int32).reshape(1, 1))
+
+    out = out[:, :, :gt].reshape(s_slots, kv, g, t, d)
+    return out.transpose(0, 3, 1, 2, 4).reshape(s_slots, t, h, d)

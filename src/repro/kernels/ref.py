@@ -65,6 +65,40 @@ def smooth_quant_ref(x: jax.Array, inv_scale: jax.Array, bits: int = 8) -> jax.A
     return q.astype(jnp.int8)
 
 
+def paged_dequant_attention_ref(q, kq, k_scale, vq, v_scale, k_smooth,
+                                v_smooth, lengths, n_new, window, *,
+                                softcap=0.0):
+    """Oracle for kernels/paged_attention.py paged_dequant_attention:
+    materialized dequantize + masked softmax, same signature semantics
+    (q (S,T,H,D); kq/vq (S,L,KV,D) int8; scales (S,L,KV); smooth (KV,D);
+    lengths/n_new (S,); window scalar). Returns (S, T, H, D)."""
+    import numpy as np
+    s_slots, t, h, d = q.shape
+    l, kv = kq.shape[1], kq.shape[2]
+    g = h // kv
+    k = (kq.astype(jnp.float32) * k_scale[..., None]
+         * k_smooth[None, None].astype(jnp.float32))          # (S, L, KV, D)
+    v = (vq.astype(jnp.float32) * v_scale[..., None]
+         * v_smooth[None, None].astype(jnp.float32))
+    qf = q.astype(jnp.float32).reshape(s_slots, t, kv, g, d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf, k) / np.sqrt(d)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = lengths[:, None] + jnp.arange(t)[None, :]         # (S, T)
+    k_pos = jnp.arange(l)
+    weff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    mask = (q_pos[:, :, None] >= k_pos[None, None, :])
+    mask &= (q_pos[:, :, None] - k_pos[None, None, :]) < weff
+    mask &= k_pos[None, None, :] < (lengths + n_new)[:, None, None]
+    mexp = mask[:, None, None]                                # (S,1,1,T,L)
+    scores = jnp.where(mexp, scores, -1e30)
+    m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e30)
+    p = jnp.exp(scores - m) * mexp.astype(jnp.float32)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(s_slots, t, h, d).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
                         q_offset=0):
     """Oracle for flash_attention: plain materialized softmax attention."""

@@ -29,6 +29,15 @@ Continuous batching (`ServingEngine`)
     running request is evicted back to the queue (its blocks freed) and later
     re-prefills its prompt plus the tokens it had already generated.
 
+    The block pool stores either the model dtype (`EngineConfig.kv_dtype =
+    "float"` — engine output exactly equals single-request decoding) or
+    smoothed int8 codes with per-(block-slot, kv-head) scale pools ("int8",
+    DESIGN.md §9): ~3.5x the admissible slots per f32 pool byte (~2x vs
+    bf16), with the smoothing vectors calibrated through core/smoothing.py
+    (`calibrate_kv_smooth`) and reads served by the fused dequantizing
+    Pallas kernel on TPU (kernels/paged_attention.py). The default (None)
+    follows the model's cfg.kv_cache_dtype.
+
 Self-speculative decoding (`EngineConfig.speculative_k > 0`, DESIGN.md §8)
     The model's own 2-bit LCD clustering drafts `k` tokens per round through
     the cheap serving path; the target model verifies all of them in ONE
@@ -249,6 +258,15 @@ class EngineConfig:
     # draft per verify round; 0 = off. The verify window is speculative_k + 1.
     speculative_k: int = 0
     draft_centroids: int = 4          # 2-bit self-draft (build_engine default)
+    # KV block-pool dtype (DESIGN.md §9): "float" keeps blocks in the model
+    # dtype (engine output exactly equals single-request decoding); "int8"
+    # stores smoothed int8 codes + per-(block-slot, kv-head) scale pools —
+    # ~3.5x the admissible slots per f32 pool byte (~2x vs a bf16 pool),
+    # engine-vs-solo parity still exact WITHIN the dtype, int8-vs-float
+    # parity at the documented logit tolerance. None follows the model's
+    # cfg.kv_cache_dtype, so a config that quantizes its plain decode cache
+    # pages quantized too.
+    kv_dtype: Optional[str] = None
 
     @property
     def max_seq(self) -> int:
@@ -280,7 +298,8 @@ class ServingEngine:
     """
 
     def __init__(self, model: Model, params, ecfg: Optional[EngineConfig] = None,
-                 mesh=None, clock=time.perf_counter, draft_params=None):
+                 mesh=None, clock=time.perf_counter, draft_params=None,
+                 kv_smooth=None):
         # default constructed per engine, not evaluated once in the signature
         # (EngineConfig is frozen today, so the shared instance was inert —
         # this hardens against any future mutable field)
@@ -288,6 +307,14 @@ class ServingEngine:
         assert model.supports_paging(), (
             f"family '{model.cfg.family}' has no paged decode path")
         assert ecfg.num_blocks >= ecfg.max_blocks_per_slot, ecfg
+        assert ecfg.kv_dtype in (None, "float", "int8"), ecfg.kv_dtype
+        # the RESOLVED pool dtype: an explicit knob wins, else follow the
+        # model config (the pre-§9 engine raised NotImplementedError here
+        # for int8 configs — resolving beats silently serving full precision)
+        self.kv_dtype = ecfg.kv_dtype or (
+            "int8" if model.cfg.kv_cache_dtype == "int8" else "float")
+        assert kv_smooth is None or self.kv_dtype == "int8", (
+            "kv_smooth only applies to the int8 KV cache")
         self.model, self.params, self.ecfg = model, params, ecfg
         self.spec_k = ecfg.speculative_k
         self.draft_params = draft_params
@@ -309,11 +336,26 @@ class ServingEngine:
         self.queue: collections.deque = collections.deque()
         self.finished: List[Request] = []
         with use_rules(self.mesh, fsdp=False):
-            self.cache = model.init_paged_cache(ecfg.num_blocks, ecfg.block_size)
+            self.cache = model.init_paged_cache(
+                ecfg.num_blocks, ecfg.block_size, kv_dtype=self.kv_dtype)
             # the draft's own K/V pool (draft weights produce different K/V),
-            # same geometry and block ids as the target's
+            # same geometry, block ids and kv dtype as the target's
             self.draft_cache = (model.init_paged_cache(
-                ecfg.num_blocks, ecfg.block_size) if self.spec_k else None)
+                ecfg.num_blocks, ecfg.block_size, kv_dtype=self.kv_dtype)
+                if self.spec_k else None)
+        if kv_smooth is not None:
+            # calibrated smoothing vectors (calibrate_kv_smooth); the draft
+            # pool uses the same VALUES — its K/V track the target's closely
+            # enough, and smoothing is a quantization-quality knob, not a
+            # correctness requirement (identity vectors are always valid).
+            # Each cache gets its own buffers: both pytrees are donated into
+            # the traced steps, and donating one shared array twice would
+            # leave the second tree holding a deleted buffer.
+            k_sm, v_sm = kv_smooth
+            for c in (self.cache, self.draft_cache):
+                if c is not None:
+                    c["k_smooth"] = jnp.array(k_sm, jnp.float32, copy=True)
+                    c["v_smooth"] = jnp.array(v_sm, jnp.float32, copy=True)
         # trace bookkeeping: width T -> count in normal mode; (role, width) ->
         # count in speculative mode ("prefill" / "draft" / "verify")
         self.traces: Dict[Any, int] = {}
@@ -723,18 +765,108 @@ class ServingEngine:
 
 
 # ---------------------------------------------------------------------------
+# int8 KV cache: smoothing calibration + capacity accounting (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def calibrate_kv_smooth(model: Model, params, *, n_tokens: int = 64,
+                        batch: int = 4, seed: int = 0):
+    """Per-(layer, kv-head, channel) smoothing vectors for the int8 paged KV
+    cache, picked from the paper's Eq. 9 candidate family
+    (core/smoothing.py candidate_vectors: identity, scalar strengths,
+    SmoothQuant-style alpha vectors) — the same calibration machinery that
+    arms the fused GEMM's activation quantization, pointed at K/V instead.
+    Candidates are scored under the DEPLOYMENT quantizer — per-(token,
+    kv-head) absmax int8, `models/layers.py quantize_kv` — not Eq. 9's
+    per-tensor scale, so the winner is the winner at serving time (identity
+    is in the family, so calibration never hurts).
+
+    A short prefill of random tokens through the PLAIN decode path captures
+    every layer's K and V (the (L, B, S, KV, D) cache is the capture — no
+    instrumentation). Returns (k_smooth, v_smooth), both (L, KV, D) float32 —
+    pass as `ServingEngine(..., kv_smooth=...)`."""
+    from repro.core.smoothing import candidate_vectors
+    cfg = model.cfg
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, n_tokens)),
+                         jnp.int32)
+    cache = model.init_cache(batch, n_tokens)
+    _, cache = model.decode(
+        params, cache, {"tokens": tokens, "pos": jnp.asarray(0, jnp.int32)})
+
+    def roundtrip_mse(x: np.ndarray, s: np.ndarray) -> float:
+        xs = x / s                                     # (n_tokens, D)
+        scale = np.maximum(np.abs(xs).max(axis=1, keepdims=True), 1e-6) / 127.0
+        q = np.clip(np.round(xs / scale), -127, 127)
+        return float(np.mean((q * scale * s - x) ** 2))
+
+    def smooth_of(key: str) -> jnp.ndarray:
+        kv = np.asarray(cache[key], np.float32)        # (L, B, S, KV, D)
+        if cache[key].dtype == jnp.int8:               # int8 plain cache
+            kv = kv * np.asarray(cache[key + "_scale"], np.float32)[..., None]
+        n_l, _, _, n_kv, d = kv.shape
+        out = np.ones((n_l, n_kv, d), np.float32)
+        for li in range(n_l):
+            for h in range(n_kv):
+                x = kv[li, :, :, h].reshape(-1, d)
+                cands = candidate_vectors(np.abs(x).max(axis=0))
+                out[li, h] = min(
+                    (s for _, s in cands), key=lambda s: roundtrip_mse(x, s))
+        return jnp.asarray(out)
+
+    return smooth_of("k"), smooth_of("v")
+
+
+def paged_kv_bytes_per_block(cfg, block_size: int, kv_dtype: str) -> int:
+    """HBM bytes ONE physical block costs across all layers: the k + v pools,
+    plus the two scale pools for int8. The (L, KV, D) smoothing vectors are
+    per engine, not per block, and are excluded."""
+    elems = cfg.n_layers * block_size * cfg.n_kv_heads * cfg.hd
+    if kv_dtype == "int8":
+        scales = cfg.n_layers * block_size * cfg.n_kv_heads * 4
+        return 2 * (elems + scales)
+    return 2 * elems * jnp.dtype(cfg.jnp_dtype).itemsize
+
+
+def kv_capacity_report(cfg, ecfg: EngineConfig,
+                       tokens_per_request: int) -> Dict[str, Any]:
+    """The admission arithmetic behind BENCH_serving.json's kv-dtype axis:
+    at a FIXED pool byte budget (what this geometry's float pool costs), how
+    many blocks each kv dtype buys and how many requests of
+    `tokens_per_request` tokens (prompt + generation + speculative headroom)
+    are admissible concurrently."""
+    budget = ecfg.num_blocks * paged_kv_bytes_per_block(
+        cfg, ecfg.block_size, "float")
+    bpr = -(-tokens_per_request // ecfg.block_size)
+    out: Dict[str, Any] = {"pool_bytes_budget": budget,
+                           "tokens_per_request": tokens_per_request}
+    for dt in ("float", "int8"):
+        bb = paged_kv_bytes_per_block(cfg, ecfg.block_size, dt)
+        blocks = budget // bb
+        out[dt] = {"bytes_per_block": bb, "blocks_in_budget": int(blocks),
+                   "blocks_per_request": bpr,
+                   "max_admissible_slots": int(blocks // bpr)}
+    out["slots_ratio_int8_vs_float"] = round(
+        out["int8"]["max_admissible_slots"]
+        / max(out["float"]["max_admissible_slots"], 1), 2)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Convenience constructor shared by the CLI, benchmarks and examples
 # ---------------------------------------------------------------------------
 
 def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
                  target_centroids: int = 8, ecfg: Optional[EngineConfig] = None,
-                 seed: int = 0, params=None, draft_params=None):
+                 seed: int = 0, params=None, draft_params=None,
+                 kv_smooth=None):
     """(engine, params): model + (optionally LCD-compressed) params wrapped in
     a ready ServingEngine.
 
     With `ecfg.speculative_k > 0` and no `draft_params`, the 2-bit self-draft
     is built here by re-clustering the target's weights
-    (core/clustered_params.py make_draft_params)."""
+    (core/clustered_params.py make_draft_params). With `ecfg.kv_dtype ==
+    "int8"` and no `kv_smooth`, the cache smoothing vectors are calibrated
+    here (calibrate_kv_smooth)."""
     ecfg = EngineConfig() if ecfg is None else ecfg
     cfg = get_config(arch)
     if use_reduced:
@@ -754,5 +886,11 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
             draft_params, report = make_draft_params(
                 params, draft_centroids=ecfg.draft_centroids)
             logger.info("LCD draft: " + report.summary())
+        resolved_kv = ecfg.kv_dtype or (
+            "int8" if cfg.kv_cache_dtype == "int8" else "float")
+        if resolved_kv == "int8" and kv_smooth is None:
+            kv_smooth = calibrate_kv_smooth(model, params, seed=seed)
+            logger.info("int8 KV cache: smoothing calibrated "
+                        "(Eq. 9 candidate search per layer x kv-head)")
     return ServingEngine(model, params, ecfg, mesh=mesh,
-                         draft_params=draft_params), params
+                         draft_params=draft_params, kv_smooth=kv_smooth), params

@@ -45,7 +45,8 @@ def _run_continuous(args) -> None:
                         max_blocks_per_slot=args.blocks_per_slot,
                         prefill_chunk=args.prefill_chunk,
                         speculative_k=args.speculative,
-                        draft_centroids=args.draft_centroids)
+                        draft_centroids=args.draft_centroids,
+                        kv_dtype=args.kv_dtype)
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
                              ecfg=ecfg)
@@ -101,9 +102,17 @@ def main() -> None:
                          "only; 0 = off)")
     ap.add_argument("--draft-centroids", type=int, default=4,
                     help="centroid count of the self-draft (4 = 2-bit)")
+    ap.add_argument("--kv-dtype", choices=("float", "int8"), default=None,
+                    help="paged KV block-pool dtype (DESIGN.md §9): int8 "
+                         "stores smoothed codes + per-(block-slot, kv-head) "
+                         "scales for ~3.5x the admissible slots per f32 "
+                         "pool byte; default follows the model config "
+                         "(continuous mode only)")
     args = ap.parse_args()
     if args.speculative and not args.continuous:
         ap.error("--speculative requires --continuous")
+    if args.kv_dtype and not args.continuous:
+        ap.error("--kv-dtype applies to the paged engine; add --continuous")
     if args.continuous:
         _run_continuous(args)
     else:

@@ -298,6 +298,22 @@ def attn_block(
 # Paged attention block (continuous-batching serving engine, DESIGN.md §5)
 # ---------------------------------------------------------------------------
 
+def quantize_kv(t: jax.Array, smooth: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Smoothed symmetric int8 quantization of one step's K or V
+    (DESIGN.md §9): divide channel outliers away with the calibrated
+    per-(kv-head, channel) smoothing vector (Eq. 11's transform applied to
+    the cache instead of a GEMM input), then absmax-quantize per (token,
+    kv-head).
+
+    t: (..., KV, D); smooth: (KV, D). Returns (codes int8 (..., KV, D),
+    scale f32 (..., KV)); dequant is `codes * scale * smooth`."""
+    ts = t.astype(jnp.float32) / smooth.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(ts), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    codes = jnp.clip(jnp.round(ts / scale), -127, 127).astype(jnp.int8)
+    return codes, scale[..., 0]
+
+
 def paged_attn_block(
     p: Dict[str, Any],
     x: jax.Array,                 # (S_slots, T, d_model) — T new tokens/slot
@@ -309,7 +325,11 @@ def paged_attn_block(
     block_tables: jax.Array,      # (S_slots, max_blocks) int32 logical->physical
     lengths: jax.Array,           # (S_slots,) tokens already in the cache
     n_new: jax.Array,             # (S_slots,) valid tokens among the T fed
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    kc_scale: Optional[jax.Array] = None,   # (num_blocks, block_size, KV) f32
+    vc_scale: Optional[jax.Array] = None,   # int8 cache only (DESIGN.md §9)
+    k_smooth: Optional[jax.Array] = None,   # (KV, D) f32 smoothing vectors
+    v_smooth: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, ...]:
     """One attention block over the paged KV cache (DESIGN.md §5).
 
     Every slot advances by up to T tokens in the same traced computation —
@@ -324,10 +344,21 @@ def paged_attn_block(
     scatter. Reads gather the slot's blocks back into logical order, so the
     attention math is identical to a contiguous cache of the same length —
     which is what makes engine output bit-equal to single-request decoding
-    (tests/test_serving_engine.py)."""
+    (tests/test_serving_engine.py).
+
+    int8 cache (kc.dtype == int8, DESIGN.md §9): appended K/V are smoothed
+    and absmax-quantized per (token, kv-head) (`quantize_kv`), scales scatter
+    into their own pools through the same block table, and reads dequantize —
+    on TPU through the fused Pallas kernel
+    (kernels/paged_attention.py, dequant in VMEM, no dequantized HBM tensor),
+    elsewhere through the jnp gather fallback. Both widths quantize each
+    token identically, so the width-independence the engine's parity
+    contracts rely on is preserved within a kv dtype. Returns
+    (out, kc, vc[, kc_scale, vc_scale])."""
     b, t, _ = x.shape
     hd, nh, nkv = cfg.hd, cfg.n_heads_eff, cfg.n_kv_heads
     nb, bs = kc.shape[0], kc.shape[1]
+    int8_kv = kc.dtype == jnp.int8
 
     q = linear(x, p["wq"], p.get("bq")).reshape(b, t, nh, hd)
     k = linear(x, p["wk"], p.get("bk")).reshape(b, t, nkv, hd)
@@ -343,13 +374,54 @@ def paged_attn_block(
         pos // bs, block_tables.shape[1] - 1), axis=1)          # (S, T)
     blk = jnp.where(valid, blk, nb)
     off = pos % bs
-    kc = kc.at[blk, off].set(k.astype(kc.dtype), mode="drop")
-    vc = vc.at[blk, off].set(v.astype(vc.dtype), mode="drop")
+    if int8_kv:
+        kq8, ks8 = quantize_kv(k, k_smooth)
+        vq8, vs8 = quantize_kv(v, v_smooth)
+        kc = kc.at[blk, off].set(kq8, mode="drop")
+        vc = vc.at[blk, off].set(vq8, mode="drop")
+        kc_scale = kc_scale.at[blk, off].set(ks8, mode="drop")
+        vc_scale = vc_scale.at[blk, off].set(vs8, mode="drop")
+    else:
+        kc = kc.at[blk, off].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[blk, off].set(v.astype(vc.dtype), mode="drop")
+
+    q = maybe_shard(q, "slots", None, None, None)
+    if int8_kv:
+        from repro.kernels.paged_attention import (
+            paged_dequant_attention, resolved_paged_attention_mode)
+        # gather each slot's logical view IN INT8 — the cache's HBM read
+        # traffic stays at the quantized byte count on every path
+        kv_kq = kc[block_tables].reshape(b, -1, nkv, hd)
+        kv_vq = vc[block_tables].reshape(b, -1, nkv, hd)
+        kv_ks = kc_scale[block_tables].reshape(b, -1, nkv)
+        kv_vs = vc_scale[block_tables].reshape(b, -1, nkv)
+        kv_kq = maybe_shard(kv_kq, "slots", None, "kv", None)
+        kv_vq = maybe_shard(kv_vq, "slots", None, "kv", None)
+        kv_ks = maybe_shard(kv_ks, "slots", None, "kv")
+        kv_vs = maybe_shard(kv_vs, "slots", None, "kv")
+        mode = resolved_paged_attention_mode()
+        if mode in ("kernel", "interpret"):
+            o = paged_dequant_attention(
+                q, kv_kq, kv_ks, kv_vq, kv_vs, k_smooth, v_smooth,
+                lengths, n_new, jnp.asarray(layer_window, jnp.int32),
+                softcap=cfg.attn_softcap, interpret=(mode == "interpret"))
+        else:
+            # jnp fallback (CPU CI / non-TPU): same math, XLA materializes
+            # the dequantized view
+            kv_k = (kv_kq.astype(jnp.float32) * kv_ks[..., None]
+                    * k_smooth[None, None]).astype(x.dtype)
+            kv_v = (kv_vq.astype(jnp.float32) * kv_vs[..., None]
+                    * v_smooth[None, None]).astype(x.dtype)
+            k_pos = jnp.arange(kv_k.shape[1])
+            o = _attn_chunk(q, kv_k, kv_v, pos, k_pos, causal=True,
+                            window=layer_window, softcap=cfg.attn_softcap,
+                            scale=1.0 / np.sqrt(hd), k_len=lengths + n_new)
+        o = o.reshape(b, t, nh * hd)
+        return linear(o, p["wo"]), kc, vc, kc_scale, vc_scale
 
     # gather each slot's logical view: (S, max_blocks*block_size, KV, D)
     kv_k = kc[block_tables].reshape(b, -1, nkv, hd).astype(x.dtype)
     kv_v = vc[block_tables].reshape(b, -1, nkv, hd).astype(x.dtype)
-    q = maybe_shard(q, "slots", None, None, None)
     kv_k = maybe_shard(kv_k, "slots", None, "kv", None)
     kv_v = maybe_shard(kv_v, "slots", None, "kv", None)
 

@@ -68,9 +68,13 @@ class Model:
     def supports_paging(self) -> bool:
         return self._paged_decode is not None
 
-    def init_paged_cache(self, num_blocks: int, block_size: int):
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         kv_dtype: Optional[str] = None):
+        """kv_dtype: "float" | "int8" (quantized block pool, DESIGN.md §9);
+        None resolves from cfg.kv_cache_dtype."""
         assert self.supports_paging(), f"{self.cfg.family}: no paged decode"
-        return self._init_paged_cache(self.cfg, num_blocks, block_size)
+        return self._init_paged_cache(self.cfg, num_blocks, block_size,
+                                      kv_dtype)
 
     def paged_decode(self, params, cache, tokens, lengths, n_new, block_tables):
         assert self.supports_paging(), f"{self.cfg.family}: no paged decode"

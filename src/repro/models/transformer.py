@@ -273,22 +273,46 @@ def decode_step(
 # Paged decode (continuous-batching serving engine, DESIGN.md §5)
 # ---------------------------------------------------------------------------
 
-def init_paged_cache(cfg: ModelConfig, num_blocks: int,
-                     block_size: int) -> Dict[str, Any]:
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     kv_dtype: Optional[str] = None) -> Dict[str, Any]:
     """Block-pool KV cache: physical blocks are owned by the engine's free-list
     allocator (launch/engine.py); the model only sees per-step block tables.
     Unlike `init_cache` there is no `pos` — per-slot lengths live with the
-    scheduler, not the cache."""
-    if cfg.kv_cache_dtype == "int8":
-        raise NotImplementedError(
-            "paged KV cache: int8 KV quantization not yet wired (per-block "
-            "scales need their own pool); serve the engine with bf16/f32 KV")
+    scheduler, not the cache.
+
+    kv_dtype "float" stores blocks in the model dtype; "int8" (DESIGN.md §9)
+    stores int8 codes plus per-(block-slot, kv-head) scale pools and
+    per-(layer, kv-head, channel) smoothing vectors (identity until the
+    engine installs calibrated ones — launch/engine.py calibrate_kv_smooth).
+    None resolves from cfg.kv_cache_dtype, so a config that quantizes its
+    plain decode cache pages quantized too."""
+    if kv_dtype is None:
+        kv_dtype = "int8" if cfg.kv_cache_dtype == "int8" else "float"
+    assert kv_dtype in ("float", "int8"), kv_dtype
     shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, cfg.hd)
-    return {"k": jnp.zeros(shape, _cache_dtype(cfg)),
-            "v": jnp.zeros(shape, _cache_dtype(cfg))}
+    if kv_dtype != "int8":
+        # "float" means the MODEL dtype, deliberately not _cache_dtype(cfg):
+        # that helper maps kv_cache_dtype="int8" configs to bare int8, which
+        # in the paged layout would be codes with no scale pools — the §9
+        # quantized layout is selected only through kv_dtype="int8"
+        return {"k": jnp.zeros(shape, cfg.jnp_dtype),
+                "v": jnp.zeros(shape, cfg.jnp_dtype)}
+    sshape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads)
+    smshape = (cfg.n_layers, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, jnp.int8),
+        "v": jnp.zeros(shape, jnp.int8),
+        "k_scale": jnp.full(sshape, 1e-6, jnp.float32),
+        "v_scale": jnp.full(sshape, 1e-6, jnp.float32),
+        "k_smooth": jnp.ones(smshape, jnp.float32),
+        "v_smooth": jnp.ones(smshape, jnp.float32),
+    }
 
 
-PAGED_CACHE_NAMES = {"k": "layers,blocks,.,kv,.", "v": "layers,blocks,.,kv,."}
+PAGED_CACHE_NAMES = {"k": "layers,blocks,.,kv,.", "v": "layers,blocks,.,kv,.",
+                     "k_scale": "layers,blocks,.,kv",
+                     "v_scale": "layers,blocks,.,kv",
+                     "k_smooth": "layers,kv,.", "v_smooth": "layers,kv,."}
 
 
 def _paged_trunk(
@@ -302,30 +326,53 @@ def _paged_trunk(
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Embed + scanned layer stack over the paged KV cache; shared by the
     decode step (last-token logits) and the verify step (all-position logits).
-    Returns (final-norm hidden states (S, T, d), updated block pool)."""
+    Returns (final-norm hidden states (S, T, d), updated block pool).
+
+    int8 block pools (DESIGN.md §9) scan their scale pools and smoothing
+    vectors alongside k/v; whether the cache is quantized is decided by the
+    pool dtype — data, not a trace shape — so the engine's bounded-trace
+    contract is unchanged within a kv dtype."""
     x = params["embed"].astype(cfg.jnp_dtype)[tokens]          # (S, T, d)
     windows = jnp.asarray(layer_windows(cfg))
+    int8_kv = cache["k"].dtype == jnp.int8
 
     def body(carry, layer):
         x, aux = carry
-        p, w, kc, vc = layer
+        if int8_kv:
+            p, w, kc, vc, kcs, vcs, ksm, vsm = layer
+            kv_kw = dict(kc=kc, vc=vc, kc_scale=kcs, vc_scale=vcs,
+                         k_smooth=ksm, v_smooth=vsm)
+        else:
+            p, w, kc, vc = layer
+            kv_kw = dict(kc=kc, vc=vc)
         h = norm(x, p["ln_attn"], cfg.norm)
-        attn_out, kc, vc = paged_attn_block(
-            p["attn"], h, cfg, layer_window=w, kc=kc, vc=vc,
-            block_tables=block_tables, lengths=lengths, n_new=n_new)
+        attn_out, *new_kv = paged_attn_block(
+            p["attn"], h, cfg, layer_window=w,
+            block_tables=block_tables, lengths=lengths, n_new=n_new, **kv_kw)
         x = x + attn_out
         h = norm(x, p["ln_mlp"], cfg.norm)
         if cfg.n_experts:
             mlp_out, a = moe_block(p["mlp"], h, cfg)
         else:
             mlp_out, a = mlp_block(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
-        return (x + mlp_out, aux + a), (kc, vc)
+        return (x + mlp_out, aux + a), tuple(new_kv)
 
-    (x, _aux), (ks, vs) = jax.lax.scan(
-        body, (x, jnp.zeros((), jnp.float32)),
-        (params["blocks"], windows, cache["k"], cache["v"]))
+    if int8_kv:
+        (x, _aux), (ks, vs, kss, vss) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], windows, cache["k"], cache["v"],
+             cache["k_scale"], cache["v_scale"],
+             cache["k_smooth"], cache["v_smooth"]))
+        new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss,
+                     "k_smooth": cache["k_smooth"],
+                     "v_smooth": cache["v_smooth"]}
+    else:
+        (x, _aux), (ks, vs) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], windows, cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
 
-    return norm(x, params["ln_final"], cfg.norm), {"k": ks, "v": vs}
+    return norm(x, params["ln_final"], cfg.norm), new_cache
 
 
 def paged_decode_step(

@@ -167,6 +167,69 @@ class TestRollback:
         assert eng.alloc.num_free == eng.ecfg.num_blocks
 
 
+class TestPoolExhaustion:
+    def _assert_pool_partitioned(self, eng):
+        """No corruption: the free list plus every slot's owned blocks
+        partition the physical pool exactly — no block lost, none
+        double-owned (the §5 allocator invariant, under speculative
+        pressure)."""
+        owned = [b for r in eng.slots if r is not None for b in r.blocks]
+        free = list(eng.alloc._free)
+        assert len(owned) == len(set(owned)), f"double-owned: {owned}"
+        assert not set(owned) & set(free), "block both owned and free"
+        assert sorted(owned + free) == list(range(eng.ecfg.num_blocks))
+
+    def test_allocator_exhaustion_during_drafting(self, tiny, draft2bit):
+        """BlockAllocator exhaustion on the SPECULATIVE path: every round
+        reserves blocks for lengths + k + 1 tokens up front (DESIGN.md §8),
+        so a pool sized for one long request exhausts while another waits.
+        Admission must be refused (the queued request stays QUEUED — no
+        partial grant), the pool must stay partitioned every step, and both
+        requests must still finish with full budgets once blocks free."""
+        _, model, params = tiny
+        # one slot's worth of blocks + one spare: the second request cannot
+        # be admitted while the first drafts (its reservation holds the pool)
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=6,
+                            max_blocks_per_slot=5, prefill_chunk=8,
+                            speculative_k=K)
+        eng = ServingEngine(model, params, ecfg, draft_params=draft2bit)
+        r1 = eng.submit(_prompt(95, 8), 8)     # 8+8+3 = 19 tokens -> 5 blocks
+        r2 = eng.submit(_prompt(96, 8), 8)
+        saw_refused_admission = False
+        while eng.busy:
+            eng.step()
+            self._assert_pool_partitioned(eng)
+            if r2.state == "queued" and r1.state == "running":
+                saw_refused_admission = True
+                assert r2.slot is None and not r2.blocks
+        assert saw_refused_admission, (
+            "pool pressure never refused admission — geometry too generous "
+            "for the scenario this test pins")
+        eng.assert_bounded_traces()
+        assert r1.state == r2.state == "finished"
+        assert len(r1.out_tokens) == len(r2.out_tokens) == 8
+        assert eng.alloc.num_free == ecfg.num_blocks
+
+    def test_starved_spec_round_waits_without_corruption(self, tiny, draft2bit):
+        """A decoding slot that cannot reserve k+1 headroom sits rounds out
+        (n_new masks it) rather than partially writing; with preemption in
+        play both requests drain and the pool returns whole."""
+        _, model, params = tiny
+        ecfg = EngineConfig(num_slots=2, block_size=2, num_blocks=9,
+                            max_blocks_per_slot=9, prefill_chunk=4,
+                            speculative_k=K)
+        eng = ServingEngine(model, params, ecfg, draft_params=draft2bit)
+        r1 = eng.submit(_prompt(97, 4), 7)     # 4+7+3 = 14 tokens -> 7 blocks
+        r2 = eng.submit(_prompt(98, 4), 7)
+        while eng.busy:
+            eng.step()
+            self._assert_pool_partitioned(eng)
+        assert r1.state == r2.state == "finished"
+        assert len(r1.out_tokens) == len(r2.out_tokens) == 7
+        assert r1.preemptions + r2.preemptions >= 1   # pressure was real
+        assert eng.alloc.num_free == ecfg.num_blocks
+
+
 class TestAccounting:
     def test_acceptance_length_bookkeeping(self, tiny, draft2bit):
         """Every verify round records 0 <= accepted <= k; emitted tokens
