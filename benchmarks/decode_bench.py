@@ -1,6 +1,7 @@
-"""Decode-path benchmark: the scan-compiled serving engine, dense vs LCD.
+"""Decode-path benchmark: the scan-compiled serving engine, dense vs LCD,
+swept over the weight bit-width axis (DESIGN.md §10).
 
-    PYTHONPATH=src python -m benchmarks.decode_bench --smoke
+    PYTHONPATH=src python -m benchmarks.decode_bench --smoke [--bits 4,2,mixed]
 
 Measures the quantities the paper's 6.2x serving claim rides on and writes
 them to BENCH_decode.json so the speedup trajectory is tracked PR over PR:
@@ -9,9 +10,15 @@ them to BENCH_decode.json so the speedup trajectory is tracked PR over PR:
     (one batched prefill + one lax.scan decode with a donated KV cache);
   * the trace-count invariant: exactly 2 traced computations per generation
     (one prefill, one scan) — NOT one dispatch per token;
+  * the bits axis: one serving row per packing width (4, 2, and a
+    Fisher-budgeted mixed config), each with its packed weight-byte count —
+    2-bit must stream ≤ half the int4 layout's bytes (asserted) — and, in
+    --smoke mode, interpret-kernel vs gather-oracle TOKEN parity (asserted:
+    the real kernel dispatch and the reference contraction must pick
+    identical greedy tokens at every width);
   * per-layer fused-kernel timings: the single-pass smooth+quant+LUT GEMM
     (decode GEMV shape) vs the dense matmul, plus the v5e roofline byte model
-    (packed int4 codes vs bf16 weight stream).
+    (packed sub-byte codes vs bf16 weight stream).
 
 --smoke runs a reduced config for a few tokens with the Pallas kernels in
 interpreter mode — CPU-runnable on every CI pass (numbers are correctness
@@ -27,11 +34,22 @@ import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core.api import is_clustered
+from repro.core.clustered_params import packed_weight_bytes
 from repro.kernels.ops import lut_gemm_fused, lut_serving, packed_view
 from repro.launch.serve import serve
 
 HBM_BW = 819e9  # v5e
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
+# the bits axis: uniform widths plus the Fisher-budgeted mixed config
+BITS_CONFIGS = {
+    "4": dict(weight_bits=4),
+    "3": dict(weight_bits=3),
+    "2": dict(weight_bits=2),
+    # 2.5 mean bits lands a real per-layer mix on the smoke proxy (the
+    # Fisher scores keep some layers at 3-bit while the rest drop to 2)
+    "mixed": dict(weight_bits=4, bits_budget=2.5),
+}
 
 
 def _layer_kernel_rows(params, batch: int, interpret: bool):
@@ -61,56 +79,112 @@ def _layer_kernel_rows(params, batch: int, interpret: bool):
 
         us_fused, _ = timed(lambda: lut_gemm_fused(
             x, inv, packed, ct.codebook, act, quantize=quant,
-            interpret=interpret).block_until_ready())
+            interpret=interpret, nbits=ct.nbits).block_until_ready())
         us_dense, _ = timed(lambda: ((x / ct.smooth) @ w).block_until_ready())
         bytes_bf16 = d_in * d_out * 2
-        bytes_int4 = d_in * d_out // 2 + 16 * 4
+        bytes_packed = d_in * d_out * ct.nbits // 8 + 16 * 4
         rows.append({
             "path": jax.tree_util.keystr(kp), "d_in": int(d_in),
-            "d_out": int(d_out), "m": batch, "fused_us": round(us_fused, 2),
+            "d_out": int(d_out), "m": batch, "nbits": int(ct.nbits),
+            "fused_us": round(us_fused, 2),
             "dense_us": round(us_dense, 2), "quantized_acts": bool(quant),
-            "v5e_roofline_speedup": round(bytes_bf16 / bytes_int4, 2),
+            "v5e_roofline_speedup": round(bytes_bf16 / bytes_packed, 2),
         })
         emit(f"decode/layer_{d_in}x{d_out}", us_fused,
-             f"dense_us={us_dense:.1f};roofline={bytes_bf16 / bytes_int4:.2f}x")
+             f"dense_us={us_dense:.1f};"
+             f"roofline={bytes_bf16 / bytes_packed:.2f}x")
     return rows
 
 
-def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
+def _bits_row(name, cfg, params, serve_kw, smoke, on_tpu):
+    """One serving row of the bits axis: compress at the config's width
+    policy, decode through the real kernel dispatch, account the packed
+    stream bytes, and (smoke) assert kernel-vs-oracle token parity."""
+    st = {}
+    with lut_serving(None if on_tpu else "interpret"):
+        gen, cparams = serve(lcd=True, params=params, stats=st, **cfg,
+                             **serve_kw)
+    got = packed_weight_bytes(cparams)
+    int4 = packed_weight_bytes(cparams, nbits=4)
+    row = {
+        "tokens_per_s": st["tokens_per_s"], "decode_s": st["decode_s"],
+        "traces": st["traces"],
+        "mean_packed_bits": round(st.get("mean_packed_bits", 4.0), 3),
+        "packed_weight_bytes": got,
+        "weight_bytes_vs_int4": round(got / max(int4, 1), 4),
+    }
+    if name == "2":
+        assert got * 2 <= int4, (
+            f"2-bit stream must be ≤ half the int4 layout: {got} vs {int4}")
+    if smoke:
+        # parity: the interpret-mode kernel dispatch and the gather oracle
+        # must emit identical greedy tokens — the §10 acceptance contract
+        with lut_serving("ref"):
+            gen_ref, _ = serve(lcd=True, params=cparams, **cfg, **serve_kw)
+        row["kernel_vs_oracle_tokens_equal"] = bool(
+            np.array_equal(np.asarray(gen), np.asarray(gen_ref)))
+        assert row["kernel_vs_oracle_tokens_equal"], (
+            f"bits={name}: interpret-kernel tokens diverged from the gather "
+            f"oracle")
+    emit(f"decode/bits_{name}_tokens_per_s", st["decode_s"] * 1e6,
+         f"tok_s={st['tokens_per_s']:.1f};"
+         f"bytes_vs_int4={row['weight_bytes_vs_int4']}")
+    return row, cparams
+
+
+def run(smoke: bool = True, arch: str = "llama2-7b",
+        bits: str = "4,2,mixed") -> dict:
     if smoke:
         batch, prompt_len, gen_tokens = 2, 8, 8
     else:
         batch, prompt_len, gen_tokens = 8, 64, 128
     on_tpu = jax.default_backend() == "tpu"
+    serve_kw = dict(arch=arch, use_reduced=smoke, batch=batch,
+                    prompt_len=prompt_len, gen_tokens=gen_tokens)
 
-    dense_stats, lcd_stats = {}, {}
-    _, params = serve(arch, use_reduced=smoke, lcd=False, batch=batch,
-                      prompt_len=prompt_len, gen_tokens=gen_tokens,
-                      stats=dense_stats)
+    dense_stats = {}
+    _, params = serve(lcd=False, stats=dense_stats, **serve_kw)
+
     # off-TPU, force the fused Pallas kernels through the interpreter so the
-    # LCD row measures (and regression-guards) the real serving dispatch, not
+    # LCD rows measure (and regression-guard) the real serving dispatch, not
     # the gather fallback
-    with lut_serving(None if on_tpu else "interpret"):
-        _, cparams = serve(arch, use_reduced=smoke, lcd=True, batch=batch,
-                           prompt_len=prompt_len, gen_tokens=gen_tokens,
-                           params=params, stats=lcd_stats)
+    bits_rows, cparams4 = {}, None
+    for name in [b.strip() for b in bits.split(",") if b.strip()]:
+        if name not in BITS_CONFIGS:
+            raise SystemExit(
+                f"unknown bits config {name!r}; choose from "
+                f"{sorted(BITS_CONFIGS)}")
+        bits_rows[name], cp = _bits_row(name, BITS_CONFIGS[name], params,
+                                        serve_kw, smoke, on_tpu)
+        if name == "4":
+            cparams4 = cp
 
-    for name, st in (("dense", dense_stats), ("lcd", lcd_stats)):
+    lcd_stats = ({k: bits_rows["4"][k] for k in
+                  ("tokens_per_s", "decode_s", "traces")}
+                 if "4" in bits_rows else None)
+    for name, st in (("dense", dense_stats),
+                     *(() if lcd_stats is None else (("lcd", lcd_stats),))):
         assert st["traces"] == {"prefill": 1, "decode": 1}, (
             f"{name}: scan engine must trace exactly one prefill and one "
             f"decode scan, got {st['traces']}")
         emit(f"decode/{name}_tokens_per_s", st["decode_s"] * 1e6,
              f"tok_s={st['tokens_per_s']:.1f};traces="
              f"{st['traces']['prefill']}+{st['traces']['decode']}")
+    for name, row in bits_rows.items():
+        assert row["traces"] == {"prefill": 1, "decode": 1}, (
+            f"bits={name}: 2-trace invariant broken: {row['traces']}")
 
-    layers = _layer_kernel_rows(cparams, batch, interpret=not on_tpu)
+    layers = _layer_kernel_rows(cparams4 if cparams4 is not None else params,
+                                batch, interpret=not on_tpu)
 
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
         "batch": batch, "prompt_len": prompt_len, "gen_tokens": gen_tokens,
         "dense": dense_stats, "lcd": lcd_stats,
         "lcd_vs_dense_tokens_per_s": round(
-            lcd_stats["tokens_per_s"] / max(dense_stats["tokens_per_s"], 1e-9), 3),
+            (lcd_stats or {"tokens_per_s": 0})["tokens_per_s"]
+            / max(dense_stats["tokens_per_s"], 1e-9), 3),
+        "bits": bits_rows,
         "layers": layers,
         "note": ("interpret-mode wall times are correctness telemetry, not "
                  "perf claims" if not on_tpu else "compiled TPU timings"),
@@ -126,8 +200,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config, few tokens, CPU/interpret friendly")
     ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--bits", default="4,2,mixed",
+                    help="comma list from {4,3,2,mixed}: serving rows of the "
+                         "bit-width axis (mixed = bits_budget 2.5, a real "
+                         "Fisher-scored per-layer split on the smoke proxy)")
     args = ap.parse_args()
-    out = run(smoke=args.smoke, arch=args.arch)
+    out = run(smoke=args.smoke, arch=args.arch, bits=args.bits)
     print(json.dumps({k: out[k] for k in
                       ("lcd_vs_dense_tokens_per_s", "backend", "smoke")}))
 

@@ -27,6 +27,11 @@ def main() -> None:
                          "tokens, CPU/interpret friendly (default; "
                          "--no-smoke for full)")
     ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--bits", default="4,2,mixed",
+                    help="decode suite: comma list from {4,3,2,mixed} — the "
+                         "weight bit-width axis (DESIGN.md §10); each entry "
+                         "is a parity-asserted serving row in "
+                         "BENCH_decode.json")
     args = ap.parse_args()
 
     from benchmarks import (decode_bench, fig_benchmarks, kernel_bench,
@@ -42,8 +47,9 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline.run,
         # static-batch serving perf (tokens/s + per-layer fused kernel
-        # timings); emits BENCH_decode.json so the trajectory is tracked
-        "decode": lambda: decode_bench.run(smoke=args.smoke),
+        # timings) across the weight bit-width axis; emits BENCH_decode.json
+        # so the trajectory is tracked
+        "decode": lambda: decode_bench.run(smoke=args.smoke, bits=args.bits),
         # continuous-batching engine under Poisson traffic (paged KV cache,
         # per-request latency percentiles); emits BENCH_serving.json and in
         # --smoke mode asserts single-request parity — the documented

@@ -41,7 +41,7 @@ import numpy as np
 from benchmarks.common import emit, trained_proxy
 from benchmarks.serving_bench import (_percentiles, _poisson_workload,
                                       _run_traffic)
-from repro.core.clustered_params import make_draft_params
+from repro.core.clustered_params import make_draft_params, packed_weight_bytes
 from repro.launch.engine import (EngineConfig, ServingEngine,
                                  calibrate_kv_smooth, kv_capacity_report)
 
@@ -87,6 +87,19 @@ def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
     cfg, model, params, _, _, _ = trained_proxy("llama2-7b-proxy")
     draft_params, draft_report = make_draft_params(
         params, draft_centroids=draft_centroids)
+    # the draft bits axis (DESIGN.md §10): the pool's weight stream is
+    # genuinely sub-byte packed — at the default 4 centroids it must cost
+    # ≤ HALF the int4 layout per byte of codes (the PR-4 draft paid 4-bit
+    # bandwidth regardless of K)
+    draft_bytes = packed_weight_bytes(draft_params)
+    draft_int4_bytes = packed_weight_bytes(draft_params, nbits=4)
+    if draft_centroids <= 4:
+        assert draft_bytes * 2 <= draft_int4_bytes, (
+            f"2-bit draft stream must be ≤ half the int4 layout: "
+            f"{draft_bytes} vs {draft_int4_bytes}")
+    emit("spec/draft_packed_bytes", 0.0,
+         f"bytes={draft_bytes};vs_int4="
+         f"{draft_bytes / max(draft_int4_bytes, 1):.3f}")
     workload = _poisson_workload(np.random.default_rng(0), n_req, max_prompt,
                                  gen, mean_gap_steps=2.0)
 
@@ -145,6 +158,12 @@ def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
         "backend": jax.default_backend(),
         "speculative_k": k, "draft_centroids": draft_centroids,
         "draft_equiv_bits": round(draft_report.equivalent_bits, 2),
+        "draft_packed_bits": round(draft_report.mean_packed_bits, 2),
+        "draft_weight_bytes": {
+            "packed": draft_bytes,
+            "int4_layout": draft_int4_bytes,
+            "ratio": round(draft_bytes / max(draft_int4_bytes, 1), 4),
+        },
         "engine": geom,
         "workload": {"requests": n_req, "max_prompt": max_prompt,
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},

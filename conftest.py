@@ -17,6 +17,7 @@ TIER1_MODULES = {
     "test_serving_engine",
     "test_speculative",
     "test_paged_kv",
+    "test_packing",
 }
 
 

@@ -1,8 +1,9 @@
 """Model-level LCD API: ClusteredTensor params + compress_model.
 
 A `ClusteredTensor` is the first-class framework representation of an LCD-
-compressed weight: int8 centroid codes (packed to int4 at serving time), a tiny
-codebook, and the folded smoothing vector. It is a NamedTuple, hence a pytree —
+compressed weight: int8 centroid codes (packed at 2/3/4 bits per code for
+serving — the `nbits` axis, DESIGN.md §10), a tiny codebook, and the folded
+smoothing vector. It is a NamedTuple, hence a pytree —
 it flows through jit/pjit, shards like the dense weight it replaces (codes carry
 the weight's sharding; the codebook is replicated), and its codebook is
 *trainable* (gradients flow through the gather in `clustered_matmul`), which is
@@ -41,8 +42,10 @@ class ClusteredTensor(NamedTuple):
     host-side id-keyed cache — a device sync on every GEMM and a correctness
     hazard when Python reused a freed array's id):
 
-      packed    — int4 code pairs (two per byte along d_in); what the Pallas
-                  serving kernel streams from HBM (¼ the bytes of bf16).
+      packed    — sub-byte packed codes along d_in at `nbits` per code
+                  (DESIGN.md §10: 2 codes/byte at 4-bit, 8 codes in 3 bytes
+                  at 3-bit, 4 codes/byte at 2-bit); what the Pallas serving
+                  kernel streams from HBM (⅛·nbits the bytes of bf16).
       inv_scale — the Eq. 11 fused multiplier 1/(s_m·s_q) per input channel
                   (1/s_m when no activation scale is calibrated).
       act_scale — s_q, the symmetric int8 scale of the smoothed activations;
@@ -52,13 +55,21 @@ class ClusteredTensor(NamedTuple):
     All three default to None so the tuple stays constructible from bare
     distillation outputs; the serving path falls back gracefully (see
     kernels/ops.packed_view).
+
+    `nbits` is the tensor's packing width — static pytree METADATA, not a
+    leaf: ClusteredTensor is registered below with nbits as aux_data, so it
+    stays a plain Python int through jit/scan/grad (kernel dispatch branches
+    on it at trace time) and two tensors of different width have different
+    treedefs. Everything K-related keys off it: codes < 2**nbits, the packed
+    layout, and the kernel's unpack tile.
     """
     codes: jax.Array       # (d_in, d_out) int8 centroid indices
     codebook: jax.Array    # (K,) f32 centroids of the smoothed weight
     smooth: jax.Array      # (d_in,) f32 smoothing vector (ones if unsmoothed)
-    packed: Optional[jax.Array] = None     # (ceil(d_in/2), d_out) uint8
+    packed: Optional[jax.Array] = None     # (packed_rows(d_in, nbits), d_out) uint8
     inv_scale: Optional[jax.Array] = None  # (d_in,) f32 = 1/(s_m·s_q)
     act_scale: Optional[jax.Array] = None  # () f32 s_q; None = uncalibrated
+    nbits: int = 4                         # packing width ∈ {2, 3, 4} (static)
 
     @property
     def shape(self):  # duck-type a little like an array for shape checks
@@ -69,26 +80,39 @@ class ClusteredTensor(NamedTuple):
         return int(self.codebook.shape[-1])
 
 
+# nbits rides as aux_data (see the class docstring). The explicit registration
+# takes precedence over JAX's built-in NamedTuple flattening; keys mirror the
+# NamedTuple attribute keys so checkpoint manifests and keystr paths are
+# unchanged.
+_CT_ARRAY_FIELDS = ("codes", "codebook", "smooth", "packed", "inv_scale",
+                    "act_scale")
+
+jax.tree_util.register_pytree_with_keys(
+    ClusteredTensor,
+    lambda ct: (tuple((jax.tree_util.GetAttrKey(f), getattr(ct, f))
+                      for f in _CT_ARRAY_FIELDS), ct.nbits),
+    lambda nbits, children: ClusteredTensor(*children, nbits=nbits),
+)
+
+
 def is_clustered(x: Any) -> bool:
     return isinstance(x, ClusteredTensor)
 
 
-def _unpack_codes(codes: jax.Array, d_in: int) -> jax.Array:
-    """Unpack int4 pairs along axis -2 when codes are stored packed
-    ((..., d_in/2, d_out) uint8 -> (..., d_in, d_out) int32)."""
+def _unpack_codes(codes: jax.Array, d_in: int, nbits: int = 4) -> jax.Array:
+    """Unpack sub-byte codes along axis -2 when codes are stored packed
+    ((..., packed_rows, d_out) uint8 -> (..., d_in, d_out) int32). Codes
+    already at full d_in rows pass through as int32."""
     if codes.shape[-2] == d_in:
         return codes.astype(jnp.int32)
-    assert codes.shape[-2] * 2 == d_in, (codes.shape, d_in)
-    lo = (codes & 0xF).astype(jnp.int32)
-    hi = (codes >> 4).astype(jnp.int32)
-    inter = jnp.stack([lo, hi], axis=-2)                 # (..., d/2, 2, d_out)
-    return inter.reshape(*codes.shape[:-2], d_in, codes.shape[-1])
+    from repro.core.lut import unpack_codes
+    return unpack_codes(codes, d_in, nbits)
 
 
 def clustered_dequant(ct: ClusteredTensor) -> jax.Array:
     """Dense equivalent weight W = diag(1/s) @ codebook[codes] (f32)."""
     d_in = ct.smooth.shape[-1]
-    w_s = ct.codebook[_unpack_codes(ct.codes, d_in)]
+    w_s = ct.codebook[_unpack_codes(ct.codes, d_in, ct.nbits)]
     return w_s / ct.smooth[:, None]
 
 
@@ -96,23 +120,29 @@ def clustered_matmul(x: jax.Array, ct: ClusteredTensor, *, dtype=None) -> jax.Ar
     """x @ W via the smoothed factorization: (x / s) @ codebook[codes].
 
     The gather keeps the codebook trainable; on TPU the production path swaps
-    this for kernels/lut_matmul (same contraction, fused int4 stream). Codes
-    may be packed (two int4 per byte along d_in) — the serve-at-scale layout."""
+    this for kernels/lut_matmul (same contraction, fused sub-byte stream).
+    Codes may be packed (nbits codes per 8 bits along d_in) — the
+    serve-at-scale layout."""
     dtype = dtype or x.dtype
     d_in = ct.smooth.shape[-1]
-    w_s = ct.codebook[_unpack_codes(ct.codes, d_in)].astype(dtype)
+    w_s = ct.codebook[_unpack_codes(ct.codes, d_in, ct.nbits)].astype(dtype)
     xs = (x / ct.smooth.astype(x.dtype))
     return xs @ w_s
 
 
 def dense_to_clustered(w: np.ndarray, codes: np.ndarray, codebook: np.ndarray,
                        smooth: Optional[np.ndarray] = None,
-                       act_scale: Optional[float] = None) -> ClusteredTensor:
+                       act_scale: Optional[float] = None,
+                       nbits: int = 4) -> ClusteredTensor:
     """Assemble a ClusteredTensor with its serving artifacts precomputed:
-    packed int4 codes and the Eq. 11 inv_scale (host-side, once, here — never
-    per call on the serving path)."""
-    from repro.core.lut import pack4
+    packed sub-byte codes (at `nbits` per code) and the Eq. 11 inv_scale
+    (host-side, once, here — never per call on the serving path)."""
+    from repro.core.lut import pack_codes
 
+    if codebook.shape[-1] > (1 << nbits):
+        raise ValueError(
+            f"{codebook.shape[-1]} centroids do not fit {nbits}-bit codes "
+            f"(max {1 << nbits})")
     d_in = w.shape[0]
     s = np.ones((d_in,), np.float32) if smooth is None else np.asarray(smooth, np.float32)
     sq = 1.0 if act_scale is None else float(act_scale)
@@ -120,9 +150,10 @@ def dense_to_clustered(w: np.ndarray, codes: np.ndarray, codebook: np.ndarray,
         codes=jnp.asarray(codes.astype(np.int8)),
         codebook=jnp.asarray(codebook, jnp.float32),
         smooth=jnp.asarray(s),
-        packed=jnp.asarray(pack4(codes.astype(np.uint8))),
+        packed=jnp.asarray(pack_codes(codes.astype(np.uint8), nbits)),
         inv_scale=jnp.asarray((1.0 / (s * sq)).astype(np.float32)),
         act_scale=None if act_scale is None else jnp.float32(act_scale),
+        nbits=nbits,
     )
 
 
@@ -166,14 +197,43 @@ class CompressReport:
     equivalent_bits: float                       # average log2(K) over clustered params
     params_clustered: int
     params_total: int
+    # per-layer packing width (DESIGN.md §10) — what the serving stream
+    # actually pays per weight, as opposed to equivalent_bits (log2 K, the
+    # information content). Uniform-width runs record the same value
+    # everywhere; bits_budget runs record the Fisher-scored assignment.
+    bits_assignment: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bits_budget: Optional[float] = None          # requested global mean; None = uniform
+    mean_packed_bits: float = 4.0                # element-weighted mean of the widths
 
     def summary(self) -> str:
         ks = list(self.centroid_counts.values())
+        mix: Dict[int, int] = {}
+        for b in self.bits_assignment.values():
+            mix[b] = mix.get(b, 0) + 1
+        mix_s = "/".join(f"{mix.get(b, 0)}x{b}b" for b in sorted(mix))
         return (
             f"clustered {len(ks)} tensors | centroids min/avg/max = "
             f"{min(ks)}/{np.mean(ks):.1f}/{max(ks)} | equiv bits = {self.equivalent_bits:.2f} "
-            f"| coverage = {self.params_clustered / max(self.params_total, 1):.1%}"
+            f"| packed bits = {self.mean_packed_bits:.2f} ({mix_s})"
+            f"{f' <= budget {self.bits_budget:g}' if self.bits_budget else ''}"
+            f" | coverage = {self.params_clustered / max(self.params_total, 1):.1%}"
         )
+
+    def bits_table(self) -> str:
+        """Per-layer deployment inventory: path, packing width, centroid
+        count — what `launch/serve.py --describe` prints so a deployed
+        mixed-precision model is inspectable."""
+        if not self.bits_assignment:
+            return "(no clustered tensors)"
+        width = max(len(p) for p in self.bits_assignment)
+        lines = [f"{'layer':<{width}}  bits  K"]
+        for p in sorted(self.bits_assignment):
+            lines.append(f"{p:<{width}}  {self.bits_assignment[p]:>4}  "
+                         f"{self.centroid_counts.get(p, '?')}")
+        lines.append(f"mean packed bits = {self.mean_packed_bits:.2f}"
+                     + (f" (budget {self.bits_budget:g})"
+                        if self.bits_budget else " (uniform)"))
+        return "\n".join(lines)
 
 
 def compress_model(
@@ -185,13 +245,34 @@ def compress_model(
     target_centroids: int = 0,                   # 0 = adaptive (layer-wise dynamic, Fig. 8)
     predicate: Callable[[str, Any], bool] = default_predicate,
     smooth_amax: Optional[Dict[str, np.ndarray]] = None,  # per-layer input absmax (optional)
+    nbits: int = 4,                              # uniform packing width (DESIGN.md §10)
+    bits_budget: Optional[float] = None,         # global mean-bits cap -> mixed precision
 ) -> Tuple[Any, CompressReport]:
     """Run LCD over every eligible weight in `params`.
 
     If loss_fn+calib_batches are given, the diag Hessian is the empirical Fisher
     accumulated over the calibration batches; otherwise H = 1 (pure geometric
     clustering — used in unit tests and for fast smoke paths).
+
+    Bit-width policy (DESIGN.md §10): `nbits` sets a uniform packing width
+    (codes per layer are capped at 2**nbits centroids and packed at that
+    width). `bits_budget` instead assigns widths PER LAYER under a global
+    element-weighted mean-bits cap: each layer is scored by its empirical-
+    Fisher quantization sensitivity Σ H·w² (mean), and `optim/compress.py
+    allocate_bits` demotes the least-sensitive layers from 4 → 3 → 2 bits
+    until the budget holds — the layers the Hessian says can least afford
+    precision keep it.
     """
+    from repro.core.lut import SUPPORTED_NBITS
+    from repro.optim.compress import allocate_bits
+
+    if nbits not in SUPPORTED_NBITS:
+        raise ValueError(f"nbits must be one of {SUPPORTED_NBITS}; got {nbits}")
+    if bits_budget is not None and not (
+            min(SUPPORTED_NBITS) <= bits_budget <= max(SUPPORTED_NBITS)):
+        raise ValueError(
+            f"bits_budget must lie in [{min(SUPPORTED_NBITS)}, "
+            f"{max(SUPPORTED_NBITS)}]; got {bits_budget}")
     leaves = _flatten_with_paths(params)
     eligible = {p for p, x in leaves if predicate(p, x)}
 
@@ -208,18 +289,50 @@ def compress_model(
         fisher = jax.tree_util.tree_map(lambda a: a / n, acc)
         fisher = dict(_flatten_with_paths(fisher))
 
+    # --- 1b. per-layer bit-width assignment (DESIGN.md §10) ------------------
+    def _hessian_of(path, w):
+        if fisher is not None and path in fisher:
+            h = np.asarray(jax.device_get(fisher[path]), np.float32).reshape(w.shape)
+            return h + 1e-2 * h.mean() + 1e-12
+        return np.ones_like(w)
+
+    # scoring transfers each weight to host and builds its damped Hessian;
+    # keep both for process() below so budget mode pays the transfer once
+    # (entries are popped as consumed, bounding peak host memory)
+    _wh_cache: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+
+    if bits_budget is not None:
+        scores: Dict[str, float] = {}
+        sizes: Dict[str, int] = {}
+        for p, x in leaves:
+            if p not in eligible:
+                continue
+            w = np.asarray(jax.device_get(x), np.float32)
+            h = _hessian_of(p, w)
+            _wh_cache[p] = (w, h)
+            # second-order quantization sensitivity: E[H · w²] (the Eq. 2
+            # quadratic expansion's per-weight loss curvature times the
+            # squared magnitude the quantizer must represent)
+            scores[p] = float(np.mean(h * w ** 2))
+            sizes[p] = int(w.size)
+        bits_map = allocate_bits(scores, sizes, bits_budget)
+    else:
+        bits_map = {p: nbits for p in eligible}
+
     # --- 2+3. per-layer smoothing + distillation -----------------------------
     per_layer: Dict[str, DistillReport] = {}
     smoothing: Dict[str, str] = {}
     counts: Dict[str, int] = {}
+    bits_assignment: Dict[str, int] = {}
+    elem_bits: Dict[str, int] = {}               # path -> elements * width
     n_clustered = 0
     n_total = 0
 
-    def _one_slice(path, w2, h2, s):
+    def _one_slice(path, w2, h2, s, k_target):
         """LCD on a single (d_in, d_out) matrix. Returns (codes, centroids, rep)."""
         w_s = fold_into_weight(w2, s)
-        if target_centroids:
-            codes, state, rep = distill_layer_to_k(w_s, h2, target_centroids, cfg)
+        if k_target:
+            codes, state, rep = distill_layer_to_k(w_s, h2, k_target, cfg)
         else:
             codes, state, rep = distill_layer(w_s, h2, cfg)
         cents = rep.final_centroids
@@ -235,7 +348,11 @@ def compress_model(
         n_total += int(np.prod(x.shape)) if hasattr(x, "shape") else 0
         if path not in eligible:
             return x
-        w = np.asarray(jax.device_get(x), np.float32)
+        if path in _wh_cache:
+            w, h_cached = _wh_cache.pop(path)
+        else:
+            w = np.asarray(jax.device_get(x), np.float32)
+            h_cached = None
 
         # smoothing (needs input absmax; falls back to identity otherwise).
         # A calibrated smoothing also yields s_q, which arms the serving
@@ -251,24 +368,33 @@ def compress_model(
             act_scale = None
             smoothing[path] = "identity"
 
-        if fisher is not None and path in fisher:
-            h = np.asarray(jax.device_get(fisher[path]), np.float32).reshape(w.shape)
-            h = h + 1e-2 * h.mean() + 1e-12
+        h = h_cached if h_cached is not None else _hessian_of(path, w)
+
+        # the layer's packing width caps its centroid count: K <= 2**bits.
+        # Sub-4-bit layers always distill to exactly 2**bits (a 2-bit stream
+        # with K=16 codes cannot exist); 4-bit keeps the adaptive behavior
+        # when no explicit target is set.
+        layer_bits = bits_map.get(path, nbits)
+        kcap = 1 << layer_bits
+        if target_centroids:
+            k_target = min(target_centroids, kcap)
+        elif layer_bits < 4:
+            k_target = kcap
         else:
-            h = np.ones_like(w)
+            k_target = 0
 
         if w.ndim == 2:
-            codes, cents, rep = _one_slice(path, w, h, s)
+            codes, cents, rep = _one_slice(path, w, h, s, k_target)
             counts[path] = len(cents)
             per_layer[path] = rep
             ct = dense_to_clustered(w, codes, cents, smooth=s,
-                                    act_scale=act_scale)
+                                    act_scale=act_scale, nbits=layer_bits)
         else:
             # stacked (L, d_in, d_out): per-slice LCD — this IS the paper's
             # layer-wise dynamic centroid allocation (Fig. 8). Codebooks pad
             # to the max K across slices (padded entries duplicate the last
             # centroid; no code references them).
-            slices = [_one_slice(f"{path}[{l}]", w[l], h[l], s)
+            slices = [_one_slice(f"{path}[{l}]", w[l], h[l], s, k_target)
                       for l in range(w.shape[0])]
             kmax = max(len(c) for _, c, _ in slices)
             codes = np.stack([cd for cd, _, _ in slices])
@@ -279,7 +405,7 @@ def compress_model(
             per_layer[path] = slices[0][2]
             for l, (_, c, rep_l) in enumerate(slices):
                 per_layer[f"{path}[{l}]"] = rep_l
-            from repro.core.lut import pack4
+            from repro.core.lut import pack_codes
             sq = 1.0 if act_scale is None else float(act_scale)
             s_full = np.broadcast_to(s, (w.shape[0], w.shape[1])).copy()
             ct = ClusteredTensor(
@@ -287,16 +413,19 @@ def compress_model(
                 codebook=jnp.asarray(cbs, jnp.float32),
                 smooth=jnp.asarray(s_full),
                 packed=jnp.asarray(np.stack(
-                    [pack4(codes[l].astype(np.uint8))
+                    [pack_codes(codes[l].astype(np.uint8), layer_bits)
                      for l in range(codes.shape[0])])),
                 inv_scale=jnp.asarray((1.0 / (s_full * sq)).astype(np.float32)),
                 # leading L axis so lax.scan slices it with the other leaves
                 act_scale=None if act_scale is None else jnp.full(
                     (w.shape[0],), act_scale, jnp.float32),
+                nbits=layer_bits,
             )
+        bits_assignment[path] = layer_bits
+        elem_bits[path] = w.size * layer_bits
         n_clustered += w.size
         logger.info(f"LCD {path}: {w.shape} -> K={counts[path]} "
-                    f"smooth={smoothing[path]}")
+                    f"bits={layer_bits} smooth={smoothing[path]}")
         return ct
 
     new_leaves = {p: process(p, x) for p, x in leaves}
@@ -313,6 +442,10 @@ def compress_model(
         equivalent_bits=float(np.mean([np.log2(max(k, 1)) for k in ks])),
         params_clustered=n_clustered,
         params_total=n_total,
+        bits_assignment=bits_assignment,
+        bits_budget=bits_budget,
+        mean_packed_bits=(sum(elem_bits.values()) / max(n_clustered, 1)
+                          if bits_assignment else float(nbits)),
     )
     if counts:
         logger.info("compress_model: " + report.summary())

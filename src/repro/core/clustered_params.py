@@ -3,23 +3,27 @@ the 2-bit draft clustering used for self-speculative decoding.
 
 For the dry-run and the serve path we need the *shape* of an LCD-compressed
 model without running distillation on a 100B-parameter tree: this module maps
-a model's parameter table to the equivalent ClusteredTensor tree (packed int4
-codes + codebook + smoothing vector per eligible weight), as ShapeDtypeStructs
-with matching logical-name strings.
+a model's parameter table to the equivalent ClusteredTensor tree (sub-byte
+packed codes + codebook + smoothing vector per eligible weight), as
+ShapeDtypeStructs with matching logical-name strings.
 
-The codes inherit the dense weight's sharding names; codebooks/smooth vectors
-are tiny and replicated. Codes pack two 4-bit indices per byte along d_in —
-the dry-run's memory_analysis then shows the real ~4x weight-byte reduction
-(vs bf16) that the serving roofline banks on.
+The codes inherit the dense weight's sharding names at every packing width
+(packed_rows(d_in) shards exactly like d_in); codebooks/smooth vectors are
+tiny and replicated. Codes pack at `nbits` per index along d_in (DESIGN.md
+§10: 2 codes/byte at 4-bit down to 4 codes/byte at 2-bit) — the dry-run's
+memory_analysis then shows the real 4–8x weight-byte reduction (vs bf16)
+that the serving roofline banks on.
 
 `make_draft_params` (DESIGN.md §8) builds the serving engine's speculative
 draft: every LCD-compressed model already contains its own cheap approximation
-— the same weights clustered down to 4 centroids (2 bits) — so the draft model
-costs no extra training and no second checkpoint.
+— the same weights clustered down to 4 centroids AND packed at true 2 bits
+(half the stream bytes of the int4 layout) — so the draft model costs no
+extra training, no second checkpoint, and half the draft-pool weight HBM.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import math
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +31,7 @@ import numpy as np
 
 from repro.core.api import (ClusteredTensor, _unpack_codes, clustered_dequant,
                             compress_model, default_predicate, is_clustered)
+from repro.core.lut import packed_rows
 from repro.models import params as PT
 from repro.models.registry import Model
 
@@ -53,9 +58,10 @@ def _eligible(path: str, decl: PT.ParamDecl) -> bool:
     return True
 
 
-def clustered_abstract(model: Model) -> Tuple[Any, Any, Dict[str, int]]:
+def clustered_abstract(model: Model,
+                       nbits: int = 4) -> Tuple[Any, Any, Dict[str, int]]:
     """Returns (abstract_params, names, stats) where eligible dense weights are
-    replaced by abstract ClusteredTensors (packed uint8 codes)."""
+    replaced by abstract ClusteredTensors (codes stored packed at `nbits`)."""
     table = model.table
     flat = jax.tree_util.tree_flatten_with_path(
         table, is_leaf=lambda x: isinstance(x, PT.ParamDecl))[0]
@@ -70,18 +76,21 @@ def clustered_abstract(model: Model) -> Tuple[Any, Any, Dict[str, int]]:
         names = decl.names
         if _eligible(path, decl):
             *lead, d_in, d_out = decl.shape
-            assert d_in % 2 == 0, (path, decl.shape)
             w_names = names.split(",")
-            codes_shape = tuple(lead) + (d_in // 2, d_out)
+            codes_shape = tuple(lead) + (packed_rows(d_in, nbits), d_out)
             ct = ClusteredTensor(
                 codes=jax.ShapeDtypeStruct(codes_shape, jnp.uint8),
                 codebook=jax.ShapeDtypeStruct(tuple(lead) + (KC,), jnp.float32),
                 smooth=jax.ShapeDtypeStruct(tuple(lead) + (d_in,), jnp.float32),
+                nbits=nbits,
             )
             nm = ClusteredTensor(
-                codes=names,  # same logical dims: d_in/2 shards identically
+                # same logical dims at every width: packed_rows(d_in) shards
+                # identically to d_in (both divide the same mesh axes)
+                codes=names,
                 codebook=",".join(w_names[:len(lead)] + ["."]),
                 smooth=",".join(w_names[:len(lead)] + [w_names[-2]]),
+                nbits=nbits,
             )
             aleaves.append(ct)
             nleaves.append(nm)
@@ -99,10 +108,12 @@ def clustered_abstract(model: Model) -> Tuple[Any, Any, Dict[str, int]]:
     return aparams, names_tree, stats
 
 
-def materialize_clustered(model: Model, key: jax.Array) -> Any:
+def materialize_clustered(model: Model, key: jax.Array, nbits: int = 4) -> Any:
     """Random-but-valid clustered params (smoke tests of the serve path):
-    random codes, sorted random codebook, unit smoothing."""
-    aparams, _, _ = clustered_abstract(model)
+    random packed codes (uniform random bytes are valid bit-streams at every
+    width — each sub-byte field lands in [0, 2**nbits)), sorted random
+    codebook, unit smoothing."""
+    aparams, _, _ = clustered_abstract(model, nbits=nbits)
 
     def one(leaf, k):
         if isinstance(leaf, ClusteredTensor):
@@ -111,7 +122,8 @@ def materialize_clustered(model: Model, key: jax.Array) -> Any:
                                        ).astype(jnp.uint8)
             cb = jnp.sort(jax.random.normal(k2, leaf.codebook.shape) * 0.02, axis=-1)
             return ClusteredTensor(codes, cb.astype(jnp.float32),
-                                   jnp.ones(leaf.smooth.shape, jnp.float32))
+                                   jnp.ones(leaf.smooth.shape, jnp.float32),
+                                   nbits=leaf.nbits)
         return jax.random.normal(k, leaf.shape, jnp.float32).astype(leaf.dtype) * 0.02
 
     leaves, treedef = jax.tree_util.tree_flatten(
@@ -136,27 +148,72 @@ def dequantize_params(params) -> Any:
         if leaf.codebook.ndim == 1:
             return clustered_dequant(leaf)
         # stacked layers/experts: per-slice codebooks (L, K)
-        codes = _unpack_codes(leaf.codes, leaf.smooth.shape[-1])
+        codes = _unpack_codes(leaf.codes, leaf.smooth.shape[-1], leaf.nbits)
         dense = jax.vmap(lambda cb, cd: cb[cd])(leaf.codebook, codes)
         return dense / leaf.smooth[..., :, None]
 
     return jax.tree_util.tree_map(one, params, is_leaf=is_clustered)
 
 
+def packed_weight_bytes(params, nbits: Optional[int] = None) -> int:
+    """Total serving-stream bytes of every clustered leaf's packed codes —
+    the operand the decode GEMV actually reads from HBM. With `nbits` given,
+    report the HYPOTHETICAL byte count of repacking the same codes at that
+    width (the denominator of the §10 halving claims)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=is_clustered):
+        if not is_clustered(leaf):
+            continue
+        d_in, d_out = leaf.smooth.shape[-1], leaf.codes.shape[-1]
+        lead = int(np.prod(leaf.codes.shape[:-2], dtype=np.int64))
+        width = leaf.nbits if nbits is None else nbits
+        total += lead * packed_rows(d_in, width) * d_out
+    return total
+
+
 def make_draft_params(params, *, draft_centroids: int = 4,
                       predicate=default_predicate) -> Tuple[Any, Any]:
-    """2-bit LCD draft of `params` for self-speculative decoding.
+    """Extreme low-bit LCD draft of `params` for self-speculative decoding.
 
     The draft is the model's OWN weights re-clustered to `draft_centroids`
-    (4 = 2 bits, the paper's extreme low-bit point): no second checkpoint, no
-    draft training. If `params` is already LCD-compressed, clustered leaves
-    are dequantized first so the draft tracks the weights the target actually
-    serves. Embeddings, norms and the lm_head stay full precision (they are
-    never clustered, DESIGN.md §6), so the draft's vocab distribution lives in
-    the same space as the target's — which is what makes greedy draft tokens
-    land often enough to be worth verifying.
+    (4 = 2 bits, the paper's extreme low-bit point) and packed at the
+    narrowest width that holds them (ceil(log2 K), floored at 2): no second
+    checkpoint, no draft training, and — at the default — HALF the packed
+    weight bytes of the int4 layout, asserted below, which halves the
+    HBM stream of every draft decode step (DESIGN.md §8/§10). If `params` is
+    already LCD-compressed, clustered leaves are dequantized first so the
+    draft tracks the weights the target actually serves. Embeddings, norms
+    and the lm_head stay full precision (they are never clustered, DESIGN.md
+    §6), so the draft's vocab distribution lives in the same space as the
+    target's — which is what makes greedy draft tokens land often enough to
+    be worth verifying.
 
     Returns (draft_params, CompressReport)."""
+    draft_nbits = max(2, math.ceil(math.log2(max(draft_centroids, 2))))
     dense = dequantize_params(params)
-    return compress_model(dense, target_centroids=draft_centroids,
-                          predicate=predicate)
+    draft, report = compress_model(dense, target_centroids=draft_centroids,
+                                   predicate=predicate, nbits=draft_nbits)
+    # postcondition (ValueError, not assert — python -O strips asserts):
+    # every clustered leaf actually packed at the draft width. A fallback to
+    # a wider layout would silently double the draft's HBM stream.
+    for leaf in jax.tree_util.tree_leaves(draft, is_leaf=is_clustered):
+        if is_clustered(leaf) and leaf.nbits != draft_nbits:
+            raise ValueError(
+                f"draft leaf packed at {leaf.nbits}-bit; expected "
+                f"{draft_nbits}-bit for draft_centroids={draft_centroids}")
+    if draft_nbits == 2:
+        got = packed_weight_bytes(draft)
+        int4 = packed_weight_bytes(draft, nbits=4)
+        # ≤½ the int4 stream, up to one byte-row of group padding per tensor
+        # (a layer with d_in % 4 ∈ {1, 2} packs a final partial group the
+        # int4 layout does not pay for)
+        slack = sum(
+            int(np.prod(leaf.codes.shape[:-2], dtype=np.int64))
+            * leaf.codes.shape[-1]
+            for leaf in jax.tree_util.tree_leaves(draft, is_leaf=is_clustered)
+            if is_clustered(leaf))
+        if got * 2 > int4 + slack:
+            raise ValueError(
+                f"2-bit draft must stream ≤ half the int4 weight bytes; "
+                f"got {got} vs int4 {int4} (+{slack} group-padding slack)")
+    return draft, report

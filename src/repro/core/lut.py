@@ -47,43 +47,136 @@ class LUTLayer:
 
 
 # ---------------------------------------------------------------------------
-# int4 packing (two codes per byte, little-nibble first)
+# Sub-byte code packing (DESIGN.md §10)
+#
+# Width contract, shared by the host packers here, the device packers, the
+# jnp unpackers, and the Pallas `_decode_tile` unpack variants
+# (kernels/lut_matmul.py):
+#
+#   nbits=4 : 2 codes/byte           byte  = c0 | c1<<4           (1 byte/group)
+#   nbits=3 : 8 codes in 3 bytes     word24 = Σ c_j << 3j, stored little-endian
+#                                    as rows [3g, 3g+1, 3g+2]     (3 bytes/group)
+#   nbits=2 : 4 codes/byte           byte  = c0|c1<<2|c2<<4|c3<<6 (1 byte/group)
+#
+# Codes pack along axis -2 (d_in — the GEMV streaming axis); d_in pads up to a
+# whole group with zero codes (code 0 always exists and padded rows are never
+# referenced: the activation/inv_scale padding is zero there). Packed rows per
+# d_in therefore satisfy rows * 8 == padded_d_in * nbits, and a kernel block of
+# bk input rows always covers exactly bk*nbits/8 packed rows — the property the
+# BlockSpecs rely on.
 # ---------------------------------------------------------------------------
 
-def pack4(codes: np.ndarray) -> np.ndarray:
-    """Pack uint4 codes along axis 0 (d_in): (d_in, d_out) -> (d_in/2, d_out)."""
+SUPPORTED_NBITS = (2, 3, 4)
+CODES_PER_GROUP = {2: 4, 3: 8, 4: 2}
+BYTES_PER_GROUP = {2: 1, 3: 3, 4: 1}
+
+
+def _check_nbits(nbits: int) -> None:
+    if nbits not in SUPPORTED_NBITS:
+        raise ValueError(f"nbits must be one of {SUPPORTED_NBITS}; got {nbits}")
+
+
+def padded_d_in(d_in: int, nbits: int) -> int:
+    """d_in rounded up to a whole packing group."""
+    _check_nbits(nbits)
+    g = CODES_PER_GROUP[nbits]
+    return -(-d_in // g) * g
+
+
+def packed_rows(d_in: int, nbits: int) -> int:
+    """Rows of the packed byte tensor covering `d_in` input channels."""
+    return padded_d_in(d_in, nbits) * nbits // 8
+
+
+def pack_codes(codes: np.ndarray, nbits: int = 4) -> np.ndarray:
+    """Host-side pack along axis -2: (..., d_in, d_out) uint codes ->
+    (..., packed_rows(d_in), d_out) uint8. Codes must be < 2**nbits."""
+    _check_nbits(nbits)
     c = np.asarray(codes, np.uint8)
-    assert c.max(initial=0) < 16, "codes must fit in 4 bits (K <= 16)"
-    if c.shape[0] % 2:
-        c = np.concatenate([c, np.zeros((1,) + c.shape[1:], np.uint8)], axis=0)
-    lo = c[0::2]
-    hi = c[1::2]
-    return (lo | (hi << 4)).astype(np.uint8)
+    if int(c.max(initial=0)) >= (1 << nbits):
+        raise ValueError(
+            f"codes must fit in {nbits} bits (K <= {1 << nbits}); "
+            f"got max code {int(c.max(initial=0))}")
+    g = CODES_PER_GROUP[nbits]
+    pad = -c.shape[-2] % g
+    if pad:
+        widths = [(0, 0)] * c.ndim
+        widths[-2] = (0, pad)
+        c = np.pad(c, widths)
+    lead, d_out = c.shape[:-2], c.shape[-1]
+    grp = c.reshape(*lead, -1, g, d_out).astype(np.uint32)
+    word = np.zeros(grp.shape[:-2] + (d_out,), np.uint32)
+    for j in range(g):
+        word |= grp[..., j, :] << (nbits * j)
+    bpg = BYTES_PER_GROUP[nbits]
+    byts = np.stack([(word >> (8 * b)) & 0xFF for b in range(bpg)], axis=-2)
+    return byts.reshape(*lead, -1, d_out).astype(np.uint8)
 
 
-def pack4_jax(codes: jnp.ndarray) -> jnp.ndarray:
-    """Device-side pack4 along axis -2: (..., d_in, d_out) -> (..., d_in/2, d_out).
+def pack_codes_jax(codes: jnp.ndarray, nbits: int = 4) -> jnp.ndarray:
+    """Device-side pack along axis -2: (..., d_in, d_out) ->
+    (..., packed_rows(d_in), d_out) uint8.
 
     jit-traceable (no host sync) — the fallback for ClusteredTensors built
     before packed codes became a first-class field; compress_model packs once
     at compression time so the serving path never calls this.
     """
+    _check_nbits(nbits)
     c = codes.astype(jnp.uint8)
-    if c.shape[-2] % 2:
-        pad = [(0, 0)] * c.ndim
-        pad[-2] = (0, 1)
-        c = jnp.pad(c, pad)
-    lo = c[..., 0::2, :]
-    hi = c[..., 1::2, :]
-    return (lo | (hi << 4)).astype(jnp.uint8)
+    g = CODES_PER_GROUP[nbits]
+    pad = -c.shape[-2] % g
+    if pad:
+        widths = [(0, 0)] * c.ndim
+        widths[-2] = (0, pad)
+        c = jnp.pad(c, widths)
+    lead, d_out = c.shape[:-2], c.shape[-1]
+    grp = c.reshape(*lead, -1, g, d_out).astype(jnp.uint32)
+    word = jnp.zeros(grp.shape[:-2] + (d_out,), jnp.uint32)
+    for j in range(g):
+        word |= grp[..., j, :] << (nbits * j)
+    bpg = BYTES_PER_GROUP[nbits]
+    byts = jnp.stack([(word >> (8 * b)) & 0xFF for b in range(bpg)], axis=-2)
+    return byts.reshape(*lead, -1, d_out).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray, d_in: int, nbits: int = 4) -> jnp.ndarray:
+    """Inverse of pack_codes along axis -2: (..., packed_rows, d_out) uint8 ->
+    (..., d_in, d_out) int32 (group padding sliced off)."""
+    _check_nbits(nbits)
+    rows = packed.shape[-2]
+    if rows != packed_rows(d_in, nbits):
+        raise ValueError(
+            f"packed tensor has {rows} rows but d_in={d_in} at {nbits}-bit "
+            f"packing needs {packed_rows(d_in, nbits)} "
+            f"(= padded_d_in * nbits / 8); shape {packed.shape}")
+    g = CODES_PER_GROUP[nbits]
+    bpg = BYTES_PER_GROUP[nbits]
+    lead, d_out = packed.shape[:-2], packed.shape[-1]
+    grp = packed.reshape(*lead, -1, bpg, d_out).astype(jnp.int32)
+    word = grp[..., 0, :]
+    for b in range(1, bpg):
+        word = word | (grp[..., b, :] << (8 * b))
+    mask = (1 << nbits) - 1
+    full = jnp.stack([(word >> (nbits * j)) & mask for j in range(g)],
+                     axis=-2).reshape(*lead, -1, d_out)
+    return full[..., :d_in, :]
+
+
+# int4 compatibility wrappers (the seed layout: two codes per byte)
+
+def pack4(codes: np.ndarray) -> np.ndarray:
+    """Pack uint4 codes along axis -2: (d_in, d_out) -> (d_in/2, d_out)."""
+    return pack_codes(codes, 4)
+
+
+def pack4_jax(codes: jnp.ndarray) -> jnp.ndarray:
+    """Device-side pack4 along axis -2 (see pack_codes_jax)."""
+    return pack_codes_jax(codes, 4)
 
 
 def unpack4(packed: jnp.ndarray, d_in: int) -> jnp.ndarray:
     """Inverse of pack4: (d_in/2, d_out) uint8 -> (d_in, d_out) int32."""
-    lo = (packed & 0xF).astype(jnp.int32)
-    hi = (packed >> 4).astype(jnp.int32)
-    full = jnp.stack([lo, hi], axis=1).reshape(-1, *packed.shape[1:])
-    return full[:d_in]
+    return unpack_codes(packed, d_in, 4)
 
 
 # ---------------------------------------------------------------------------

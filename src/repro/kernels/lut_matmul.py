@@ -1,14 +1,21 @@
-"""Pallas TPU kernel: fused int4-code dequant + matmul (the LCD serving GEMM).
+"""Pallas TPU kernel: fused sub-byte-code dequant + matmul (the LCD serving GEMM).
 
-TPU-native translation of the paper's §4 bucket-LUT GEMM (DESIGN.md §2):
+TPU-native translation of the paper's §4 bucket-LUT GEMM (DESIGN.md §2, §10):
 
-  * weights arrive as *packed int4 centroid codes* (two per byte) — ¼ the HBM
-    bytes of bf16, which is the entire speedup for memory-bound decode GEMVs;
-  * the codebook (K ≤ 16 floats) lives in VMEM/registers for the whole kernel;
+  * weights arrive as *packed centroid codes* at a static `nbits` ∈ {2, 3, 4}
+    per code (core/lut.py packing contract: 2 codes/byte at 4-bit, 8 codes in
+    3 bytes at 3-bit, 4 codes/byte at 2-bit) — ⅛·nbits the HBM bytes of bf16
+    (¼ at 4-bit down to ⅛ at 2-bit), which is the entire speedup for
+    memory-bound decode GEMVs: the packed stream is the only operand advancing
+    with the GEMV grid, so a 2-bit tensor moves HALF the bytes of the int4
+    layout per token;
+  * the codebook (K ≤ 2^nbits ≤ 16 floats) lives in VMEM/registers for the
+    whole kernel;
   * the "table lookup" is realized as a branch-free select-sum
         w[i,j] = Σ_k  c_k * (code[i,j] == k)
-    over the ≤16 codebook entries — the TPU-idiomatic equivalent of a LUT read
-    (VPU compare+FMA, no gather, no serialization);
+    over the 2^nbits codebook entries — the TPU-idiomatic equivalent of a LUT
+    read (VPU compare+FMA, no gather, no serialization); narrower widths do
+    proportionally fewer selects;
   * the dequantized bf16 tile feeds a standard MXU matmul against the
     activation tile; accumulation in f32 scratch across the K grid dimension.
 
@@ -43,29 +50,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# Codebook capacity the kernel is specialized for: 4-bit codes (paper: K < 16
-# after distillation -> compact 4-bit representation, §4.2).
+from repro.core.lut import SUPPORTED_NBITS
+
+# Codebook capacity the kernel is specialized for: ≤4-bit codes (paper: K < 16
+# after distillation -> compact sub-byte representation, §4.2). Codebooks are
+# always padded to KC entries; an nbits-wide tensor references the first
+# 2^nbits of them. The width set (SUPPORTED_NBITS, imported above) comes from
+# the packing contract's single source of truth, core/lut.py.
 KC = 16
 
 
-def _decode_tile(packed_ref, codebook, bk: int, bn: int, out_dtype):
-    """Unpack (bk//2, bn) uint8 -> (bk, bn) int4 codes -> dequantized tile.
+def _check_packed_shape(k: int, packed_shape, nbits: int, caller: str) -> None:
+    """Explicit shape validation for the packed-code operand. A ValueError —
+    not a bare assert, which `python -O` strips — naming the packing width
+    and the offending shapes, so a 2-bit tensor routed through a 4-bit call
+    site fails loudly instead of streaming garbage codes."""
+    if nbits not in SUPPORTED_NBITS:
+        raise ValueError(
+            f"{caller}: nbits must be one of {SUPPORTED_NBITS}; got {nbits}")
+    k2 = packed_shape[0]
+    if k2 * 8 != k * nbits:
+        raise ValueError(
+            f"{caller}: packed codes have {k2} rows but K={k} at "
+            f"{nbits}-bit packing needs K*nbits/8 = {k * nbits / 8:g} "
+            f"(packed shape {tuple(packed_shape)}); did the activation and "
+            f"the packed tensor disagree on the packing width?")
 
-    Select-sum over the 16 codebook entries; compare+FMA on the VPU. The
-    interleave uses stack/reshape which lowers to cheap vector shuffles.
+
+def _decode_tile(packed_ref, codebook, bk: int, bn: int, out_dtype,
+                 nbits: int = 4):
+    """Unpack a (bk*nbits//8, bn) uint8 tile -> (bk, bn) codes -> dequantized
+    tile, at a static packing width (core/lut.py layout contract).
+
+    Select-sum over the 2^nbits codebook entries; compare+FMA on the VPU. The
+    interleaves use stack/reshape which lower to cheap vector shuffles; the
+    3-bit variant first splices each 3-byte group into one 24-bit word.
     """
-    packed = packed_ref[...]                              # (bk//2, bn) uint8
-    lo = (packed & 0xF).astype(jnp.int32)
-    hi = (packed >> 4).astype(jnp.int32)
-    codes = jnp.stack([lo, hi], axis=1).reshape(bk, bn)   # row 2i -> lo, 2i+1 -> hi
+    packed = packed_ref[...]                              # (bk*nbits//8, bn) uint8
+    if nbits == 4:
+        lo = (packed & 0xF).astype(jnp.int32)
+        hi = (packed >> 4).astype(jnp.int32)
+        codes = jnp.stack([lo, hi], axis=1).reshape(bk, bn)  # row 2i->lo, 2i+1->hi
+    elif nbits == 2:
+        parts = [((packed >> (2 * j)) & 0x3).astype(jnp.int32) for j in range(4)]
+        codes = jnp.stack(parts, axis=1).reshape(bk, bn)  # row 4i+j -> field j
+    else:  # nbits == 3: rows [3g, 3g+1, 3g+2] are one 24-bit little-endian word
+        grp = packed.reshape(bk // 8, 3, bn).astype(jnp.int32)
+        word = grp[:, 0] | (grp[:, 1] << 8) | (grp[:, 2] << 16)
+        parts = [(word >> (3 * j)) & 0x7 for j in range(8)]
+        codes = jnp.stack(parts, axis=1).reshape(bk, bn)  # row 8g+j -> field j
     w = jnp.zeros((bk, bn), jnp.float32)
-    for k in range(KC):
+    for k in range(1 << nbits):
         w += jnp.where(codes == k, codebook[k], 0.0)
     return w.astype(out_dtype)
 
 
 def _lut_matmul_kernel(x_ref, packed_ref, cb_ref, o_ref, acc_ref, *, bk: int, bn: int,
-                       nsteps: int, int8_act: bool):
+                       nsteps: int, int8_act: bool, nbits: int):
     """grid = (M/bm, N/bn, K/bk); K innermost so acc_ref carries partials."""
     ks = pl.program_id(2)
 
@@ -74,7 +115,7 @@ def _lut_matmul_kernel(x_ref, packed_ref, cb_ref, o_ref, acc_ref, *, bk: int, bn
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     cb = cb_ref[...]                                      # (KC,) f32 in SMEM/VMEM
-    w = _decode_tile(packed_ref, cb, bk, bn, jnp.float32)
+    w = _decode_tile(packed_ref, cb, bk, bn, jnp.float32, nbits)
     x = x_ref[...]
     if int8_act:
         x = x.astype(jnp.float32)                         # int8 -> f32 for MXU input
@@ -87,12 +128,23 @@ def _lut_matmul_kernel(x_ref, packed_ref, cb_ref, o_ref, acc_ref, *, bk: int, bn
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _check_blocks(m, k, n, bm, bk, bn, nbits, caller):
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"{caller}: pad shapes to block multiples: {(m, k, n)} vs "
+            f"{(bm, bk, bn)}")
+    if (bk * nbits) % 8:
+        raise ValueError(
+            f"{caller}: bk={bk} must cover whole packing groups at "
+            f"{nbits}-bit (bk*nbits divisible by 8)")
+
+
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype", "nbits")
 )
 def lut_matmul_f32(
     x: jax.Array,            # (M, K) float (bf16/f32) — pre-smoothed activations
-    packed_codes: jax.Array, # (K//2, N) uint8 — packed int4 centroid codes
+    packed_codes: jax.Array, # (K*nbits//8, N) uint8 — packed centroid codes
     codebook: jax.Array,     # (KC,) f32 — padded with zeros beyond the active K
     *,
     bm: int = 128,
@@ -100,26 +152,28 @@ def lut_matmul_f32(
     bk: int = 256,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    nbits: int = 4,
 ) -> jax.Array:
-    """Y = x @ codebook[codes]  with codes streamed as packed int4."""
+    """Y = x @ codebook[codes]  with codes streamed packed at `nbits`/code."""
     m, k = x.shape
-    k2, n = packed_codes.shape
-    assert k2 * 2 == k, (x.shape, packed_codes.shape)
-    assert codebook.shape == (KC,)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        f"pad shapes to block multiples: {(m, k, n)} vs {(bm, bk, bn)}"
-    )
+    n = packed_codes.shape[1]
+    _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_f32")
+    if codebook.shape != (KC,):
+        raise ValueError(f"codebook must be padded to ({KC},); got "
+                         f"{codebook.shape}")
+    _check_blocks(m, k, n, bm, bk, bn, nbits, "lut_matmul_f32")
     nsteps = k // bk
     grid = (m // bm, n // bn, nsteps)
     kernel = functools.partial(
-        _lut_matmul_kernel, bk=bk, bn=bn, nsteps=nsteps, int8_act=False
+        _lut_matmul_kernel, bk=bk, bn=bn, nsteps=nsteps, int8_act=False,
+        nbits=nbits,
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk * nbits // 8, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((KC,), lambda i, j, s: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
@@ -130,11 +184,11 @@ def lut_matmul_f32(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype", "nbits")
 )
 def lut_matmul_int8(
     q: jax.Array,            # (M, K) int8 — Eq. 11 activation indices
-    packed_codes: jax.Array, # (K//2, N) uint8
+    packed_codes: jax.Array, # (K*nbits//8, N) uint8
     codebook: jax.Array,     # (KC,) f32 centroids of the smoothed weights
     act_scale: jax.Array,    # scalar f32 — s_q
     *,
@@ -143,23 +197,28 @@ def lut_matmul_int8(
     bk: int = 256,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    nbits: int = 4,
 ) -> jax.Array:
     """Y = s_q * (q @ codebook[codes]) — the paper's bucket accumulation."""
     m, k = q.shape
-    k2, n = packed_codes.shape
-    assert k2 * 2 == k and codebook.shape == (KC,)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n = packed_codes.shape[1]
+    _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_int8")
+    if codebook.shape != (KC,):
+        raise ValueError(f"codebook must be padded to ({KC},); got "
+                         f"{codebook.shape}")
+    _check_blocks(m, k, n, bm, bk, bn, nbits, "lut_matmul_int8")
     nsteps = k // bk
     grid = (m // bm, n // bn, nsteps)
     kernel = functools.partial(
-        _lut_matmul_kernel, bk=bk, bn=bn, nsteps=nsteps, int8_act=True
+        _lut_matmul_kernel, bk=bk, bn=bn, nsteps=nsteps, int8_act=True,
+        nbits=nbits,
     )
     y = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk * nbits // 8, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((KC,), lambda i, j, s: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
@@ -192,7 +251,8 @@ def _transform_tile(x_ref, inv_ref, quantize: bool):
 
 
 def _fused_kernel(x_ref, inv_ref, packed_ref, cb_ref, o_ref, acc_ref, *,
-                  bk: int, bn: int, nsteps: int, quantize: bool, k_axis: int):
+                  bk: int, bn: int, nsteps: int, quantize: bool, k_axis: int,
+                  nbits: int):
     """One body for both fused variants; K is grid axis `k_axis` (innermost)
     so acc_ref carries partials. GEMM: grid (M/bm, N/bn, K/bk), k_axis=2.
     GEMV: grid (N/bn, K/bk), k_axis=1."""
@@ -203,7 +263,7 @@ def _fused_kernel(x_ref, inv_ref, packed_ref, cb_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     xs = _transform_tile(x_ref, inv_ref, quantize)
-    w = _decode_tile(packed_ref, cb_ref[...], bk, bn, jnp.float32)
+    w = _decode_tile(packed_ref, cb_ref[...], bk, bn, jnp.float32, nbits)
     acc_ref[...] += jnp.dot(xs, w, preferred_element_type=jnp.float32)
 
     @pl.when(ks == nsteps - 1)
@@ -212,12 +272,14 @@ def _fused_kernel(x_ref, inv_ref, packed_ref, cb_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("quantize", "bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("quantize", "bm", "bn", "bk", "interpret", "out_dtype",
+                     "nbits")
 )
 def lut_matmul_fused(
     x: jax.Array,            # (M, K) float — RAW activations (not smoothed)
     inv_scale: jax.Array,    # (K,) f32 = 1/(s_m·s_q) (quantize) or 1/s_m
-    packed_codes: jax.Array, # (K//2, N) uint8 — packed int4 centroid codes
+    packed_codes: jax.Array, # (K*nbits//8, N) uint8 — packed centroid codes
     codebook: jax.Array,     # (KC,) f32 — padded with zeros beyond the active K
     *,
     quantize: bool = True,
@@ -226,6 +288,7 @@ def lut_matmul_fused(
     bk: int = 256,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    nbits: int = 4,
 ) -> jax.Array:
     """Y = transform(x) @ codebook[codes], transform fused into every K-step.
 
@@ -234,16 +297,19 @@ def lut_matmul_fused(
     epilogue — no intermediate activation tensor in HBM.
     """
     m, k = x.shape
-    k2, n = packed_codes.shape
-    assert k2 * 2 == k, (x.shape, packed_codes.shape)
-    assert inv_scale.shape == (k,) and codebook.shape == (KC,)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        f"pad shapes to block multiples: {(m, k, n)} vs {(bm, bk, bn)}"
-    )
+    n = packed_codes.shape[1]
+    _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_fused")
+    if inv_scale.shape != (k,):
+        raise ValueError(f"inv_scale must be ({k},); got {inv_scale.shape}")
+    if codebook.shape != (KC,):
+        raise ValueError(f"codebook must be padded to ({KC},); got "
+                         f"{codebook.shape}")
+    _check_blocks(m, k, n, bm, bk, bn, nbits, "lut_matmul_fused")
     nsteps = k // bk
     grid = (m // bm, n // bn, nsteps)
     kernel = functools.partial(
-        _fused_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize, k_axis=2
+        _fused_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize,
+        k_axis=2, nbits=nbits,
     )
     return pl.pallas_call(
         kernel,
@@ -251,7 +317,7 @@ def lut_matmul_fused(
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
             pl.BlockSpec((1, bk), lambda i, j, s: (0, s)),
-            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk * nbits // 8, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((KC,), lambda i, j, s: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
@@ -262,12 +328,14 @@ def lut_matmul_fused(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("quantize", "bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("quantize", "bm", "bn", "bk", "interpret", "out_dtype",
+                     "nbits")
 )
 def lut_matmul_fused_gemv(
     x: jax.Array,            # (M, K), M = bm < 128 (decode micro-batch, padded to 8)
     inv_scale: jax.Array,    # (K,) f32
-    packed_codes: jax.Array, # (K//2, N) uint8
+    packed_codes: jax.Array, # (K*nbits//8, N) uint8
     codebook: jax.Array,     # (KC,) f32
     *,
     quantize: bool = True,
@@ -276,6 +344,7 @@ def lut_matmul_fused_gemv(
     bk: int = 256,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    nbits: int = 4,
 ) -> jax.Array:
     """Decode-specialized fused GEMV: one M block, N-major grid (N/bn, K/bk).
 
@@ -284,21 +353,29 @@ def lut_matmul_fused_gemv(
     resident in VMEM for the whole call while packed codes stream through —
     the only operand advancing with the grid, which the Pallas pipeline
     double-buffers (next (s, j) tile DMA overlaps the current tile's
-    decode+FMA) — the memory-bound regime where int4 codes buy the paper's
-    6.2x. Same kernel body as the GEMM variant (k_axis selects the grid axis),
-    so the two stay numerically locked together.
+    decode+FMA) — the memory-bound regime where sub-byte codes buy the
+    paper's 6.2x, and where a 2-bit tensor streams HALF the bytes per token
+    of the int4 layout (DESIGN.md §10). Same kernel body as the GEMM variant
+    (k_axis selects the grid axis), so the two stay numerically locked
+    together.
     """
     m, k = x.shape
-    k2, n = packed_codes.shape
-    assert m == bm and bm <= 128, (m, bm)
-    assert k2 * 2 == k and inv_scale.shape == (k,) and codebook.shape == (KC,)
-    assert n % bn == 0 and k % bk == 0, (
-        f"pad shapes to block multiples: {(m, k, n)} vs {(bm, bk, bn)}"
-    )
+    n = packed_codes.shape[1]
+    if m != bm or bm > 128:
+        raise ValueError(
+            f"lut_matmul_fused_gemv: M ({m}) must equal bm ({bm}) <= 128")
+    _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_fused_gemv")
+    if inv_scale.shape != (k,):
+        raise ValueError(f"inv_scale must be ({k},); got {inv_scale.shape}")
+    if codebook.shape != (KC,):
+        raise ValueError(f"codebook must be padded to ({KC},); got "
+                         f"{codebook.shape}")
+    _check_blocks(bm, k, n, bm, bk, bn, nbits, "lut_matmul_fused_gemv")
     nsteps = k // bk
     grid = (n // bn, nsteps)
     kernel = functools.partial(
-        _fused_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize, k_axis=1
+        _fused_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize,
+        k_axis=1, nbits=nbits,
     )
     return pl.pallas_call(
         kernel,
@@ -306,7 +383,7 @@ def lut_matmul_fused_gemv(
         in_specs=[
             pl.BlockSpec((bm, bk), lambda j, s: (0, s)),
             pl.BlockSpec((1, bk), lambda j, s: (0, s)),
-            pl.BlockSpec((bk // 2, bn), lambda j, s: (s, j)),
+            pl.BlockSpec((bk * nbits // 8, bn), lambda j, s: (s, j)),
             pl.BlockSpec((KC,), lambda j, s: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda j, s: (0, j)),

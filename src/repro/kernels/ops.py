@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import ClusteredTensor, clustered_matmul
-from repro.core.lut import pack4_jax
+from repro.core.lut import pack_codes_jax, packed_rows, padded_d_in
 from repro.kernels.lut_matmul import (KC, lut_matmul_f32, lut_matmul_fused,
                                       lut_matmul_fused_gemv, lut_matmul_int8)
 from repro.utils import round_up
@@ -39,13 +39,18 @@ def _pick_blocks(m: int, k: int, n: int):
     return bm, bn, bk
 
 
-def pad_for_kernel(x: jax.Array, packed: jax.Array, bm: int, bk: int, bn: int):
+def pad_for_kernel(x: jax.Array, packed: jax.Array, bm: int, bk: int, bn: int,
+                   nbits: int = 4):
+    """Pad (x, packed) to block multiples. `x` must already cover the packed
+    tensor's group padding (k == padded_d_in), so the extra packed rows are
+    exactly (kp - k) * nbits / 8 — whole bytes, because kp - k is a multiple
+    of 8 whenever bk is (the packing-group contract in core/lut.py)."""
     m, k = x.shape
     n = packed.shape[1]
     mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
     if (mp, kp, np_) != (m, k, n):
         x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
-        packed = jnp.pad(packed, ((0, (kp - k) // 2), (0, np_ - n)))
+        packed = jnp.pad(packed, ((0, (kp - k) * nbits // 8, ), (0, np_ - n)))
     return x, packed, (m, n)
 
 
@@ -59,25 +64,31 @@ def pad_codebook(codebook: jax.Array) -> jax.Array:
     return jnp.pad(codebook.astype(jnp.float32), (0, KC - k))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "nbits"))
 def lut_gemm(
     x: jax.Array,
     packed_codes: jax.Array,
     codebook: jax.Array,
     *,
     interpret: bool = True,
+    nbits: int = 4,
 ) -> jax.Array:
     """Padded/blocked f32-activation LUT GEMM. interpret=True on CPU."""
     cb = pad_codebook(codebook)
     m, k = x.shape
     n = packed_codes.shape[1]
+    kc = padded_d_in(k, nbits)
+    if kc != k:  # group padding: packed codes carry zero-code tail rows
+        x = jnp.pad(x, ((0, 0), (0, kc - k)))
+        k = kc
     bm, bn, bk = _pick_blocks(m, k, n)
-    xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn)
-    y = lut_matmul_f32(xp, cp, cb, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn, nbits)
+    y = lut_matmul_f32(xp, cp, cb, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                       nbits=nbits)
     return y[:m0, :n0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "nbits"))
 def lut_gemm_int8(
     q: jax.Array,
     packed_codes: jax.Array,
@@ -85,48 +96,59 @@ def lut_gemm_int8(
     act_scale: jax.Array,
     *,
     interpret: bool = True,
+    nbits: int = 4,
 ) -> jax.Array:
     cb = pad_codebook(codebook)
     m, k = q.shape
     n = packed_codes.shape[1]
+    kc = padded_d_in(k, nbits)
+    if kc != k:
+        q = jnp.pad(q, ((0, 0), (0, kc - k)))
+        k = kc
     bm, bn, bk = _pick_blocks(m, k, n)
-    qp, cp, (m0, n0) = pad_for_kernel(q, packed_codes, bm, bk, bn)
-    y = lut_matmul_int8(qp, cp, cb, act_scale, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    qp, cp, (m0, n0) = pad_for_kernel(q, packed_codes, bm, bk, bn, nbits)
+    y = lut_matmul_int8(qp, cp, cb, act_scale, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret, nbits=nbits)
     return y[:m0, :n0]
 
 
-@functools.partial(jax.jit, static_argnames=("quantize", "interpret"))
+@functools.partial(jax.jit, static_argnames=("quantize", "interpret", "nbits"))
 def lut_gemm_fused(
     x: jax.Array,            # (M, K) RAW activations (smoothing NOT applied)
     inv_scale: jax.Array,    # (K,) f32 — Eq. 11 fused multiplier
-    packed_codes: jax.Array, # (ceil(K/2), N) uint8
+    packed_codes: jax.Array, # (packed_rows(K), N) uint8
     codebook: jax.Array,     # (K_active,) f32
     act_scale: jax.Array,    # () f32 s_q (pass 1.0 when quantize=False)
     *,
     quantize: bool = True,
     interpret: bool = True,
+    nbits: int = 4,
 ) -> jax.Array:
     """Single-pass serving GEMM: smooth(+quant) fused into the LUT matmul's
     K loop — no standalone smooth/smooth_quant pass, no intermediate
     activation tensor in HBM. Decode shapes (M < 128) dispatch to the N-major
-    GEMV variant (DESIGN.md §2 selection table)."""
+    GEMV variant (DESIGN.md §2 selection table). `nbits` is the packed
+    tensor's width (DESIGN.md §10) — validated against the packed shape
+    inside the kernel entry."""
     cb = pad_codebook(codebook)
     m, k = x.shape
     n = packed_codes.shape[1]
-    if k % 2:  # odd d_in: packed codes carry a zero-padded half-row
-        x = jnp.pad(x, ((0, 0), (0, 1)))
-        inv_scale = jnp.pad(inv_scale, (0, 1))
-        k += 1
+    kc = padded_d_in(k, nbits)
+    if kc != k:  # group padding: packed codes carry zero-code tail rows
+        x = jnp.pad(x, ((0, 0), (0, kc - k)))
+        inv_scale = jnp.pad(inv_scale, (0, kc - k))
+        k = kc
     bm, bn, bk = _pick_blocks(m, k, n)
-    xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn)
+    xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn, nbits)
     invp = jnp.pad(inv_scale.astype(jnp.float32), (0, xp.shape[1] - k))
     if m < 128:
         y = lut_matmul_fused_gemv(xp, invp, cp, cb, quantize=quantize,
                                   bm=xp.shape[0], bn=bn, bk=bk,
-                                  interpret=interpret)
+                                  interpret=interpret, nbits=nbits)
     else:
         y = lut_matmul_fused(xp, invp, cp, cb, quantize=quantize,
-                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+                             bm=bm, bn=bn, bk=bk, interpret=interpret,
+                             nbits=nbits)
     y = y[:m0, :n0]
     return y * act_scale if quantize else y
 
@@ -157,7 +179,8 @@ def lut_serving(mode: Optional[str]):
 
 
 def packed_view(ct: ClusteredTensor) -> jax.Array:
-    """The tensor's packed int4 codes, without any host round-trip.
+    """The tensor's packed sub-byte codes (at ct.nbits per code), without any
+    host round-trip.
 
     Preference order: the first-class `packed` field (computed once at
     compress time — this replaced an id-keyed host-side cache that synced the
@@ -168,9 +191,9 @@ def packed_view(ct: ClusteredTensor) -> jax.Array:
     if ct.packed is not None:
         return ct.packed
     d_in = ct.smooth.shape[-1]
-    if ct.codes.shape[-2] * 2 == d_in + (d_in % 2):
+    if ct.codes.shape[-2] == packed_rows(d_in, ct.nbits):
         return ct.codes.astype(jnp.uint8)     # stored packed already
-    return pack4_jax(ct.codes)
+    return pack_codes_jax(ct.codes, ct.nbits)
 
 
 def _transform_params(ct: ClusteredTensor):
@@ -208,5 +231,6 @@ def clustered_linear(
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = lut_gemm_fused(x2, inv, packed_view(ct), ct.codebook, act,
-                       quantize=quantize, interpret=(mode == "interpret"))
+                       quantize=quantize, interpret=(mode == "interpret"),
+                       nbits=ct.nbits)
     return y.reshape(*lead, -1).astype(x.dtype)

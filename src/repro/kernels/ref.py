@@ -9,21 +9,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.lut import unpack4
+from repro.core.lut import unpack_codes
 
 KC = 16
 
 
-def lut_matmul_f32_ref(x: jax.Array, packed_codes: jax.Array, codebook: jax.Array) -> jax.Array:
-    """Y = x @ codebook[codes]."""
+def lut_matmul_f32_ref(x: jax.Array, packed_codes: jax.Array,
+                       codebook: jax.Array, *, nbits: int = 4) -> jax.Array:
+    """Y = x @ codebook[codes], codes stored packed at `nbits` per code."""
     k = x.shape[-1]
-    codes = unpack4(packed_codes, k)                    # (K, N) int32
+    codes = unpack_codes(packed_codes, k, nbits)        # (K, N) int32
     w = codebook[codes]                                 # (K, N) f32
     return x.astype(jnp.float32) @ w
 
 
 def lut_matmul_int8_ref(
-    q: jax.Array, packed_codes: jax.Array, codebook: jax.Array, act_scale: jax.Array
+    q: jax.Array, packed_codes: jax.Array, codebook: jax.Array,
+    act_scale: jax.Array, *, nbits: int = 4
 ) -> jax.Array:
     """Paper §4.2 semantics: signed bucket-table accumulation, then one rescale.
 
@@ -31,7 +33,7 @@ def lut_matmul_int8_ref(
     gather form in core/lut.py by tests/test_lut.py.
     """
     k = q.shape[-1]
-    codes = unpack4(packed_codes, k)
+    codes = unpack_codes(packed_codes, k, nbits)
     w = codebook[codes]
     return (q.astype(jnp.float32) @ w) * act_scale
 
@@ -44,12 +46,13 @@ def lut_matmul_fused_ref(
     act_scale: jax.Array,   # scalar s_q (ignored when quantize=False)
     *,
     quantize: bool = True,
+    nbits: int = 4,
 ) -> jax.Array:
     """Oracle for the fused serving GEMM: Eq. 11 transform (symmetric clip,
     |q| ≤ 127 — the bucket-table contract in core/lut.py) composed with the
     gather-dequant contraction `lut_matmul_dequant_ref`."""
     k = x.shape[-1]
-    codes = unpack4(packed_codes, k)
+    codes = unpack_codes(packed_codes, k, nbits)
     xs = x.astype(jnp.float32) * inv_scale
     if not quantize:
         return xs @ codebook[codes]

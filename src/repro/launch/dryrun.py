@@ -197,8 +197,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 bundle.abstract_inputs[0],
                 is_leaf=lambda x: isinstance(x, ClusteredTensor)):
             if isinstance(leaf, ClusteredTensor):
-                d2, dout = leaf.codes.shape[-2], leaf.codes.shape[-1]
-                deq_shapes.add((2 * d2, dout))
+                rows, dout = leaf.codes.shape[-2], leaf.codes.shape[-1]
+                # packed rows -> dense d_in at the tensor's packing width
+                deq_shapes.add((rows * 8 // leaf.nbits, dout))
                 code_bytes += int(np.prod(leaf.codes.shape))
         model_hlo = HloCostModel(text)
         deq_bytes = model_hlo.fusion_bytes_matching(deq_shapes)

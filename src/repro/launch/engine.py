@@ -108,14 +108,17 @@ def build_decode_fns(model, cfg, gen_tokens: int):
 def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
           target_centroids: int = 8, batch: int = 4, prompt_len: int = 16,
           gen_tokens: int = 32, seed: int = 0, params=None, greedy=True,
-          stats: Optional[Dict[str, Any]] = None):
+          stats: Optional[Dict[str, Any]] = None, weight_bits: int = 4,
+          bits_budget: Optional[float] = None):
     """Static-batch generation: `gen_tokens` per sequence for one batch of
     identical prompts; returns (tokens (B, gen), params).
 
     Pass a dict as `stats` to receive timing/trace telemetry (tokens/s,
     prefill/decode wall time, trace counts) — benchmarks/decode_bench.py uses
-    it to track the serving-speedup trajectory. For staggered multi-request
-    traffic use `ServingEngine` instead.
+    it to track the serving-speedup trajectory. `weight_bits` / `bits_budget`
+    set the LCD packing policy (DESIGN.md §10): a uniform sub-byte width or a
+    Fisher-scored per-layer mix under a global mean. For staggered
+    multi-request traffic use `ServingEngine` instead.
     """
     cfg = get_config(arch)
     if use_reduced:
@@ -129,12 +132,17 @@ def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
         dense_bytes = tree_size_bytes(params)
         if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
                 params, is_leaf=is_clustered)):
-            params, report = compress_model(params,
-                                            target_centroids=target_centroids)
+            kcap = 1 << weight_bits
+            params, report = compress_model(
+                params, target_centroids=min(target_centroids, kcap),
+                nbits=weight_bits, bits_budget=bits_budget)
             logger.info("LCD: " + report.summary())
             logger.info(f"weights: {human_bytes(dense_bytes)} dense -> "
                         f"{human_bytes(tree_size_bytes(params))} clustered "
-                        f"(packed int4 codes first-class)")
+                        f"(packed sub-byte codes first-class)")
+            if stats is not None:
+                stats["bits_assignment"] = dict(report.bits_assignment)
+                stats["mean_packed_bits"] = report.mean_packed_bits
 
         max_seq = prompt_len + gen_tokens
         cache = model.init_cache(batch, max_seq)
@@ -267,6 +275,45 @@ class EngineConfig:
     # cfg.kv_cache_dtype, so a config that quantizes its plain decode cache
     # pages quantized too.
     kv_dtype: Optional[str] = None
+    # weight bit-width policy (DESIGN.md §10), applied by build_engine when it
+    # LCD-compresses: weight_bits is the uniform packing width; bits_budget,
+    # when set, overrides it with Fisher-scored per-layer mixed precision
+    # under that global element-weighted mean (compress_model(bits_budget=)).
+    weight_bits: int = 4
+    bits_budget: Optional[float] = None
+
+    def __post_init__(self):
+        """Eager validation: a bad knob fails at config construction with the
+        allowed values spelled out, not deep inside cache init or the first
+        compress call."""
+        from repro.core.lut import SUPPORTED_NBITS
+        if self.kv_dtype not in (None, "float", "int8"):
+            raise ValueError(
+                f"EngineConfig.kv_dtype must be None (follow the model "
+                f"config), 'float' or 'int8'; got {self.kv_dtype!r}")
+        if self.weight_bits not in SUPPORTED_NBITS:
+            raise ValueError(
+                f"EngineConfig.weight_bits must be one of {SUPPORTED_NBITS}; "
+                f"got {self.weight_bits!r}")
+        if self.bits_budget is not None and not (
+                min(SUPPORTED_NBITS) <= self.bits_budget <= max(SUPPORTED_NBITS)):
+            raise ValueError(
+                f"EngineConfig.bits_budget must lie in "
+                f"[{min(SUPPORTED_NBITS)}, {max(SUPPORTED_NBITS)}] (global "
+                f"mean packed bits); got {self.bits_budget!r}")
+        if self.speculative_k < 0:
+            raise ValueError(
+                f"EngineConfig.speculative_k must be >= 0; got "
+                f"{self.speculative_k}")
+        if not 2 <= self.draft_centroids <= 16:
+            raise ValueError(
+                f"EngineConfig.draft_centroids must lie in [2, 16] (sub-byte "
+                f"codes); got {self.draft_centroids}")
+        if self.num_blocks < self.max_blocks_per_slot:
+            raise ValueError(
+                f"EngineConfig.num_blocks ({self.num_blocks}) must be >= "
+                f"max_blocks_per_slot ({self.max_blocks_per_slot}) or no "
+                f"request can ever be fully admitted")
 
     @property
     def max_seq(self) -> int:
@@ -306,8 +353,8 @@ class ServingEngine:
         ecfg = EngineConfig() if ecfg is None else ecfg
         assert model.supports_paging(), (
             f"family '{model.cfg.family}' has no paged decode path")
-        assert ecfg.num_blocks >= ecfg.max_blocks_per_slot, ecfg
-        assert ecfg.kv_dtype in (None, "float", "int8"), ecfg.kv_dtype
+        # kv_dtype / block geometry are validated eagerly by
+        # EngineConfig.__post_init__; only engine-level coupling lives here.
         # the RESOLVED pool dtype: an explicit knob wins, else follow the
         # model config (the pre-§9 engine raised NotImplementedError here
         # for int8 configs — resolving beats silently serving full precision)
@@ -363,6 +410,10 @@ class ServingEngine:
         self._next_rid = 0
         self.steps = 0
         self.spec_rounds = 0
+        # deployment inventory (DESIGN.md §10): build_engine attaches the
+        # CompressReports here so --describe can print the bits assignment
+        self.compress_report = None
+        self.draft_report = None
 
     # -- public API ---------------------------------------------------------
 
@@ -864,33 +915,44 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
 
     With `ecfg.speculative_k > 0` and no `draft_params`, the 2-bit self-draft
     is built here by re-clustering the target's weights
-    (core/clustered_params.py make_draft_params). With `ecfg.kv_dtype ==
-    "int8"` and no `kv_smooth`, the cache smoothing vectors are calibrated
-    here (calibrate_kv_smooth)."""
+    (core/clustered_params.py make_draft_params — genuinely 2-bit-packed, so
+    the draft streams half the int4 layout's weight bytes). With
+    `ecfg.kv_dtype == "int8"` and no `kv_smooth`, the cache smoothing vectors
+    are calibrated here (calibrate_kv_smooth). `ecfg.weight_bits` /
+    `ecfg.bits_budget` set the LCD packing policy (DESIGN.md §10); the
+    resulting CompressReports land on the engine as `compress_report` /
+    `draft_report` so a deployment stays inspectable
+    (launch/serve.py --describe)."""
     ecfg = EngineConfig() if ecfg is None else ecfg
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
     model = get_model(cfg)
     mesh = make_host_mesh()
+    compress_report = draft_report = None
     with use_rules(mesh, fsdp=False):
         if params is None:
             params = model.init(jax.random.key(seed))
         if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
                 params, is_leaf=is_clustered)):
-            params, report = compress_model(params,
-                                            target_centroids=target_centroids)
-            logger.info("LCD: " + report.summary())
+            kcap = 1 << ecfg.weight_bits
+            params, compress_report = compress_model(
+                params, target_centroids=min(target_centroids, kcap),
+                nbits=ecfg.weight_bits, bits_budget=ecfg.bits_budget)
+            logger.info("LCD: " + compress_report.summary())
         if ecfg.speculative_k and draft_params is None:
             from repro.core.clustered_params import make_draft_params
-            draft_params, report = make_draft_params(
+            draft_params, draft_report = make_draft_params(
                 params, draft_centroids=ecfg.draft_centroids)
-            logger.info("LCD draft: " + report.summary())
+            logger.info("LCD draft: " + draft_report.summary())
         resolved_kv = ecfg.kv_dtype or (
             "int8" if cfg.kv_cache_dtype == "int8" else "float")
         if resolved_kv == "int8" and kv_smooth is None:
             kv_smooth = calibrate_kv_smooth(model, params, seed=seed)
             logger.info("int8 KV cache: smoothing calibrated "
                         "(Eq. 9 candidate search per layer x kv-head)")
-    return ServingEngine(model, params, ecfg, mesh=mesh,
-                         draft_params=draft_params, kv_smooth=kv_smooth), params
+    engine = ServingEngine(model, params, ecfg, mesh=mesh,
+                           draft_params=draft_params, kv_smooth=kv_smooth)
+    engine.compress_report = compress_report
+    engine.draft_report = draft_report
+    return engine, params

@@ -39,6 +39,28 @@ __all__ = ["BlockAllocator", "EngineConfig", "Request", "ServingEngine",
            "build_decode_fns", "build_engine", "serve", "main"]
 
 
+def _describe(engine) -> None:
+    """Deployment inventory (DESIGN.md §10): per-layer packing width and
+    centroid count of the compressed target (and the speculative draft), so
+    a deployed mixed-precision model is inspectable from the CLI."""
+    from repro.core.clustered_params import packed_weight_bytes
+    if engine.compress_report is None:
+        logger.info("describe: params are not LCD-compressed (run with --lcd)")
+    else:
+        logger.info("target bits assignment:\n"
+                    + engine.compress_report.bits_table())
+        logger.info(f"target packed weight bytes: "
+                    f"{packed_weight_bytes(engine.params)}")
+    if engine.draft_report is not None:
+        logger.info("draft bits assignment:\n"
+                    + engine.draft_report.bits_table())
+        logger.info(f"draft packed weight bytes: "
+                    f"{packed_weight_bytes(engine.draft_params)} "
+                    f"(int4 layout would be "
+                    f"{packed_weight_bytes(engine.draft_params, nbits=4)})")
+    logger.info(f"kv_dtype: {engine.kv_dtype}")
+
+
 def _run_continuous(args) -> None:
     ecfg = EngineConfig(num_slots=args.slots, block_size=args.block_size,
                         num_blocks=args.blocks,
@@ -46,10 +68,15 @@ def _run_continuous(args) -> None:
                         prefill_chunk=args.prefill_chunk,
                         speculative_k=args.speculative,
                         draft_centroids=args.draft_centroids,
-                        kv_dtype=args.kv_dtype)
+                        kv_dtype=args.kv_dtype,
+                        weight_bits=args.bits,
+                        bits_budget=args.bits_budget)
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
                              ecfg=ecfg)
+    if args.describe:
+        _describe(engine)
+        return
     rng = np.random.default_rng(0)
     cfg = engine.model.cfg
     # staggered submissions: a fresh request every other scheduler step, with
@@ -108,17 +135,33 @@ def main() -> None:
                          "scales for ~3.5x the admissible slots per f32 "
                          "pool byte; default follows the model config "
                          "(continuous mode only)")
+    ap.add_argument("--bits", type=int, choices=(2, 3, 4), default=4,
+                    help="uniform LCD weight packing width (DESIGN.md §10): "
+                         "2-bit streams half the weight bytes of the int4 "
+                         "layout on the decode GEMV")
+    ap.add_argument("--bits-budget", type=float, default=None,
+                    help="per-layer mixed precision under a global "
+                         "element-weighted mean-bits cap (e.g. 3.0): "
+                         "empirical-Fisher scores keep sensitive layers at "
+                         "4-bit and drop the rest to 3/2 (overrides --bits)")
+    ap.add_argument("--describe", action="store_true",
+                    help="print the deployment inventory (per-layer bits "
+                         "assignment, packed weight bytes, kv dtype) and "
+                         "exit without serving (continuous mode)")
     args = ap.parse_args()
     if args.speculative and not args.continuous:
         ap.error("--speculative requires --continuous")
     if args.kv_dtype and not args.continuous:
         ap.error("--kv-dtype applies to the paged engine; add --continuous")
+    if args.describe and not args.continuous:
+        ap.error("--describe inspects the paged engine; add --continuous")
     if args.continuous:
         _run_continuous(args)
     else:
         serve(args.arch, use_reduced=args.reduced, lcd=args.lcd,
               target_centroids=args.centroids, batch=args.batch,
-              prompt_len=args.prompt_len, gen_tokens=args.tokens)
+              prompt_len=args.prompt_len, gen_tokens=args.tokens,
+              weight_bits=args.bits, bits_budget=args.bits_budget)
 
 
 if __name__ == "__main__":

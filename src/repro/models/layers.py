@@ -35,7 +35,7 @@ def resolve_weight(w, dtype) -> jax.Array:
     if not is_clustered(w):
         return w.astype(dtype)
     d_in = w.smooth.shape[-1]
-    codes = _unpack_codes(w.codes, d_in)                  # (..., d_in, d_out)
+    codes = _unpack_codes(w.codes, d_in, w.nbits)         # (..., d_in, d_out)
     if w.codebook.ndim == 1:
         dense = w.codebook[codes]
     else:                                                  # stacked experts (E, K)

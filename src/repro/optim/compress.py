@@ -1,21 +1,92 @@
-"""Gradient compression with error feedback (distributed-optimization trick).
+"""Compression-side optimization utilities.
 
-int8 symmetric per-tensor quantization of gradients before the data-parallel
-all-reduce, with an error-feedback accumulator so the quantization residual is
-re-injected next step (Seide et al. / 1-bit-Adam lineage: EF keeps convergence
-unbiased). Under pjit the quantized gradient is what crosses the DP axis —
-the reduce-scatter moves 4x fewer bytes, which directly shrinks the
-collective roofline term of the train step (EXPERIMENTS.md §Perf measures it).
+Two residents:
 
-LCD tie-in: this is the training-side mirror of the paper's inference-side
-compression — both replace f32/bf16 streams with low-bit integer + scale.
+1. Gradient compression with error feedback (distributed-optimization trick):
+   int8 symmetric per-tensor quantization of gradients before the data-parallel
+   all-reduce, with an error-feedback accumulator so the quantization residual
+   is re-injected next step (Seide et al. / 1-bit-Adam lineage: EF keeps
+   convergence unbiased). Under pjit the quantized gradient is what crosses the
+   DP axis — the reduce-scatter moves 4x fewer bytes, which directly shrinks
+   the collective roofline term of the train step.
+
+2. `allocate_bits` — the mixed-precision weight-bit allocator behind
+   `compress_model(bits_budget=...)` (DESIGN.md §10): given per-layer
+   empirical-Fisher sensitivity scores, assign each layer a packing width in
+   {2, 3, 4} so the element-weighted mean stays under a global budget.
+
+LCD tie-in: both are the optimization-side mirrors of the paper's
+inference-side compression — replace f32/bf16 streams with low-bit integer +
+scale, and spend the bits where the Hessian says the loss is steep.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision bit allocation (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def allocate_bits(
+    scores: Dict[str, float],          # layer -> Fisher sensitivity E[H·w²]
+    sizes: Dict[str, int],             # layer -> element count
+    budget: float,                     # element-weighted mean-bits cap
+    widths: Sequence[int] = (2, 3, 4),
+    floor: Optional[Dict[str, int]] = None,   # optional per-layer minimum width
+) -> Dict[str, int]:
+    """Greedy sensitivity-ordered demotion under a global bits budget.
+
+    Every layer starts at the widest width. While the element-weighted mean
+    exceeds `budget`, layers are demoted one width step (4 → 3 → 2) in
+    ROUND-ROBIN passes over ascending sensitivity order: each pass visits
+    every demotable layer once, least sensitive first, and stops the moment
+    the budget holds. So the least-sensitive layers always sit at or below
+    the width of more-sensitive ones, and demotion depth tracks how far the
+    budget is below the widest width — e.g. over equal-size layers a budget
+    of 3.0 lands everyone at 3-bit (one full pass), while 2.5 sends the
+    low-curvature half down to 2-bit and leaves the high-curvature half at
+    3-bit. The empirical-Fisher scores decide who gives up precision first —
+    the paper's "extreme low-bit where the loss surface allows it" economics.
+
+    Deterministic (ties broken by path name). The result is guaranteed to
+    satisfy the budget whenever budget >= min(widths); a budget below the
+    narrowest width raises.
+    """
+    if not scores:
+        return {}
+    ws = sorted(set(int(w) for w in widths))
+    if budget < ws[0]:
+        raise ValueError(
+            f"bits budget {budget} is below the narrowest supported width "
+            f"{ws[0]} — unsatisfiable")
+    if set(scores) != set(sizes):
+        raise ValueError("scores and sizes must cover the same layers")
+    floor = floor or {}
+    bits = {p: ws[-1] for p in scores}
+    total = float(sum(sizes.values()))
+
+    def mean_bits() -> float:
+        return sum(bits[p] * sizes[p] for p in bits) / total
+
+    order = sorted(scores, key=lambda p: (scores[p], p))
+    # round-robin demotion: one width step per layer per pass, least
+    # sensitive first, until the budget holds or no step remains
+    while mean_bits() > budget + 1e-9:
+        moved = False
+        for p in order:
+            lo = max(ws[0], floor.get(p, ws[0]))
+            if bits[p] > lo:
+                bits[p] = ws[ws.index(bits[p]) - 1]
+                moved = True
+                if mean_bits() <= budget + 1e-9:
+                    break
+        if not moved:
+            break
+    return bits
 
 
 class EFState(NamedTuple):

@@ -119,6 +119,128 @@ class TestCompressModel:
         assert cb_grads and all(float(jnp.abs(c).sum()) > 0 for c in cb_grads)
 
 
+class TestMixedPrecision:
+    """Per-layer bit-width under a global budget (DESIGN.md §10)."""
+
+    def test_allocate_bits_respects_budget_and_order(self):
+        from repro.optim.compress import allocate_bits
+        scores = {f"l{i}": float(i) for i in range(8)}
+        sizes = {p: 100 for p in scores}
+        bits = allocate_bits(scores, sizes, budget=3.0)
+        mean = sum(bits[p] * sizes[p] for p in bits) / sum(sizes.values())
+        assert mean <= 3.0 + 1e-9
+        # least-sensitive layers give up precision first
+        assert bits["l0"] <= bits["l7"]
+        assert allocate_bits(scores, sizes, budget=4.0) == {
+            p: 4 for p in scores}
+        with pytest.raises(ValueError, match="unsatisfiable"):
+            allocate_bits(scores, sizes, budget=1.5)
+
+    def test_compress_respects_global_budget(self, trained_tiny):
+        cfg, model, params, _ = trained_tiny
+
+        def loss_fn(p, batch):
+            logits, _ = model.apply(p, batch)
+            return lm_loss(logits, batch["targets"], batch["loss_mask"],
+                           cfg.vocab)
+
+        calib = [{k: jnp.asarray(v) for k, v in b.items()}
+                 for b in calibration_batches(
+                     DataConfig(vocab=256, seq_len=64, batch_size=8), n=2)]
+        cparams, report = compress_model(
+            params, loss_fn=loss_fn, calib_batches=calib, bits_budget=2.5)
+        assert report.mean_packed_bits <= 2.5 + 1e-9
+        assert set(report.bits_assignment) == set(report.centroid_counts)
+        from repro.core.lut import packed_rows
+        for ct in [l for l in jax.tree_util.tree_leaves(
+                cparams, is_leaf=is_clustered) if is_clustered(l)]:
+            # codes honor the width and the packed field uses the sub-byte
+            # layout of exactly that width
+            assert ct.codebook.shape[-1] <= 1 << ct.nbits
+            assert int(np.asarray(ct.codes).max()) < 1 << ct.nbits
+            d_in = ct.smooth.shape[-1]
+            assert ct.packed.shape[-2] == packed_rows(d_in, ct.nbits)
+        # the model still evaluates (quality degrades gracefully at 2.5 bits;
+        # finite logits is the structural contract here)
+        l_q = eval_loss(model, cfg, cparams, n=1)
+        assert np.isfinite(l_q)
+
+    def test_uniform_two_bit_quality_and_layout(self, trained_tiny):
+        cfg, model, params, _ = trained_tiny
+        cparams, report = compress_model(params, nbits=2)
+        assert set(report.bits_assignment.values()) == {2}
+        assert report.mean_packed_bits == 2.0
+        cts = [l for l in jax.tree_util.tree_leaves(
+            cparams, is_leaf=is_clustered) if is_clustered(l)]
+        assert all(ct.codebook.shape[-1] <= 4 for ct in cts)
+        assert np.isfinite(eval_loss(model, cfg, cparams, n=1))
+
+    def test_invalid_policy_rejected(self, trained_tiny):
+        _, _, params, _ = trained_tiny
+        with pytest.raises(ValueError, match="nbits"):
+            compress_model(params, nbits=5)
+        with pytest.raises(ValueError, match="bits_budget"):
+            compress_model(params, bits_budget=1.0)
+
+    def test_checkpoint_round_trip_preserves_widths(self, trained_tiny,
+                                                    tmp_path):
+        """Serialization round-trip at mixed widths: packed codes, codebooks
+        and the static nbits metadata all survive CheckpointManager."""
+        from repro.checkpoint.manager import CheckpointManager
+        _, _, params, _ = trained_tiny
+        cparams, report = compress_model(params, bits_budget=2.5)
+        cm = CheckpointManager(str(tmp_path))
+        cm.save(3, cparams)
+        step, restored = cm.restore_latest(cparams)
+        assert step == 3
+        orig = [l for l in jax.tree_util.tree_leaves(
+            cparams, is_leaf=is_clustered) if is_clustered(l)]
+        back = [l for l in jax.tree_util.tree_leaves(
+            restored, is_leaf=is_clustered) if is_clustered(l)]
+        assert len(orig) == len(back) and len(set(
+            ct.nbits for ct in orig)) > 1   # genuinely mixed on this model
+        for a, b in zip(orig, back):
+            assert a.nbits == b.nbits
+            np.testing.assert_array_equal(np.asarray(a.packed),
+                                          np.asarray(b.packed))
+            np.testing.assert_array_equal(np.asarray(a.codes),
+                                          np.asarray(b.codes))
+
+    @pytest.mark.parametrize("nbits", [2, 3, 4])
+    def test_codes_inherit_sharding_names_at_every_width(self, nbits):
+        """Sharding contract (DESIGN.md §4/§10): the abstract clustered tree
+        keeps the dense weight's logical names on the codes at every packing
+        width, and tree_shardings consumes the (aparams, names) pair."""
+        from repro.core.clustered_params import clustered_abstract
+        from repro.distributed.sharding import tree_shardings, use_rules
+        from repro.models.config import ModelConfig
+        from repro.models.registry import get_model
+        cfg = ModelConfig(arch_id=f"tiny-shard-{nbits}", family="dense",
+                          n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=256, head_dim=16, dtype="float32")
+        model = get_model(cfg)
+        aparams, names, stats = clustered_abstract(model, nbits=nbits)
+        assert stats["clustered"] > 0
+        flat_a = jax.tree_util.tree_flatten_with_path(
+            aparams, is_leaf=is_clustered)[0]
+        flat_n = jax.tree_util.tree_leaves(
+            names, is_leaf=is_clustered)
+        for (kp, a), n in zip(flat_a, flat_n):
+            if not is_clustered(a):
+                continue
+            assert is_clustered(n) and a.nbits == nbits and n.nbits == nbits
+            # codes carry the SAME name string as the dense weight would
+            assert isinstance(n.codes, str) and "," in n.codes
+            from repro.core.lut import packed_rows
+            d_in = a.smooth.shape[-1]
+            assert a.codes.shape[-2] == packed_rows(d_in, nbits)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with use_rules(mesh):
+            shardings = tree_shardings(aparams, names)
+        assert len(jax.tree_util.tree_leaves(shardings)) == len(
+            jax.tree_util.tree_leaves(aparams))
+
+
 class TestDataPipeline:
     def test_deterministic(self):
         c = DataConfig(vocab=100, seq_len=32, batch_size=4, seed=5)

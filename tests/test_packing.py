@@ -1,0 +1,216 @@
+"""Sub-byte packing contract tests (DESIGN.md §10): pack/unpack round-trips
+at every supported width, host/device packer agreement, the ValueError
+surface of the kernel shape checks, and the ClusteredTensor nbits axis
+(static pytree metadata: jit/scan/grad-safe, serialization-stable)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import dense_to_clustered, is_clustered
+from repro.core.lut import (BYTES_PER_GROUP, CODES_PER_GROUP, SUPPORTED_NBITS,
+                            pack_codes, pack_codes_jax, packed_rows,
+                            padded_d_in, unpack_codes)
+
+# property tests below are hypothesis-driven; absent the module, skip them
+# (the deterministic classes still run)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class TestLayoutArithmetic:
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    def test_rows_cover_exactly_padded_d_in(self, nbits):
+        for d in (1, 5, 8, 29, 32, 127, 4096):
+            rows = packed_rows(d, nbits)
+            assert rows * 8 == padded_d_in(d, nbits) * nbits
+            assert padded_d_in(d, nbits) - d < CODES_PER_GROUP[nbits]
+
+    def test_two_bit_is_half_of_int4(self):
+        # the §10 headline: at group-aligned d_in the 2-bit stream is
+        # EXACTLY half the int4 layout
+        for d in (32, 128, 4096):
+            assert packed_rows(d, 2) * 2 == packed_rows(d, 4)
+
+    def test_rejects_unsupported_width(self):
+        with pytest.raises(ValueError, match="nbits"):
+            packed_rows(64, 5)
+        with pytest.raises(ValueError, match="nbits"):
+            pack_codes(np.zeros((8, 4), np.uint8), 1)
+
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    def test_rejects_overflowing_codes(self, nbits):
+        bad = np.full((8, 4), 1 << nbits, np.uint8)
+        with pytest.raises(ValueError, match=f"{nbits} bits"):
+            pack_codes(bad, nbits)
+
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    def test_unpack_rejects_wrong_row_count(self, nbits):
+        d = 64
+        p = np.zeros((packed_rows(d, nbits) + BYTES_PER_GROUP[nbits], 4),
+                     np.uint8)
+        with pytest.raises(ValueError, match=f"{nbits}-bit"):
+            unpack_codes(jnp.asarray(p), d, nbits)
+
+
+class TestRoundTripDeterministic:
+    """Exhaustive-ish deterministic sweep (runs even without hypothesis)."""
+
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    @pytest.mark.parametrize("lead", [(), (3,), (2, 2)])
+    @pytest.mark.parametrize("d_in", [8, 29, 31, 64, 5])
+    def test_round_trip(self, nbits, lead, d_in):
+        rng = np.random.default_rng(nbits * 100 + d_in)
+        codes = rng.integers(0, 1 << nbits, lead + (d_in, 6)).astype(np.uint8)
+        packed = pack_codes(codes, nbits)
+        assert packed.shape == lead + (packed_rows(d_in, nbits), 6)
+        up = np.asarray(unpack_codes(jnp.asarray(packed), d_in, nbits))
+        np.testing.assert_array_equal(up, codes)
+
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    def test_device_pack_matches_host(self, nbits):
+        rng = np.random.default_rng(nbits)
+        codes = rng.integers(0, 1 << nbits, (2, 37, 5)).astype(np.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(pack_codes_jax(jnp.asarray(codes), nbits)),
+            pack_codes(codes, nbits))
+
+    def test_group_padding_packs_zero_codes(self):
+        # the padded tail must decode to code 0 (whose centroid the kernels
+        # multiply by zero activations — never observable)
+        codes = np.ones((5, 3), np.uint8)
+        packed = pack_codes(codes, 2)
+        up = np.asarray(unpack_codes(jnp.asarray(packed), 8, 2))
+        np.testing.assert_array_equal(up[5:], 0)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _pack_case(draw):
+        nbits = draw(st.sampled_from(SUPPORTED_NBITS))
+        lead = draw(st.sampled_from([(), (2,), (3,), (2, 2)]))
+        d_in = draw(st.integers(min_value=1, max_value=70))
+        d_out = draw(st.integers(min_value=1, max_value=9))
+        seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, 1 << nbits,
+                             lead + (d_in, d_out)).astype(np.uint8)
+        return nbits, codes, d_in
+
+    class TestRoundTripProperty:
+        """Hypothesis property: pack ∘ unpack == identity for every width,
+        any stacked-layer leading axes, any (odd) d_in."""
+
+        @settings(max_examples=120, deadline=None)
+        @given(case=_pack_case())
+        def test_host_round_trip(self, case):
+            nbits, codes, d_in = case
+            packed = pack_codes(codes, nbits)
+            assert packed.dtype == np.uint8
+            assert packed.shape[-2] == packed_rows(d_in, nbits)
+            up = np.asarray(unpack_codes(jnp.asarray(packed), d_in, nbits))
+            np.testing.assert_array_equal(up, codes)
+
+        @settings(max_examples=40, deadline=None)
+        @given(case=_pack_case())
+        def test_device_pack_agrees_with_host(self, case):
+            nbits, codes, _ = case
+            np.testing.assert_array_equal(
+                np.asarray(pack_codes_jax(jnp.asarray(codes), nbits)),
+                pack_codes(codes, nbits))
+
+
+class TestKernelShapeErrors:
+    """Satellite contract: the packed-shape checks are ValueErrors that name
+    the packing width and shapes (bare asserts vanish under python -O)."""
+
+    def _args(self, nbits):
+        rng = np.random.default_rng(0)
+        k, n = 256, 128
+        x = jnp.asarray(rng.normal(size=(8, k)).astype(np.float32))
+        codes = rng.integers(0, 1 << nbits, (k, n)).astype(np.uint8)
+        cb = jnp.zeros(16, jnp.float32)
+        return x, jnp.asarray(pack_codes(codes, nbits)), cb
+
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    def test_width_mismatch_raises_value_error(self, nbits):
+        from repro.kernels.lut_matmul import lut_matmul_f32
+        x, packed, cb = self._args(nbits)
+        wrong = 2 if nbits != 2 else 4
+        with pytest.raises(ValueError, match=f"{wrong}-bit"):
+            lut_matmul_f32(x, packed, cb, interpret=True, nbits=wrong)
+
+    def test_fused_names_offender(self):
+        from repro.kernels.lut_matmul import lut_matmul_fused
+        x, packed, cb = self._args(4)
+        inv = jnp.ones((x.shape[1],), jnp.float32)
+        with pytest.raises(ValueError, match="packing width"):
+            lut_matmul_fused(x, inv, packed[:-1], cb, interpret=True)
+
+    def test_bad_nbits_rejected(self):
+        from repro.kernels.lut_matmul import lut_matmul_f32
+        x, packed, cb = self._args(4)
+        with pytest.raises(ValueError, match="nbits"):
+            lut_matmul_f32(x, packed, cb, interpret=True, nbits=5)
+
+
+class TestClusteredTensorNbits:
+    """nbits is static pytree aux data: it survives tree transforms, keeps
+    kernel dispatch static under jit, and distinguishes treedefs."""
+
+    def _ct(self, nbits, d_in=32, d_out=8):
+        rng = np.random.default_rng(nbits)
+        k = 1 << nbits
+        codes = rng.integers(0, k, (d_in, d_out)).astype(np.uint8)
+        cb = np.sort(rng.normal(0, 0.05, k)).astype(np.float32)
+        w = cb[codes]
+        return dense_to_clustered(w, codes, cb, nbits=nbits)
+
+    @pytest.mark.parametrize("nbits", SUPPORTED_NBITS)
+    def test_packed_field_width(self, nbits):
+        ct = self._ct(nbits)
+        assert ct.nbits == nbits
+        assert ct.packed.shape[0] == packed_rows(32, nbits)
+
+    def test_rejects_codebook_overflow(self):
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, 8, (32, 8)).astype(np.uint8)
+        cb = np.zeros(8, np.float32)
+        with pytest.raises(ValueError, match="centroids"):
+            dense_to_clustered(cb[codes], codes, cb, nbits=2)
+
+    def test_nbits_survives_tree_map_and_flatten(self):
+        ct = self._ct(2)
+        sliced = jax.tree_util.tree_map(lambda a: a[:4], ct)
+        assert is_clustered(sliced) and sliced.nbits == 2
+        leaves, treedef = jax.tree_util.tree_flatten(ct)
+        assert jax.tree_util.tree_unflatten(treedef, leaves).nbits == 2
+
+    def test_nbits_is_static_under_jit(self):
+        ct = self._ct(3)
+        seen = []
+
+        @jax.jit
+        def f(t):
+            seen.append(t.nbits)      # trace-time: must be a Python int
+            return t.codebook.sum()
+
+        f(ct)
+        assert seen == [3]
+
+    def test_different_widths_different_treedefs(self):
+        t2 = jax.tree_util.tree_structure(self._ct(2))
+        t4 = jax.tree_util.tree_structure(self._ct(4, d_in=32))
+        assert t2 != t4
+
+    def test_keystr_paths_unchanged(self):
+        # checkpoint manifests key leaves by keystr path — the custom
+        # registration must keep the NamedTuple attribute naming
+        flat = jax.tree_util.tree_flatten_with_path(self._ct(4))[0]
+        paths = {jax.tree_util.keystr(kp) for kp, _ in flat}
+        assert {".codes", ".codebook", ".smooth", ".packed",
+                ".inv_scale"} <= paths

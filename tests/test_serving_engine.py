@@ -51,6 +51,43 @@ class TestEngineConfigDefault:
         assert e1.ecfg is not e2.ecfg
 
 
+class TestEngineConfigValidation:
+    """Eager __post_init__ validation: a bad knob fails at CONFIG
+    construction with the allowed values spelled out, not deep inside cache
+    init (kv_dtype used to surface as an engine-time assert) or the first
+    compress call (the bits policy)."""
+
+    def test_kv_dtype_validated_with_allowed_values(self):
+        with pytest.raises(ValueError) as ei:
+            EngineConfig(kv_dtype="int4")
+        msg = str(ei.value)
+        assert "kv_dtype" in msg and "int8" in msg and "float" in msg
+
+    def test_valid_kv_dtypes_accepted(self):
+        for dt in (None, "float", "int8"):
+            assert EngineConfig(kv_dtype=dt).kv_dtype == dt
+
+    def test_weight_bits_validated(self):
+        with pytest.raises(ValueError, match=r"weight_bits.*\(2, 3, 4\)"):
+            EngineConfig(weight_bits=5)
+        assert EngineConfig(weight_bits=2).weight_bits == 2
+
+    def test_bits_budget_validated(self):
+        with pytest.raises(ValueError, match="bits_budget"):
+            EngineConfig(bits_budget=1.0)
+        with pytest.raises(ValueError, match="bits_budget"):
+            EngineConfig(bits_budget=7.5)
+        assert EngineConfig(bits_budget=2.5).bits_budget == 2.5
+
+    def test_geometry_and_speculation_validated(self):
+        with pytest.raises(ValueError, match="num_blocks"):
+            EngineConfig(num_blocks=4, max_blocks_per_slot=8)
+        with pytest.raises(ValueError, match="speculative_k"):
+            EngineConfig(speculative_k=-1)
+        with pytest.raises(ValueError, match="draft_centroids"):
+            EngineConfig(draft_centroids=32)
+
+
 class TestBlockAllocator:
     def test_all_or_nothing_and_reuse(self):
         a = BlockAllocator(4)

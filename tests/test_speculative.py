@@ -36,6 +36,34 @@ def draft2bit(tiny):
     return draft
 
 
+class TestDraftPacking:
+    """DESIGN.md §10: the 4-centroid draft is genuinely 2-bit PACKED — its
+    serving stream costs half the int4 layout's bytes, per tensor."""
+
+    def test_draft_weight_bytes_halve_vs_int4(self, tiny, draft2bit):
+        from repro.core.api import is_clustered
+        from repro.core.clustered_params import packed_weight_bytes
+        from repro.core.lut import packed_rows
+        got = packed_weight_bytes(draft2bit)
+        int4 = packed_weight_bytes(draft2bit, nbits=4)
+        assert got * 2 == int4, (got, int4)
+        cts = [l for l in jax.tree_util.tree_leaves(
+            draft2bit, is_leaf=is_clustered) if is_clustered(l)]
+        assert cts
+        for ct in cts:
+            assert ct.nbits == 2
+            assert ct.packed.shape[-2] == packed_rows(ct.smooth.shape[-1], 2)
+
+    def test_wider_draft_packs_wider(self, tiny):
+        """An 8-centroid draft packs at 3 bits — the width follows K."""
+        from repro.core.api import is_clustered
+        _, _, params = tiny
+        draft, report = make_draft_params(params, draft_centroids=8)
+        cts = [l for l in jax.tree_util.tree_leaves(
+            draft, is_leaf=is_clustered) if is_clustered(l)]
+        assert cts and all(ct.nbits == 3 for ct in cts)
+
+
 def _prompt(seed, n):
     return np.random.default_rng(seed).integers(0, VOCAB, n).astype(np.int32)
 
