@@ -78,10 +78,44 @@ def trained_proxy(name: str, steps: int = 200, seed: int = 0):
     return cfg, model, params, eval_ce, loss_fn, calib
 
 
+def timeit_p50(fn, *args, warmup=1, repeats=5):
+    """Single timing discipline for every bench lane (and the same one the
+    kernel autotuner uses — `repro.kernels.autotune.measure_candidate`):
+    `warmup` discarded calls to absorb compilation/tracing, then the p50 of
+    `repeats` wall-clock measurements, each fenced by `jax.block_until_ready`
+    so async dispatch cannot hide device time. Returns (us_per_call, out).
+
+    Interpret and compiled lanes time identically through this helper; only
+    what `fn` dispatches differs (benchmarks/run.py --backend)."""
+    out = None
+    for _ in range(max(warmup, 0)):
+        out = jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.percentile(ts, 50)) * 1e6, out
+
+
 def timed(fn, *args, reps=3):
-    fn(*args)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
-    return (time.perf_counter() - t0) / reps * 1e6, out
+    """Back-compat shim over timeit_p50 (old callers pass `reps`)."""
+    return timeit_p50(fn, *args, warmup=1, repeats=reps)
+
+
+def serving_mode(backend: str):
+    """lut_serving mode for a bench lane (benchmarks/run.py --backend):
+
+      "interpret" — the Pallas kernels through the interpreter off-TPU
+                    (correctness telemetry, the CI smoke lane; on TPU the
+                    compiled kernels, as before the lane existed);
+      "compiled"  — auto dispatch (None): compiled Pallas kernels on TPU, the
+                    XLA-compiled gather fallback elsewhere — real wall-clock
+                    of compiled code on whatever device the host offers.
+    """
+    if backend == "interpret":
+        return None if jax.default_backend() == "tpu" else "interpret"
+    if backend == "compiled":
+        return None
+    raise ValueError(f"unknown bench backend {backend!r}; "
+                     f"choose 'interpret' or 'compiled'")

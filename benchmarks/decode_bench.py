@@ -2,6 +2,7 @@
 swept over the weight bit-width axis (DESIGN.md §10).
 
     PYTHONPATH=src python -m benchmarks.decode_bench --smoke [--bits 4,2,mixed]
+                                            [--backend interpret|compiled]
 
 Measures the quantities the paper's 6.2x serving claim rides on and writes
 them to BENCH_decode.json so the speedup trajectory is tracked PR over PR:
@@ -20,9 +21,13 @@ them to BENCH_decode.json so the speedup trajectory is tracked PR over PR:
     (decode GEMV shape) vs the dense matmul, plus the v5e roofline byte model
     (packed sub-byte codes vs bf16 weight stream).
 
---smoke runs a reduced config for a few tokens with the Pallas kernels in
-interpreter mode — CPU-runnable on every CI pass (numbers are correctness
-telemetry there, not perf claims; on TPU the same harness reports real time).
+--smoke runs a reduced config for a few tokens. The --backend lane
+(benchmarks/run.py, DESIGN.md §11) picks what the LCD rows dispatch:
+"interpret" runs the Pallas kernels through the interpreter off-TPU (the CI
+correctness lane — numbers are telemetry, not perf claims) and (re)writes
+the checked-in BENCH_decode.json; "compiled" times compiled code only — the
+Pallas kernels on TPU, the XLA gather fallback elsewhere — and feeds the
+BENCH_trajectory.json perf record instead of overwriting the telemetry file.
 """
 import argparse
 import json
@@ -32,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, serving_mode, timeit_p50
 from repro.core.api import is_clustered
 from repro.core.clustered_params import packed_weight_bytes
 from repro.kernels.ops import lut_gemm_fused, lut_serving, packed_view
@@ -54,7 +59,9 @@ BITS_CONFIGS = {
 
 def _layer_kernel_rows(params, batch: int, interpret: bool):
     """Time the fused serving GEMM per unique clustered layer shape at the
-    decode GEMV shape (M = batch)."""
+    decode GEMV shape (M = batch); block shapes come from the autotuner
+    (cached winner on a compiled backend, the heuristic under the
+    interpreter — DESIGN.md §11)."""
     flat = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=is_clustered)[0]
     rows, seen = [], set()
@@ -77,10 +84,11 @@ def _layer_kernel_rows(params, batch: int, interpret: bool):
         packed = packed_view(ct)
         w = jnp.asarray(rng.normal(size=(d_in, d_out)).astype(np.float32))
 
-        us_fused, _ = timed(lambda: lut_gemm_fused(
+        us_fused, _ = timeit_p50(lambda: lut_gemm_fused(
             x, inv, packed, ct.codebook, act, quantize=quant,
-            interpret=interpret, nbits=ct.nbits).block_until_ready())
-        us_dense, _ = timed(lambda: ((x / ct.smooth) @ w).block_until_ready())
+            interpret=interpret, nbits=ct.nbits))
+        us_dense, _ = timeit_p50(
+            jax.jit(lambda a, sm, wd: (a / sm) @ wd), x, ct.smooth, w)
         bytes_bf16 = d_in * d_out * 2
         bytes_packed = d_in * d_out * ct.nbits // 8 + 16 * 4
         rows.append({
@@ -96,12 +104,12 @@ def _layer_kernel_rows(params, batch: int, interpret: bool):
     return rows
 
 
-def _bits_row(name, cfg, params, serve_kw, smoke, on_tpu):
+def _bits_row(name, cfg, params, serve_kw, smoke, mode):
     """One serving row of the bits axis: compress at the config's width
-    policy, decode through the real kernel dispatch, account the packed
+    policy, decode through the lane's kernel dispatch, account the packed
     stream bytes, and (smoke) assert kernel-vs-oracle token parity."""
     st = {}
-    with lut_serving(None if on_tpu else "interpret"):
+    with lut_serving(mode):
         gen, cparams = serve(lcd=True, params=params, stats=st, **cfg,
                              **serve_kw)
     got = packed_weight_bytes(cparams)
@@ -133,21 +141,23 @@ def _bits_row(name, cfg, params, serve_kw, smoke, on_tpu):
 
 
 def run(smoke: bool = True, arch: str = "llama2-7b",
-        bits: str = "4,2,mixed") -> dict:
+        bits: str = "4,2,mixed", backend: str = "interpret") -> dict:
     if smoke:
         batch, prompt_len, gen_tokens = 2, 8, 8
     else:
         batch, prompt_len, gen_tokens = 8, 64, 128
     on_tpu = jax.default_backend() == "tpu"
+    mode = serving_mode(backend)   # lane -> lut_serving dispatch
     serve_kw = dict(arch=arch, use_reduced=smoke, batch=batch,
                     prompt_len=prompt_len, gen_tokens=gen_tokens)
 
     dense_stats = {}
     _, params = serve(lcd=False, stats=dense_stats, **serve_kw)
 
-    # off-TPU, force the fused Pallas kernels through the interpreter so the
-    # LCD rows measure (and regression-guard) the real serving dispatch, not
-    # the gather fallback
+    # interpret lane off-TPU: force the fused Pallas kernels through the
+    # interpreter so the LCD rows measure (and regression-guard) the real
+    # serving dispatch; compiled lane: auto dispatch (kernels on TPU, the
+    # XLA gather fallback elsewhere) so every number is compiled wall-clock
     bits_rows, cparams4 = {}, None
     for name in [b.strip() for b in bits.split(",") if b.strip()]:
         if name not in BITS_CONFIGS:
@@ -155,7 +165,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
                 f"unknown bits config {name!r}; choose from "
                 f"{sorted(BITS_CONFIGS)}")
         bits_rows[name], cp = _bits_row(name, BITS_CONFIGS[name], params,
-                                        serve_kw, smoke, on_tpu)
+                                        serve_kw, smoke, mode)
         if name == "4":
             cparams4 = cp
 
@@ -174,11 +184,13 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
         assert row["traces"] == {"prefill": 1, "decode": 1}, (
             f"bits={name}: 2-trace invariant broken: {row['traces']}")
 
-    layers = _layer_kernel_rows(cparams4 if cparams4 is not None else params,
-                                batch, interpret=not on_tpu)
+    layers = (_layer_kernel_rows(cparams4 if cparams4 is not None else params,
+                                 batch, interpret=not on_tpu)
+              if backend == "interpret" or on_tpu else [])
 
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
+        "bench_backend": backend,
         "batch": batch, "prompt_len": prompt_len, "gen_tokens": gen_tokens,
         "dense": dense_stats, "lcd": lcd_stats,
         "lcd_vs_dense_tokens_per_s": round(
@@ -186,12 +198,18 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
             / max(dense_stats["tokens_per_s"], 1e-9), 3),
         "bits": bits_rows,
         "layers": layers,
-        "note": ("interpret-mode wall times are correctness telemetry, not "
-                 "perf claims" if not on_tpu else "compiled TPU timings"),
+        "note": ("compiled TPU timings" if on_tpu else
+                 "interpret-mode wall times are correctness telemetry, not "
+                 "perf claims" if backend == "interpret" else
+                 "compiled XLA (gather fallback) wall-clock on a non-TPU "
+                 "host"),
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2)
-    emit("decode/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
+    # only the interpret lane owns the checked-in telemetry file; the
+    # compiled lane's numbers go to BENCH_trajectory.json (benchmarks/run.py)
+    if backend == "interpret" or on_tpu:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=2)
+        emit("decode/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
     return out
 
 
@@ -204,8 +222,13 @@ def main() -> None:
                     help="comma list from {4,3,2,mixed}: serving rows of the "
                          "bit-width axis (mixed = bits_budget 2.5, a real "
                          "Fisher-scored per-layer split on the smoke proxy)")
+    ap.add_argument("--backend", default="interpret",
+                    choices=("interpret", "compiled"),
+                    help="bench lane: interpreter telemetry vs compiled "
+                         "wall-clock (DESIGN.md §11)")
     args = ap.parse_args()
-    out = run(smoke=args.smoke, arch=args.arch, bits=args.bits)
+    out = run(smoke=args.smoke, arch=args.arch, bits=args.bits,
+              backend=args.backend)
     print(json.dumps({k: out[k] for k in
                       ("lcd_vs_dense_tokens_per_s", "backend", "smoke")}))
 

@@ -1,10 +1,18 @@
 """§Roofline table compiler: reads experiments/dryrun/*.json and emits the
 per-(arch x shape x mesh) three-term roofline rows + a markdown table for
-EXPERIMENTS.md."""
+EXPERIMENTS.md.
+
+Also closes the loop against measurement: when BENCH_trajectory.json holds a
+compiled-lane record for the CURRENT device (benchmarks/run.py --backend
+compiled), each kernel row gets a measured-vs-roofline fraction —
+roofline_us / measured_us, i.e. what share of the v5e weight-stream bound
+the compiled kernel actually achieves (DESIGN.md §11)."""
 import glob
 import json
 
+import jax
 
+from benchmarks import trajectory
 from benchmarks.common import emit
 
 
@@ -17,6 +25,20 @@ def load_cells(pattern="experiments/dryrun/*.json"):
     return cells
 
 
+def latest_compiled_kernel_rows(records=None):
+    """Kernel rows of the newest compiled-lane trajectory record taken on a
+    device of the same kind as this process — comparing a CPU run against a
+    TPU record (or vice versa) would be noise dressed as a fraction."""
+    device_kind = jax.devices()[0].device_kind
+    if records is None:
+        records = trajectory.load()
+    for rec in reversed(records):
+        if (rec.get("backend") == "compiled"
+                and rec.get("device_kind") == device_kind):
+            return rec.get("suites", {}).get("kernel", {}).get("shapes", [])
+    return []
+
+
 def run() -> None:
     for d in load_cells():
         emit(f"roofline/{d['cell']}", d["t_step"] * 1e6,
@@ -24,6 +46,14 @@ def run() -> None:
              f"t_m={d['t_memory']*1e3:.2f}ms;t_x={d['t_collective']*1e3:.2f}ms;"
              f"mfu={d.get('mfu', 0):.4f};useful_flop_frac={d.get('useful_flop_frac', 0):.3f};"
              f"hbm_ok={d.get('hbm_ok')};gb_per_chip={d['memory']['total_per_chip']/1e9:.1f}")
+    for r in latest_compiled_kernel_rows():
+        us, roof = r.get("us"), r.get("roofline_us")
+        if not us or not roof:
+            continue
+        emit(f"roofline/measured/{r['name']}", us,
+             f"kernel={r.get('kernel')};roofline_us={roof};"
+             f"fraction_of_roofline={roof / us:.3g};"
+             f"blocks={'x'.join(map(str, r.get('blocks', [])))}")
 
 
 def markdown_table(pattern="experiments/dryrun/*__pod1.json") -> str:

@@ -2,15 +2,24 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only table2]
     PYTHONPATH=src python -m benchmarks.run --only decode,serving,spec --smoke
+    PYTHONPATH=src python -m benchmarks.run --only decode,kernel \
+                                            --backend compiled --smoke
 
 Emits `name,us_per_call,derived` CSV rows (benchmarks/common.emit). Exits
 nonzero if ANY selected suite raises — the parity assertions inside the
 serving/spec smoke suites are what the CI bench-smoke job gates on.
 
-The decode/serving/spec suites also (re)write the checked-in BENCH_*.json
-files; docs/benchmarks.md is the field-by-field schema reference for them
-(which CI job writes each file, how to regenerate on TPU, and the metric-
-citation convention README's tables are linted against).
+Two bench lanes (--backend, DESIGN.md §11): "interpret" runs the Pallas
+kernels through the interpreter off-TPU (correctness telemetry; owns the
+checked-in BENCH_*.json files), "compiled" times compiled code only (the
+Pallas kernels on TPU, the XLA gather fallback elsewhere). Either lane
+appends one record — git sha, lane, device kind, headline metrics, autotuned
+block shapes — to the append-only BENCH_trajectory.json
+(benchmarks/trajectory.py); `scripts/perf_gate.py` gates on it.
+
+docs/benchmarks.md is the field-by-field schema reference for every BENCH
+file (which CI job writes each one, how to regenerate on TPU, and the
+metric-citation convention README's tables are linted against).
 """
 import argparse
 import sys
@@ -27,6 +36,12 @@ def main() -> None:
                          "tokens, CPU/interpret friendly (default; "
                          "--no-smoke for full)")
     ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--backend", default="interpret",
+                    choices=("interpret", "compiled"),
+                    help="bench lane for kernel/decode/serving/spec: "
+                         "interpreter correctness telemetry vs compiled "
+                         "wall-clock (DESIGN.md §11); both append to "
+                         "BENCH_trajectory.json")
     ap.add_argument("--bits", default="4,2,mixed",
                     help="decode suite: comma list from {4,3,2,mixed} — the "
                          "weight bit-width axis (DESIGN.md §10); each entry "
@@ -37,28 +52,31 @@ def main() -> None:
     from benchmarks import (decode_bench, fig_benchmarks, kernel_bench,
                             roofline, serving_bench, spec_bench,
                             table1_clustering, table2_baselines,
-                            table3_smoothing)
+                            table3_smoothing, trajectory)
 
     suites = {
         "table1": table1_clustering.run,
         "table2": table2_baselines.run,
         "table3": table3_smoothing.run,
         "figs": fig_benchmarks.run,
-        "kernel": kernel_bench.run,
+        "kernel": lambda: kernel_bench.run(backend=args.backend),
         "roofline": roofline.run,
         # static-batch serving perf (tokens/s + per-layer fused kernel
         # timings) across the weight bit-width axis; emits BENCH_decode.json
         # so the trajectory is tracked
-        "decode": lambda: decode_bench.run(smoke=args.smoke, bits=args.bits),
+        "decode": lambda: decode_bench.run(smoke=args.smoke, bits=args.bits,
+                                           backend=args.backend),
         # continuous-batching engine under Poisson traffic (paged KV cache,
         # per-request latency percentiles); emits BENCH_serving.json and in
         # --smoke mode asserts single-request parity — the documented
         # pre-merge smoke gate (README)
-        "serving": lambda: serving_bench.run(smoke=args.smoke),
+        "serving": lambda: serving_bench.run(smoke=args.smoke,
+                                             backend=args.backend),
         # self-speculative decoding: accepted-length distribution + latency
         # vs the plain engine; --smoke asserts bit-equal parity and mean
         # accepted length > 1 (DESIGN.md §8); emits BENCH_spec.json
-        "spec": lambda: spec_bench.run(smoke=args.smoke),
+        "spec": lambda: spec_bench.run(smoke=args.smoke,
+                                       backend=args.backend),
     }
     print("name,us_per_call,derived")
     todo = args.only.split(",") if args.only else list(suites)
@@ -66,14 +84,22 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown suite(s) {unknown}; choose from {list(suites)}")
     failures = 0
+    results = {}
     for name in todo:
         try:
-            suites[name]()
+            results[name] = suites[name]()
         except Exception as e:  # keep the harness going; report at the end
             import traceback
             traceback.print_exc()
             print(f"{name},0.00,ERROR={type(e).__name__}:{str(e)[:120]}")
             failures += 1
+    # any perf suite ran -> append one trajectory record for the lane
+    if not failures and any(n in results
+                            for n in ("kernel", "decode", "serving", "spec")):
+        rec = trajectory.append_record(args.backend, results,
+                                       smoke=args.smoke)
+        print(f"trajectory/append,0.00,backend={rec['backend']};"
+              f"sha={rec['git_sha']};suites={','.join(rec['suites'])}")
     sys.exit(1 if failures else 0)
 
 

@@ -1,7 +1,8 @@
 """Continuous-batching serving benchmark: the paged engine under Poisson
 traffic — dense vs LCD, float vs int8 KV cache (DESIGN.md §5, §9).
 
-    PYTHONPATH=src python -m benchmarks.serving_bench --smoke
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke \
+                                            [--backend interpret|compiled]
 
 Schema of the emitted BENCH_serving.json: docs/benchmarks.md.
 
@@ -24,10 +25,12 @@ Measures what the static decode benchmark cannot — multi-tenant behavior:
     change anyone's output; int8-vs-float parity is a tolerance, not an
     identity — DESIGN.md §9).
 
---smoke runs a reduced config through the Pallas interpreter for the LCD row —
-CPU-runnable on every CI pass (wall times there are correctness telemetry,
-not perf claims; on TPU the same harness reports real time). Results land in
-BENCH_serving.json so the trajectory is tracked PR over PR.
+--smoke runs a reduced config. The --backend lane (benchmarks/run.py,
+DESIGN.md §11) picks the LCD row's dispatch: "interpret" runs the Pallas
+kernels through the interpreter off-TPU (the CI correctness lane; wall times
+are telemetry, not perf claims) and (re)writes the checked-in
+BENCH_serving.json; "compiled" times compiled code only (Pallas on TPU, the
+XLA gather fallback elsewhere) and feeds the BENCH_trajectory.json record.
 """
 import argparse
 import dataclasses
@@ -37,7 +40,7 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, serving_mode
 from repro.kernels.ops import lut_serving
 from repro.launch.engine import (EngineConfig, ServingEngine, build_engine,
                                  kv_capacity_report)
@@ -125,7 +128,8 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
     return row, params, reqs, engine.model.cfg
 
 
-def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
+def run(smoke: bool = True, arch: str = "llama2-7b",
+        backend: str = "interpret") -> dict:
     if smoke:
         n_req, max_prompt, gen = 5, 12, 6
         ecfg = EngineConfig(num_slots=3, block_size=4, num_blocks=24,
@@ -135,6 +139,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
         ecfg = EngineConfig(num_slots=8, block_size=16, num_blocks=256,
                             max_blocks_per_slot=16, prefill_chunk=64)
     on_tpu = jax.default_backend() == "tpu"
+    mode = serving_mode(backend)   # lane -> lut_serving dispatch
     workload = _poisson_workload(np.random.default_rng(0), n_req, max_prompt,
                                  gen, mean_gap_steps=2.0)
     assert len(workload) >= 4, "parity contract needs >= 4 staggered requests"
@@ -142,9 +147,10 @@ def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
     dense, params, dense_reqs, cfg = _bench_one(
         "dense", arch=arch, smoke=smoke, lcd=False, ecfg=ecfg,
         workload=workload, seed=7, params=None, verify=smoke)
-    # off-TPU, force the fused Pallas kernels through the interpreter so the
-    # LCD row measures the real serving dispatch, not the gather fallback
-    with lut_serving(None if on_tpu else "interpret"):
+    # interpret lane off-TPU: force the fused Pallas kernels through the
+    # interpreter so the LCD row measures the real serving dispatch; compiled
+    # lane: auto dispatch, so every number is compiled wall-clock
+    with lut_serving(mode):
         lcd, _, _, _ = _bench_one("lcd", arch=arch, smoke=smoke, lcd=True,
                                   ecfg=ecfg, workload=workload, seed=7,
                                   params=params, verify=smoke)
@@ -177,6 +183,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
 
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
+        "bench_backend": backend,
         "engine": {"num_slots": ecfg.num_slots, "block_size": ecfg.block_size,
                    "num_blocks": ecfg.num_blocks,
                    "prefill_chunk": ecfg.prefill_chunk},
@@ -186,12 +193,18 @@ def run(smoke: bool = True, arch: str = "llama2-7b") -> dict:
         "kv_cache": capacity,
         "lcd_vs_dense_tokens_per_s": round(
             lcd["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3),
-        "note": ("interpret-mode wall times are correctness telemetry, not "
-                 "perf claims" if not on_tpu else "compiled TPU timings"),
+        "note": ("compiled TPU timings" if on_tpu else
+                 "interpret-mode wall times are correctness telemetry, not "
+                 "perf claims" if backend == "interpret" else
+                 "compiled XLA (gather fallback) wall-clock on a non-TPU "
+                 "host"),
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2)
-    emit("serving/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
+    # the interpret lane owns the checked-in telemetry file; the compiled
+    # lane's numbers go to BENCH_trajectory.json (benchmarks/run.py)
+    if backend == "interpret" or on_tpu:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=2)
+        emit("serving/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
     return out
 
 
@@ -201,8 +214,12 @@ def main() -> None:
                     help="reduced config, few requests, CPU/interpret "
                          "friendly; also runs the single-request parity check")
     ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--backend", default="interpret",
+                    choices=("interpret", "compiled"),
+                    help="bench lane: interpreter telemetry vs compiled "
+                         "wall-clock (DESIGN.md §11)")
     args = ap.parse_args()
-    out = run(smoke=args.smoke, arch=args.arch)
+    out = run(smoke=args.smoke, arch=args.arch, backend=args.backend)
     print(json.dumps({k: out[k] for k in
                       ("lcd_vs_dense_tokens_per_s", "backend", "smoke")}))
 

@@ -74,7 +74,8 @@ def _bench_engine(name, model, params, ecfg, workload, vocab, seed,
     return row, reqs
 
 
-def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
+def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4,
+        backend: str = "interpret") -> dict:
     if smoke:
         n_req, max_prompt, gen = 5, 12, 6
         geom = dict(num_slots=3, block_size=4, num_blocks=24,
@@ -156,6 +157,7 @@ def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
     out = {
         "arch": "llama2-7b-proxy(trained)", "smoke": smoke,
         "backend": jax.default_backend(),
+        "bench_backend": backend,
         "speculative_k": k, "draft_centroids": draft_centroids,
         "draft_equiv_bits": round(draft_report.equivalent_bits, 2),
         "draft_packed_bits": round(draft_report.mean_packed_bits, 2),
@@ -175,9 +177,14 @@ def run(smoke: bool = True, k: int = 3, draft_centroids: int = 4) -> dict:
         "note": ("CPU gather-fallback wall times are correctness telemetry; "
                  "the dispatch multiplier is the hardware-portable number"),
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2)
-    emit("spec/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
+    # both lanes dispatch the same way here (the draft serves through
+    # clustered_linear's auto mode: the XLA gather path off-TPU, compiled
+    # kernels on TPU); the lane only decides which store the numbers feed —
+    # the telemetry file (interpret) or BENCH_trajectory.json (compiled)
+    if backend == "interpret" or jax.default_backend() == "tpu":
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=2)
+        emit("spec/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)}")
     emit("spec/mean_accepted_len", 0.0,
          f"mean={spec_row['mean_accepted_len']:.2f};"
          f"hist={spec_row['accepted_len_hist']}")
@@ -192,9 +199,12 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=3,
                     help="draft tokens per verify round")
     ap.add_argument("--draft-centroids", type=int, default=4)
+    ap.add_argument("--backend", default="interpret",
+                    choices=("interpret", "compiled"),
+                    help="bench lane (benchmarks/run.py, DESIGN.md §11)")
     args = ap.parse_args()
     out = run(smoke=args.smoke, k=args.k,
-              draft_centroids=args.draft_centroids)
+              draft_centroids=args.draft_centroids, backend=args.backend)
     print(json.dumps({
         "mean_accepted_len": out["speculative"]["mean_accepted_len"],
         "accepted_len_hist": out["speculative"]["accepted_len_hist"],

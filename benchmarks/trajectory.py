@@ -1,0 +1,128 @@
+"""BENCH_trajectory.json: the append-only perf trajectory (DESIGN.md §11).
+
+Every `benchmarks/run.py` invocation appends ONE record — git sha, date,
+bench lane (`--backend interpret|compiled`), device kind, the per-suite
+headline metrics, and the autotuner's chosen block shapes — so "as fast as
+the hardware allows" (ROADMAP north star) is a number with a history, not a
+roofline estimate. `scripts/perf_gate.py` compares the latest record against
+the previous same-(backend, device) record and gates on regressions;
+`benchmarks/roofline.py` reads the kernel rows back to print measured-vs-
+roofline fractions. Field-by-field schema: docs/benchmarks.md.
+"""
+import datetime
+import json
+import os
+import subprocess
+
+import jax
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_trajectory.json")
+
+SCHEMA_VERSION = 1
+
+# every record must carry these (type-checked by scripts/perf_gate.py)
+REQUIRED_FIELDS = {
+    "schema_version": int,
+    "git_sha": str,
+    "date": str,
+    "backend": str,        # the bench lane: "interpret" | "compiled"
+    "jax_backend": str,    # jax.default_backend() of the run
+    "device_kind": str,
+    "smoke": bool,
+    "suites": dict,        # suite name -> headline metrics (see extractors)
+    "block_shapes": dict,  # autotune cache snapshot: key -> [blocks]
+}
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(OUT_PATH) or ".", capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def load(path: str = OUT_PATH) -> list:
+    """The full record list; a missing/corrupt file is an empty trajectory
+    (same tolerance as the autotune cache — telemetry must never crash a
+    bench run)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        return doc if isinstance(doc, list) else []
+    except (OSError, ValueError):
+        return []
+
+
+def _suite_headlines(name: str, result: dict) -> dict:
+    """Distill one suite's returned dict to the metrics the gate compares.
+    Unknown suites pass through nothing (table/fig suites return None)."""
+    if not isinstance(result, dict):
+        return {}
+    if name == "decode":
+        out = {"tokens_per_s": {
+            "dense": result.get("dense", {}).get("tokens_per_s"),
+            "lcd": (result.get("lcd") or {}).get("tokens_per_s")}}
+        out["tokens_per_s"].update({
+            f"bits_{w}": row.get("tokens_per_s")
+            for w, row in (result.get("bits") or {}).items()})
+        out["parity"] = all(
+            row.get("kernel_vs_oracle_tokens_equal", True)
+            for row in (result.get("bits") or {}).values())
+        return out
+    if name == "serving":
+        return {
+            "tokens_per_s": {r: (result.get(r) or {}).get("tokens_per_s")
+                             for r in ("dense", "lcd", "int8_kv")},
+            "latency_p50_s": (result.get("lcd") or {})
+            .get("latency_s", {}).get("p50"),
+            "latency_p99_s": (result.get("lcd") or {})
+            .get("latency_s", {}).get("p99"),
+            "parity": all((result.get(r) or {})
+                          .get("verified_vs_single_request", True)
+                          for r in ("dense", "lcd", "int8_kv")),
+        }
+    if name == "spec":
+        return {
+            "tokens_per_s": {
+                r: (result.get(r) or {}).get("tokens_per_s")
+                for r in ("baseline", "speculative")},
+            "latency_p50_s": (result.get("speculative") or {})
+            .get("latency_s", {}).get("p50"),
+            "latency_p99_s": (result.get("speculative") or {})
+            .get("latency_s", {}).get("p99"),
+            "mean_accepted_len": (result.get("speculative") or {})
+            .get("mean_accepted_len"),
+            "parity": bool(result.get("verified_bit_equal", True)),
+        }
+    if name == "kernel":
+        return {"shapes": result.get("shapes", [])}
+    return {}
+
+
+def append_record(backend: str, results: dict, smoke: bool,
+                  path: str = OUT_PATH) -> dict:
+    """Build one trajectory record from the suite results and append it."""
+    from repro.kernels import autotune
+    records = load(path)
+    rec = {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "date": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "backend": backend,
+        "jax_backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "smoke": bool(smoke),
+        "suites": {name: _suite_headlines(name, res)
+                   for name, res in results.items()
+                   if _suite_headlines(name, res)},
+        "block_shapes": autotune.get_cache().snapshot(),
+    }
+    records.append(rec)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    return rec

@@ -18,6 +18,7 @@ TIER1_MODULES = {
     "test_speculative",
     "test_paged_kv",
     "test_packing",
+    "test_autotune",
 }
 
 

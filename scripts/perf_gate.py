@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Perf regression gate over BENCH_trajectory.json (DESIGN.md §11).
+
+    PYTHONPATH=src python scripts/perf_gate.py [--path BENCH_trajectory.json]
+                                               [--threshold 0.10] [--strict]
+
+Checks the LATEST trajectory record (benchmarks/run.py appends one per
+invocation):
+
+  1. schema     — every benchmarks/trajectory.REQUIRED_FIELDS key present
+                  with the right type. BLOCKING always.
+  2. parity     — every suite's `parity` flag true (kernel-vs-oracle token
+                  equality, engine-vs-single-request equality, spec bit-
+                  equality). BLOCKING always: a fast wrong kernel is not a
+                  perf win.
+  3. regression — headline throughput (tokens_per_s: lower is worse) and
+                  latency/kernel-us (higher is worse) vs the PREVIOUS record
+                  of the same (backend, device_kind, smoke) lane, failing on
+                  >--threshold (default 10%) regressions. BLOCKING on TPU
+                  device kinds or with --strict; informational on CPU hosts,
+                  where wall-clock (interpreter telemetry especially) is too
+                  noisy for a hard gate — the comparison is still printed so
+                  the trajectory is reviewable PR over PR.
+
+Exit 0 = gate passed, 1 = blocking failure, 2 = no record to check (also
+blocking: CI runs the bench first, so an empty trajectory means the append
+broke).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import trajectory  # noqa: E402
+
+
+def check_schema(rec: dict) -> list:
+    errs = []
+    for field, typ in trajectory.REQUIRED_FIELDS.items():
+        if field not in rec:
+            errs.append(f"schema: missing field {field!r}")
+        elif not isinstance(rec[field], typ):
+            errs.append(f"schema: {field!r} is {type(rec[field]).__name__}, "
+                        f"want {typ.__name__}")
+    if rec.get("schema_version") not in (None, trajectory.SCHEMA_VERSION):
+        errs.append(f"schema: version {rec.get('schema_version')} != "
+                    f"{trajectory.SCHEMA_VERSION}")
+    if rec.get("backend") not in ("interpret", "compiled"):
+        errs.append(f"schema: backend {rec.get('backend')!r} not a lane")
+    return errs
+
+
+def check_parity(rec: dict) -> list:
+    return [f"parity: suite {name!r} reports parity=False"
+            for name, suite in rec.get("suites", {}).items()
+            if suite.get("parity") is False]
+
+
+def _flat_metrics(rec: dict) -> dict:
+    """suite-dotted metric name -> (value, lower_is_worse)."""
+    out = {}
+    for name, suite in rec.get("suites", {}).items():
+        for role, v in (suite.get("tokens_per_s") or {}).items():
+            if isinstance(v, (int, float)):
+                out[f"{name}.tokens_per_s.{role}"] = (float(v), True)
+        for lat in ("latency_p50_s", "latency_p99_s"):
+            v = suite.get(lat)
+            if isinstance(v, (int, float)):
+                out[f"{name}.{lat}"] = (float(v), False)
+        for row in suite.get("shapes", []):
+            v = row.get("us")
+            if isinstance(v, (int, float)) and row.get("name"):
+                out[f"{name}.us.{row['name']}"] = (float(v), False)
+    return out
+
+
+def check_regressions(latest: dict, prev: dict, threshold: float) -> list:
+    """Same-lane comparison; returns human-readable regression lines."""
+    cur, old = _flat_metrics(latest), _flat_metrics(prev)
+    regressions = []
+    for key, (v, lower_is_worse) in cur.items():
+        if key not in old:
+            continue
+        ov = old[key][0]
+        if ov <= 0 or v <= 0:
+            continue
+        ratio = (ov - v) / ov if lower_is_worse else (v - ov) / ov
+        if ratio > threshold:
+            regressions.append(
+                f"regression: {key} {ov:.4g} -> {v:.4g} "
+                f"({ratio:+.1%} worse, threshold {threshold:.0%})")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=trajectory.OUT_PATH)
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max tolerated same-lane regression (fraction)")
+    ap.add_argument("--strict", action="store_true",
+                    help="make timing regressions blocking even on CPU "
+                         "hosts (default: blocking on TPU only)")
+    args = ap.parse_args()
+
+    records = trajectory.load(args.path)
+    if not records:
+        print(f"perf_gate: no records in {args.path}")
+        return 2
+    latest = records[-1]
+    lane = (latest.get("backend"), latest.get("device_kind"),
+            latest.get("smoke"))
+    print(f"perf_gate: latest record sha={latest.get('git_sha')} "
+          f"backend={lane[0]} device={lane[1]} smoke={lane[2]} "
+          f"suites={sorted(latest.get('suites', {}))}")
+
+    blocking = check_schema(latest) + check_parity(latest)
+
+    prev = next((r for r in reversed(records[:-1])
+                 if (r.get("backend"), r.get("device_kind"),
+                     r.get("smoke")) == lane), None)
+    if prev is None:
+        print("perf_gate: no previous same-lane record; timing gate skipped")
+    else:
+        regressions = check_regressions(latest, prev, args.threshold)
+        timing_blocks = args.strict or "TPU" in str(lane[1]).upper()
+        if timing_blocks:
+            blocking += regressions
+        else:
+            for line in regressions:
+                print(f"perf_gate: [INFO] {line}")
+        if not timing_blocks and regressions:
+            print("perf_gate: timing regressions informational on "
+                  f"device_kind={lane[1]!r} (CPU wall-clock is noisy; "
+                  "pass --strict to block)")
+
+    for err in blocking:
+        print(f"perf_gate: [FAIL] {err}")
+    if blocking:
+        return 1
+    print("perf_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

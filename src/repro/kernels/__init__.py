@@ -12,6 +12,11 @@
                     in VMEM, the full-precision cache never exists in HBM
   ops.py          — padded/blocked jit wrappers, variant selection, CPU
                     fallbacks, and the lut_serving dispatch context
+  autotune.py     — measured block-shape autotuner (DESIGN.md §11): every
+                    entry point's (bm, bn, bk)/(bq, bk) tile shapes come from
+                    its persistent cache, measured per (shape, nbits, backend)
+                    on compiled backends, exactly the _pick_blocks heuristic
+                    under the interpreter
   ref.py          — pure-jnp oracles (asserted in tests/test_kernels.py and
                     tests/test_paged_kv.py)
 """

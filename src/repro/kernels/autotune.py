@@ -1,0 +1,347 @@
+"""Measured block-shape autotuner for the Pallas kernels (DESIGN.md §11).
+
+The serving kernels are tiled: every entry point streams its operands through
+VMEM in (bm, bn, bk)-shaped blocks (or (bq, bk) query/key blocks for the
+attention kernels), and the static heuristic `heuristic_blocks` — the seed's
+`_pick_blocks` — guesses one shape per problem. That guess is fine for the
+interpreter but leaves measured throughput on the table on real hardware,
+where the best tile shape depends on the (m, k, n) geometry, the packing
+width (a 2-bit tile is half the VMEM bytes of an int4 one, so deeper bk fits)
+and the backend generation. AQLM ships per-shape tuned LUT kernels for
+exactly this reason (PAPERS.md: Egiazarian et al., 2024).
+
+This module is the single place block shapes come from:
+
+  key        (variant, backend, normalized (m, k, n), nbits) — normalization
+             rounds the problem to the shapes the kernels actually run after
+             padding, so e.g. a (1, 4096, 4096) and a (7, 4096, 4096) decode
+             GEMV share one entry (both pad M to 8).
+  candidates the MXU-aligned grid per variant, always containing the
+             heuristic choice, filtered by the VMEM working-set budget the
+             heuristic enforces (`vmem_bytes` ≤ VMEM_BUDGET) — the tuner can
+             never propose a spec the kernel could not run.
+  measure    warmup + p50-of-repeats wall-clock via `jax.block_until_ready`
+             (benchmarks/common.py `timeit_p50` uses the same discipline, so
+             bench timings and tuner timings agree on methodology).
+  cache      in-process dict backed by a persistent JSON store
+             (`~/.cache/repro/autotune.json`, override with
+             $REPRO_AUTOTUNE_CACHE; versioned schema, corrupt-file tolerant).
+             A cache hit NEVER re-measures (asserted in tests/test_autotune).
+
+Fallback contract (deterministic, no timing dependence): in interpret mode,
+and on a cache miss with measurement unavailable or disabled
+($REPRO_AUTOTUNE=0), `pick_blocks` returns exactly `heuristic_blocks`'s
+choice — CPU CI and the interpret benches behave precisely as before the
+tuner existed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.utils import round_up
+
+# ---------------------------------------------------------------------------
+# Heuristic (the seed's _pick_blocks — kept verbatim as the deterministic
+# fallback and as the always-present candidate)
+# ---------------------------------------------------------------------------
+
+VMEM_BUDGET = 8 * 1024 * 1024  # the working-set bound _pick_blocks was sized to
+
+CACHE_SCHEMA_VERSION = 1
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_ENV_ENABLE = "REPRO_AUTOTUNE"
+
+LUT_VARIANTS = ("lut_f32", "lut_int8", "lut_fused", "lut_fused_gemv")
+
+
+def heuristic_blocks(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """MXU-aligned blocks sized to keep the VMEM working set under ~8 MiB:
+    bm*bk*4 + bk*bn*nbits/8 + bm*bn*4 bytes.
+
+    GEMV-aware: decode-shaped calls (m < 128) collapse M into one
+    sublane-aligned block (multiple of 8 for f32) consumed by the N-major
+    fused GEMV kernel instead of padding M up to a full MXU tile."""
+    bm = round_up(m, 8) if m < 128 else 128
+    bn = 256 if n % 256 == 0 else 128
+    bk = 512 if k % 512 == 0 else 256
+    return bm, bn, bk
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, nbits: int = 4) -> int:
+    """Working-set bytes of one LUT-matmul grid step: f32 x tile + packed
+    code tile + f32 accumulator (the budget formula of `heuristic_blocks`,
+    generalized over the packing width)."""
+    return bm * bk * 4 + bk * bn * nbits // 8 + bm * bn * 4
+
+
+def candidate_blocks(m: int, k: int, n: int, nbits: int = 4,
+                     variant: str = "lut_fused") -> List[Tuple[int, int, int]]:
+    """The measured grid: MXU-aligned (bm, bn, bk) triples that (a) never pad
+    the problem beyond one block of slack, (b) cover whole packing groups
+    (bk·nbits ≡ 0 mod 8), and (c) fit the VMEM budget. The heuristic's choice
+    is always first, so the tuner's argmin can only match or beat it."""
+    heur = heuristic_blocks(m, k, n)
+    if variant == "lut_fused_gemv" or m < 128:
+        bms: Sequence[int] = (round_up(m, 8),)  # one resident M block
+    else:
+        bms = [b for b in (128, 256) if b <= round_up(m, 128)]
+    bns = [b for b in (128, 256, 512) if b <= round_up(n, 128)]
+    bks = [b for b in (128, 256, 512, 1024) if b <= round_up(k, 128)]
+    out = [heur]
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                cand = (bm, bn, bk)
+                if cand == heur or cand in out:
+                    continue
+                if (bk * nbits) % 8:
+                    continue
+                if vmem_bytes(bm, bn, bk, nbits) > VMEM_BUDGET:
+                    continue
+                out.append(cand)
+    return out
+
+
+def flash_heuristic(sq: int, sk: int) -> Tuple[int, int]:
+    """The flash kernel's historical defaults, clamped to the problem."""
+    return min(256, sq), min(512, sk)
+
+
+def flash_candidates(sq: int, sk: int) -> List[Tuple[int, int]]:
+    """(bq, bk) pairs that divide the (sq, sk) geometry exactly — the flash
+    kernel requires whole blocks (no padding path)."""
+    heur = flash_heuristic(sq, sk)
+    bqs = [b for b in (64, 128, 256, 512) if b <= sq and sq % b == 0]
+    bks = [b for b in (128, 256, 512, 1024) if b <= sk and sk % b == 0]
+    out = [heur]
+    for bq in bqs or [sq]:
+        for bk in bks or [sk]:
+            if (bq, bk) != heur and (bq, bk) not in out:
+                out.append((bq, bk))
+    return out
+
+
+def paged_heuristic() -> Tuple[int]:
+    """Lane-alignment multiple for the gathered KV length (the seed padded
+    to 128 lanes unconditionally)."""
+    return (128,)
+
+
+def paged_candidates(l: int) -> List[Tuple[int]]:
+    """KV-length padding multiples: wider lanes trade pad-FLOPs for fewer
+    ragged edges; only worth measuring when L exceeds one lane tile."""
+    out = [paged_heuristic()]
+    if l > 128:
+        out.append((256,))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Key normalization
+# ---------------------------------------------------------------------------
+
+def normalize_key(m: int, k: int, n: int, nbits: int, variant: str,
+                  backend: str) -> str:
+    """Canonical cache key: the problem rounded to the shape the kernel runs
+    after padding. Decode GEMVs (m < 128) bucket M to the sublane multiple;
+    larger M, and K/N always, round to the 128-lane tile. Two calls that pad
+    to the same kernel problem share one entry."""
+    if variant in ("lut_fused_gemv",) or (variant in LUT_VARIANTS and m < 128):
+        m_n = round_up(max(m, 1), 8)
+    elif variant in LUT_VARIANTS:
+        m_n = round_up(m, 128)
+    else:
+        m_n = m                       # attention: sq / gt are exact geometry
+    k_n = round_up(k, 128) if variant in LUT_VARIANTS else k
+    n_n = round_up(n, 128) if variant in LUT_VARIANTS else n
+    return f"{variant}|{backend}|m{m_n},k{k_n},n{n_n}|b{nbits}"
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+def cache_path() -> str:
+    return os.environ.get(
+        _ENV_CACHE,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+class AutotuneCache:
+    """In-process {key: entry} map backed by a JSON file.
+
+    entry = {"blocks": [ints], "us": float, "source": "measured"}.
+
+    The file is versioned ({"version": 1, "entries": {...}}); a missing,
+    empty, corrupt, or wrong-version file is treated as an empty cache — the
+    tuner re-measures rather than crashing serving (tests/test_autotune pins
+    this recovery)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or cache_path()
+        self.entries: Dict[str, dict] = {}
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+            if (isinstance(doc, dict)
+                    and doc.get("version") == CACHE_SCHEMA_VERSION
+                    and isinstance(doc.get("entries"), dict)):
+                self.entries = {
+                    k: v for k, v in doc["entries"].items()
+                    if isinstance(v, dict) and isinstance(v.get("blocks"), list)
+                    and all(isinstance(b, int) for b in v["blocks"])}
+        except (OSError, ValueError):
+            pass                      # absent/corrupt file -> empty cache
+
+    def save(self) -> None:
+        doc = {"version": CACHE_SCHEMA_VERSION, "entries": self.entries}
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        try:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass                      # read-only FS: stay in-process only
+
+    def get(self, key: str) -> Optional[Tuple[int, ...]]:
+        ent = self.entries.get(key)
+        return tuple(ent["blocks"]) if ent else None
+
+    def put(self, key: str, blocks: Sequence[int], us: float) -> None:
+        self.entries[key] = {"blocks": [int(b) for b in blocks],
+                             "us": round(float(us), 3), "source": "measured"}
+        self.save()
+
+    def snapshot(self) -> Dict[str, List[int]]:
+        """key -> winning blocks, for the BENCH_trajectory.json record."""
+        return {k: list(v["blocks"]) for k, v in sorted(self.entries.items())}
+
+
+_CACHE: Optional[AutotuneCache] = None
+
+
+def get_cache() -> AutotuneCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = AutotuneCache()
+    return _CACHE
+
+
+def reset_cache(path: Optional[str] = None) -> AutotuneCache:
+    """Drop the in-process cache (tests; or after changing $REPRO_AUTOTUNE_CACHE)."""
+    global _CACHE
+    _CACHE = AutotuneCache(path)
+    return _CACHE
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def tuning_enabled() -> bool:
+    return os.environ.get(_ENV_ENABLE, "1") != "0"
+
+
+def measure_candidate(fn: Callable[[], object], warmup: int = 1,
+                      repeats: int = 5) -> float:
+    """p50 wall-clock seconds of `fn` (which must return a JAX value), after
+    `warmup` discarded calls — same discipline as benchmarks/common.timeit_p50
+    but dependency-free so the kernels layer never imports the bench layer."""
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _tune(key: str, candidates, measure, cache: AutotuneCache):
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        try:
+            t = measure(*cand)
+        except Exception:             # a candidate the backend rejects loses
+            continue
+        if t < best_t:
+            best, best_t = cand, t
+    if best is None:                  # every candidate failed: heuristic wins
+        return None
+    cache.put(key, best, best_t * 1e6)
+    return tuple(best)
+
+
+def pick_blocks(m: int, k: int, n: int, *, nbits: int = 4,
+                variant: str = "lut_fused", interpret: bool = True,
+                measure: Optional[Callable[..., float]] = None,
+                cache: Optional[AutotuneCache] = None) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for a LUT matmul problem — cached winner, else measured,
+    else the deterministic heuristic.
+
+    Resolution order (the §11 contract):
+      1. cache hit for the normalized key  -> the stored winner, NO measuring;
+      2. miss + measurement available      -> time `candidate_blocks`, store;
+      3. miss + interpret / disabled / no
+         measure fn                        -> exactly `heuristic_blocks`.
+
+    `measure(bm, bn, bk) -> seconds` is injected by the caller (the kernel
+    wrappers build one only on a compiled backend; tests inject counters).
+    Shape args must be the post-group-padding problem the kernel will run.
+    """
+    backend = "interpret" if interpret else jax.default_backend()
+    cache = cache or get_cache()
+    key = normalize_key(m, k, n, nbits, variant, backend)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit                    # cache hit: never re-measure
+    if interpret or measure is None or not tuning_enabled():
+        return heuristic_blocks(m, k, n)
+    won = _tune(key, candidate_blocks(m, k, n, nbits, variant), measure, cache)
+    return won if won is not None else heuristic_blocks(m, k, n)
+
+
+def pick_flash_blocks(sq: int, sk: int, d: int, *, interpret: bool = True,
+                      measure: Optional[Callable[..., float]] = None,
+                      cache: Optional[AutotuneCache] = None
+                      ) -> Tuple[int, int]:
+    """(bq, bk) for the flash-attention kernel; same resolution order as
+    `pick_blocks`. Key geometry: (m=sq, k=sk, n=d), nbits=0 (no packing)."""
+    backend = "interpret" if interpret else jax.default_backend()
+    cache = cache or get_cache()
+    key = normalize_key(sq, sk, d, 0, "flash", backend)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    if interpret or measure is None or not tuning_enabled():
+        return flash_heuristic(sq, sk)
+    won = _tune(key, flash_candidates(sq, sk), measure, cache)
+    return won if won is not None else flash_heuristic(sq, sk)
+
+
+def pick_paged_pad(gt: int, l: int, d: int, *, interpret: bool = True,
+                   measure: Optional[Callable[..., float]] = None,
+                   cache: Optional[AutotuneCache] = None) -> int:
+    """Lane-padding multiple for the paged dequant-attention kernel's gathered
+    KV length; same resolution order. Key geometry: (m=gt, k=l, n=d)."""
+    backend = "interpret" if interpret else jax.default_backend()
+    cache = cache or get_cache()
+    key = normalize_key(gt, l, d, 8, "paged", backend)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit[0]
+    if interpret or measure is None or not tuning_enabled():
+        return paged_heuristic()[0]
+    won = _tune(key, paged_candidates(l), measure, cache)
+    return won[0] if won is not None else paged_heuristic()[0]

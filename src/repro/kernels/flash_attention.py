@@ -37,7 +37,27 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels import autotune
+
 NEG_INF = -1e30
+
+
+def _flash_measure_fn(bh: int, sq: int, sk: int, d: int, dtype, kw: dict):
+    """measure(bq, bk) -> seconds on synthetic (bh, s, d) operands — built
+    only on a compiled backend (DESIGN.md §11); the real q/k/v are tracers
+    when the wrapper is being jit-traced, and timing depends on shapes, not
+    values."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(bh, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, sk, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, sk, d)), dtype)
+
+    def measure(bq: int, bk: int) -> float:
+        return autotune.measure_candidate(
+            lambda: flash_attention(q, k, v, bq=bq, bk=bk, interpret=False,
+                                    **kw))
+
+    return measure
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
@@ -90,8 +110,8 @@ def flash_attention(
     k: jax.Array,          # (BH, Sk, D)
     v: jax.Array,          # (BH, Sk, D)
     *,
-    bq: int = 256,
-    bk: int = 512,
+    bq: int = None,        # None -> autotuned (DESIGN.md §11)
+    bk: int = None,
     causal: bool = True,
     window: int = 0,
     softcap: float = 0.0,
@@ -101,6 +121,16 @@ def flash_attention(
 ) -> jax.Array:
     bh, sq, d = q.shape
     sk = k.shape[1]
+    if bq is None or bk is None:
+        measure = None
+        if not interpret and jax.default_backend() == "tpu":
+            measure = _flash_measure_fn(
+                bh, sq, sk, d, q.dtype,
+                dict(causal=causal, window=window, softcap=softcap,
+                     q_offset=q_offset, k_len=k_len))
+        tbq, tbk = autotune.pick_flash_blocks(sq, sk, d, interpret=interpret,
+                                              measure=measure)
+        bq, bk = bq or tbq, bk or tbk
     bq = min(bq, sq)
     bk = min(bk, sk)
     assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)

@@ -51,6 +51,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.lut import SUPPORTED_NBITS
+from repro.kernels import autotune
 
 # Codebook capacity the kernel is specialized for: ≤4-bit codes (paper: K < 16
 # after distillation -> compact sub-byte representation, §4.2). Codebooks are
@@ -128,6 +129,19 @@ def _lut_matmul_kernel(x_ref, packed_ref, cb_ref, o_ref, acc_ref, *, bk: int, bn
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _resolve_blocks(m, k, n, nbits, variant, interpret, bm, bn, bk):
+    """Fill in None block args from the autotuner (DESIGN.md §11): the cached
+    measured winner for this (shape, nbits, backend) key when one exists,
+    else the deterministic heuristic. No measurement happens at this layer —
+    the ops.py wrappers own the measure closure; explicit block args always
+    win (tests sweep them)."""
+    if bm is not None and bn is not None and bk is not None:
+        return bm, bn, bk
+    tb = autotune.pick_blocks(m, k, n, nbits=nbits, variant=variant,
+                              interpret=interpret)
+    return bm or tb[0], bn or tb[1], bk or tb[2]
+
+
 def _check_blocks(m, k, n, bm, bk, bn, nbits, caller):
     if m % bm or n % bn or k % bk:
         raise ValueError(
@@ -147,9 +161,9 @@ def lut_matmul_f32(
     packed_codes: jax.Array, # (K*nbits//8, N) uint8 — packed centroid codes
     codebook: jax.Array,     # (KC,) f32 — padded with zeros beyond the active K
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 256,
+    bm: int = None,          # None -> autotuned cache / heuristic (DESIGN.md §11)
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
     out_dtype=jnp.float32,
     nbits: int = 4,
@@ -157,6 +171,8 @@ def lut_matmul_f32(
     """Y = x @ codebook[codes]  with codes streamed packed at `nbits`/code."""
     m, k = x.shape
     n = packed_codes.shape[1]
+    bm, bn, bk = _resolve_blocks(m, k, n, nbits, "lut_f32", interpret,
+                                 bm, bn, bk)
     _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_f32")
     if codebook.shape != (KC,):
         raise ValueError(f"codebook must be padded to ({KC},); got "
@@ -192,9 +208,9 @@ def lut_matmul_int8(
     codebook: jax.Array,     # (KC,) f32 centroids of the smoothed weights
     act_scale: jax.Array,    # scalar f32 — s_q
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 256,
+    bm: int = None,          # None -> autotuned cache / heuristic (DESIGN.md §11)
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
     out_dtype=jnp.float32,
     nbits: int = 4,
@@ -202,6 +218,8 @@ def lut_matmul_int8(
     """Y = s_q * (q @ codebook[codes]) — the paper's bucket accumulation."""
     m, k = q.shape
     n = packed_codes.shape[1]
+    bm, bn, bk = _resolve_blocks(m, k, n, nbits, "lut_int8", interpret,
+                                 bm, bn, bk)
     _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_int8")
     if codebook.shape != (KC,):
         raise ValueError(f"codebook must be padded to ({KC},); got "
@@ -283,9 +301,9 @@ def lut_matmul_fused(
     codebook: jax.Array,     # (KC,) f32 — padded with zeros beyond the active K
     *,
     quantize: bool = True,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 256,
+    bm: int = None,          # None -> autotuned cache / heuristic (DESIGN.md §11)
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
     out_dtype=jnp.float32,
     nbits: int = 4,
@@ -298,6 +316,8 @@ def lut_matmul_fused(
     """
     m, k = x.shape
     n = packed_codes.shape[1]
+    bm, bn, bk = _resolve_blocks(m, k, n, nbits, "lut_fused", interpret,
+                                 bm, bn, bk)
     _check_packed_shape(k, packed_codes.shape, nbits, "lut_matmul_fused")
     if inv_scale.shape != (k,):
         raise ValueError(f"inv_scale must be ({k},); got {inv_scale.shape}")
@@ -339,9 +359,9 @@ def lut_matmul_fused_gemv(
     codebook: jax.Array,     # (KC,) f32
     *,
     quantize: bool = True,
-    bm: int = 8,
-    bn: int = 128,
-    bk: int = 256,
+    bm: int = None,          # None -> M (one resident block); bn/bk autotuned
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
     out_dtype=jnp.float32,
     nbits: int = 4,
@@ -361,6 +381,10 @@ def lut_matmul_fused_gemv(
     """
     m, k = x.shape
     n = packed_codes.shape[1]
+    if bm is None:
+        bm = m
+    _, bn, bk = _resolve_blocks(m, k, n, nbits, "lut_fused_gemv", interpret,
+                                bm, bn, bk)
     if m != bm or bm > 128:
         raise ValueError(
             f"lut_matmul_fused_gemv: M ({m}) must equal bm ({bm}) <= 128")

@@ -18,25 +18,71 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.api import ClusteredTensor, clustered_matmul
 from repro.core.lut import pack_codes_jax, packed_rows, padded_d_in
+from repro.kernels import autotune
 from repro.kernels.lut_matmul import (KC, lut_matmul_f32, lut_matmul_fused,
                                       lut_matmul_fused_gemv, lut_matmul_int8)
 from repro.utils import round_up
 
+# the deterministic fallback the autotuner resolves to on a miss (DESIGN.md
+# §11); kept under the historical name — tests pin its GEMV-awareness
+_pick_blocks = autotune.heuristic_blocks
 
-def _pick_blocks(m: int, k: int, n: int):
-    """MXU-aligned blocks sized to keep the VMEM working set under ~8 MiB:
-    bm*bk*4 + bk*bn/2 + bm*bn*4 bytes.
+_LUT_KERNELS = {
+    "lut_f32": lut_matmul_f32,
+    "lut_int8": lut_matmul_int8,
+    "lut_fused": lut_matmul_fused,
+    "lut_fused_gemv": lut_matmul_fused_gemv,
+}
 
-    GEMV-aware: decode-shaped calls (m < 128) collapse M into one
-    sublane-aligned block (multiple of 8 for f32) consumed by the N-major
-    fused GEMV kernel instead of padding M up to a full MXU tile."""
-    bm = round_up(m, 8) if m < 128 else 128
-    bn = 256 if n % 256 == 0 else 128
-    bk = 512 if k % 512 == 0 else 256
-    return bm, bn, bk
+
+def _lut_measure_fn(variant: str, m: int, k: int, n: int, nbits: int):
+    """measure(bm, bn, bk) -> seconds for one LUT kernel variant, on
+    synthetic operands at the (already group-padded) problem size — built
+    only on a compiled backend; interpret mode never measures (DESIGN.md
+    §11). Operands are synthesized (the real ones are tracers when the
+    wrapper is being jit-traced): timing depends on shapes, not values."""
+    kern = _LUT_KERNELS[variant]
+    rng = np.random.default_rng(0)
+    cb = jnp.asarray(np.linspace(-0.05, 0.05, KC).astype(np.float32))
+    codes = rng.integers(0, 1 << nbits, size=(k, n)).astype(np.uint8)
+
+    def measure(bm: int, bn: int, bk: int) -> float:
+        mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+        packed = jax.block_until_ready(pack_codes_jax(
+            jnp.asarray(np.pad(codes, ((0, kp - k), (0, np_ - n)))), nbits))
+        if variant == "lut_int8":
+            x = jnp.asarray(rng.integers(-127, 128, size=(mp, kp))
+                            .astype(np.int8))
+            fn = lambda: kern(x, packed, cb, jnp.float32(0.02), bm=bm, bn=bn,
+                              bk=bk, interpret=False, nbits=nbits)
+        elif variant == "lut_f32":
+            x = jnp.asarray(rng.normal(size=(mp, kp)).astype(np.float32))
+            fn = lambda: kern(x, packed, cb, bm=bm, bn=bn, bk=bk,
+                              interpret=False, nbits=nbits)
+        else:
+            x = jnp.asarray(rng.normal(size=(mp, kp)).astype(np.float32))
+            inv = jnp.ones((kp,), jnp.float32)
+            fn = lambda: kern(x, inv, packed, cb, quantize=True, bm=bm, bn=bn,
+                              bk=bk, interpret=False, nbits=nbits)
+        return autotune.measure_candidate(fn)
+
+    return measure
+
+
+def _blocks_for(variant: str, m: int, k: int, n: int, nbits: int,
+                interpret: bool):
+    """Autotuned (bm, bn, bk) for one wrapper call: cached winner when the
+    tuner has measured this key, measured on a compiled backend at first
+    sight, exactly `_pick_blocks` under the interpreter (DESIGN.md §11)."""
+    measure = None
+    if not interpret and jax.default_backend() == "tpu":
+        measure = _lut_measure_fn(variant, m, k, n, nbits)
+    return autotune.pick_blocks(m, k, n, nbits=nbits, variant=variant,
+                                interpret=interpret, measure=measure)
 
 
 def pad_for_kernel(x: jax.Array, packed: jax.Array, bm: int, bk: int, bn: int,
@@ -60,7 +106,10 @@ def pad_codebook(codebook: jax.Array) -> jax.Array:
     k = codebook.shape[0]
     if k == KC:
         return codebook.astype(jnp.float32)
-    assert k < KC, f"kernel supports K<={KC}; got {k} (paper: distillation yields <16)"
+    if k > KC:   # ValueError, not assert: must survive `python -O`
+        raise ValueError(
+            f"pad_codebook: codebook has K={k} centroids but the kernel "
+            f"supports K<=KC={KC} (paper: distillation yields <16)")
     return jnp.pad(codebook.astype(jnp.float32), (0, KC - k))
 
 
@@ -81,7 +130,7 @@ def lut_gemm(
     if kc != k:  # group padding: packed codes carry zero-code tail rows
         x = jnp.pad(x, ((0, 0), (0, kc - k)))
         k = kc
-    bm, bn, bk = _pick_blocks(m, k, n)
+    bm, bn, bk = _blocks_for("lut_f32", m, k, n, nbits, interpret)
     xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn, nbits)
     y = lut_matmul_f32(xp, cp, cb, bm=bm, bn=bn, bk=bk, interpret=interpret,
                        nbits=nbits)
@@ -105,7 +154,7 @@ def lut_gemm_int8(
     if kc != k:
         q = jnp.pad(q, ((0, 0), (0, kc - k)))
         k = kc
-    bm, bn, bk = _pick_blocks(m, k, n)
+    bm, bn, bk = _blocks_for("lut_int8", m, k, n, nbits, interpret)
     qp, cp, (m0, n0) = pad_for_kernel(q, packed_codes, bm, bk, bn, nbits)
     y = lut_matmul_int8(qp, cp, cb, act_scale, bm=bm, bn=bn, bk=bk,
                         interpret=interpret, nbits=nbits)
@@ -138,7 +187,8 @@ def lut_gemm_fused(
         x = jnp.pad(x, ((0, 0), (0, kc - k)))
         inv_scale = jnp.pad(inv_scale, (0, kc - k))
         k = kc
-    bm, bn, bk = _pick_blocks(m, k, n)
+    variant = "lut_fused_gemv" if m < 128 else "lut_fused"
+    bm, bn, bk = _blocks_for(variant, m, k, n, nbits, interpret)
     xp, cp, (m0, n0) = pad_for_kernel(x, packed_codes, bm, bk, bn, nbits)
     invp = jnp.pad(inv_scale.astype(jnp.float32), (0, xp.shape[1] - k))
     if m < 128:

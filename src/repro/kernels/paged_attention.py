@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels import autotune
 from repro.utils import round_up
 
 NEG_INF = -1e30
@@ -80,6 +81,31 @@ def resolved_paged_attention_mode() -> str:
 # ---------------------------------------------------------------------------
 # Kernel
 # ---------------------------------------------------------------------------
+
+def _paged_measure_fn(s_slots: int, t: int, h: int, d: int, l: int, kv: int,
+                      dtype, softcap: float):
+    """measure(l_pad) -> seconds on a synthetic int8 KV view — built only on
+    a compiled backend (DESIGN.md §11); timing depends on shapes, not the
+    cache contents."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(s_slots, t, h, d)), dtype)
+    kq = jnp.asarray(rng.integers(-127, 128, size=(s_slots, l, kv, d)),
+                     jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, size=(s_slots, l, kv, d)),
+                     jnp.int8)
+    sc = jnp.ones((s_slots, l, kv), jnp.float32) * 0.01
+    sm = jnp.ones((kv, d), jnp.float32)
+    lengths = jnp.full((s_slots,), max(l - t, 0), jnp.int32)
+    n_new = jnp.full((s_slots,), t, jnp.int32)
+
+    def measure(l_pad: int) -> float:
+        return autotune.measure_candidate(
+            lambda: paged_dequant_attention(
+                q, kq, sc, vq, sc, sm, sm, lengths, n_new,
+                jnp.int32(0), softcap=softcap, interpret=False, l_pad=l_pad))
+
+    return measure
+
 
 def _paged_dequant_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, ksm_ref,
                           vsm_ref, len_ref, nnew_ref, win_ref, o_ref, *,
@@ -135,6 +161,7 @@ def paged_dequant_attention(
     *,
     softcap: float = 0.0,
     interpret: bool = False,
+    l_pad: Optional[int] = None,   # lane multiple for L; None -> autotuned
 ) -> jax.Array:
     """Fused dequantize + masked attention over a slot's gathered int8 KV.
 
@@ -145,6 +172,13 @@ def paged_dequant_attention(
     l, kv = kq.shape[1], kq.shape[2]
     g = h // kv
     gt = g * t
+    if l_pad is None:
+        measure = None
+        if not interpret and jax.default_backend() == "tpu":
+            measure = _paged_measure_fn(s_slots, t, h, d, l, kv, q.dtype,
+                                        softcap)
+        l_pad = autotune.pick_paged_pad(gt, l, d, interpret=interpret,
+                                        measure=measure)
 
     # (S, T, H, D) -> (S, KV, g, T, D) -> (S, KV, g*T, D): row r = gi*T + t
     qt = q.reshape(s_slots, t, kv, g, d).transpose(0, 2, 3, 1, 4)
@@ -154,10 +188,11 @@ def paged_dequant_attention(
     kst = k_scale.transpose(0, 2, 1)                      # (S, KV, L)
     vst = v_scale.transpose(0, 2, 1)
 
-    # sublane-align the q rows and lane-align the KV length; padded keys are
-    # masked by `cols < length + n_new` (lengths never exceed the real L)
+    # sublane-align the q rows and lane-align the KV length (the multiple is
+    # the autotuned `l_pad` — DESIGN.md §11); padded keys are masked by
+    # `cols < length + n_new` (lengths never exceed the real L)
     gt_p = round_up(gt, 8)
-    l_p = round_up(l, 128)
+    l_p = round_up(l, l_pad)
     if gt_p != gt:
         qt = jnp.pad(qt, ((0, 0), (0, 0), (0, gt_p - gt), (0, 0)))
     if l_p != l:

@@ -277,7 +277,9 @@ class TestOpsWrappers:
         np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-5, atol=1e-4)
 
     def test_pad_codebook_rejects_overflow(self):
-        with pytest.raises(AssertionError):
+        """ValueError (python -O-proof, like the packing checks) naming both
+        the offending K and the KC capacity."""
+        with pytest.raises(ValueError, match=r"K=17 .*K<=KC=16"):
             pad_codebook(jnp.zeros(17))
 
 
