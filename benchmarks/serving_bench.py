@@ -18,6 +18,13 @@ Measures what the static decode benchmark cannot — multi-tenant behavior:
     against it, and the admission arithmetic (blocks per request, max
     admissible slots at the float pool's byte budget; the run asserts the
     >= 3x capacity bar);
+  * the prefix-cache lane (DESIGN.md §12): the same shared-prefix Poisson
+    traffic with the content-hashed cache off and on — TTFT and p99 side by
+    side, block-reuse rate, COW copies — with per-request bit-equality of
+    cache-on vs cache-off asserted on every run (and a nonzero reuse rate
+    required, so the workload can't silently stop exercising the cache);
+  * per-tenant rows under the priority/weighted-fair scheduler ('interactive'
+    weight 2 / priority 1 vs 'batch' weight 1 / priority 0);
   * the engine contracts, asserted on every run: a bounded set of compiled
     step shapes (at most two per engine), and — with >= 4 staggered
     requests — every request's tokens EXACTLY equal to a single-request run
@@ -83,6 +90,145 @@ def _percentiles(xs):
             "p99": round(float(np.percentile(xs, 99)), 4)}
 
 
+def _row_stats(engine, reqs, wall):
+    gen_total = sum(len(r.out_tokens) for r in reqs)
+    lat = [r.finish_t - r.submit_t for r in reqs]
+    ttft = [r.first_token_t - r.submit_t for r in reqs]
+    return {
+        "kv_dtype": engine.kv_dtype,
+        "requests": len(reqs), "generated_tokens": gen_total,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(gen_total / max(wall, 1e-9), 2),
+        "latency_s": _percentiles(lat), "ttft_s": _percentiles(ttft),
+        "scheduler_steps": engine.steps, "traces": dict(engine.traces),
+        "preemptions": sum(r.preemptions for r in reqs),
+    }
+
+
+def _drive(engine, arrivals):
+    """Like `_run_traffic`, but over PRE-BUILT prompts (the shared-prefix
+    workload needs token-level control) with optional per-request submit
+    kwargs: arrivals = [(step, prompt, gen, kwargs)]."""
+    pending, reqs = list(arrivals), []
+    while pending or engine.busy:
+        while pending and pending[0][0] <= engine.steps:
+            _, prompt, g, kw = pending.pop(0)
+            reqs.append(engine.submit(prompt, g, **kw))
+        if engine.busy:
+            engine.step()
+        else:
+            engine.steps += 1          # idle tick: let the next arrival land
+    engine.assert_bounded_traces()
+    return reqs
+
+
+def _shared_prefix_arrivals(rng, vocab: int, n_requests: int, prefix_len: int,
+                            max_tail: int, gen: int,
+                            mean_gap_steps: float = 2.0):
+    """Poisson arrivals where every prompt opens with the SAME prefix (the
+    system-prompt / few-shot-template pattern prefix caching exists for);
+    tail lengths vary, and some requests are the bare prefix (block-aligned
+    full-prefix hits exercise copy-on-write)."""
+    prefix = rng.integers(0, vocab, prefix_len)
+    t, out = 0.0, []
+    for _ in range(n_requests):
+        t += rng.exponential(mean_gap_steps)
+        tail = rng.integers(0, vocab, int(rng.integers(0, max_tail + 1)))
+        prompt = np.concatenate([prefix, tail]).astype(np.int32)
+        out.append((int(t), prompt, gen, {}))
+    return out
+
+
+def _bench_prefix_cache(model, params, ecfg, smoke: bool) -> dict:
+    """The DESIGN.md §12 lane: the same shared-prefix Poisson traffic with
+    the prefix cache off and on. Bit-equality per request is the hard
+    contract — asserted on EVERY run, not just smoke — and the smoke gate
+    additionally requires a nonzero block-reuse rate (the workload must
+    actually exercise sharing)."""
+    n_req, prefix_len, max_tail, gen = ((6, 8, 6, 5) if smoke
+                                        else (24, 64, 48, 24))
+    arrivals = _shared_prefix_arrivals(np.random.default_rng(3),
+                                       model.cfg.vocab, n_req, prefix_len,
+                                       max_tail, gen)
+    rows, reqs_by = {}, {}
+    for name, pc in (("cache_off", False), ("cache_on", True)):
+        eng = ServingEngine(model, params,
+                            dataclasses.replace(ecfg, prefix_cache=pc))
+        t0 = eng.clock()
+        reqs = _drive(eng, [(a, p.copy(), g, dict(kw))
+                            for a, p, g, kw in arrivals])
+        rows[name], reqs_by[name] = _row_stats(eng, reqs,
+                                               eng.clock() - t0), reqs
+        if pc:
+            rows[name].update(eng.prefix_cache_report())
+
+    for off, on in zip(reqs_by["cache_off"], reqs_by["cache_on"]):
+        assert on.out_tokens == off.out_tokens, (
+            f"prefix cache broke bit-equality: request {on.rid} diverged "
+            f"from its cache-off run")
+    assert rows["cache_on"]["block_reuse_rate"] > 0, (
+        "shared-prefix workload produced no block reuse — the cache never "
+        f"engaged: {rows['cache_on']}")
+
+    section = {
+        "workload": {"requests": n_req, "shared_prefix_len": prefix_len,
+                     "max_tail": max_tail, "gen_tokens": gen,
+                     "arrivals": "poisson(mean=2 steps)"},
+        "cache_off": rows["cache_off"], "cache_on": rows["cache_on"],
+        "parity_on_vs_off": True,      # asserted above, per request
+        "ttft_p50_on_vs_off": round(
+            rows["cache_on"]["ttft_s"]["p50"]
+            / max(rows["cache_off"]["ttft_s"]["p50"], 1e-9), 3),
+        "ttft_p99_on_vs_off": round(
+            rows["cache_on"]["ttft_s"]["p99"]
+            / max(rows["cache_off"]["ttft_s"]["p99"], 1e-9), 3),
+    }
+    emit("serving/prefix_cache", 0.0,
+         f"reuse={rows['cache_on']['block_reuse_rate']};"
+         f"cached_tokens={rows['cache_on']['cached_tokens']};"
+         f"cow={rows['cache_on']['cow_copies']};parity=True")
+    return section
+
+
+def _bench_tenants(model, params, ecfg, smoke: bool) -> dict:
+    """Priority / weighted-fair admission (DESIGN.md §12): two tenants —
+    'interactive' (weight 2, priority 1) vs 'batch' (weight 1, priority 0)
+    — under the same Poisson process, reported as per-tenant rows."""
+    weights = {"interactive": 2.0, "batch": 1.0}
+    eng = ServingEngine(model, params, dataclasses.replace(
+        ecfg, scheduler="priority", tenant_weights=weights))
+    n_req, gen = (6, 4) if smoke else (24, 16)
+    rng = np.random.default_rng(11)
+    arrivals, t = [], 0.0
+    for i in range(n_req):
+        t += rng.exponential(2.0)
+        tenant = "interactive" if i % 2 == 0 else "batch"
+        prompt = rng.integers(0, model.cfg.vocab,
+                              int(rng.integers(4, 13))).astype(np.int32)
+        arrivals.append((int(t), prompt, gen,
+                         {"tenant": tenant,
+                          "priority": 1 if tenant == "interactive" else 0}))
+    t0 = eng.clock()
+    reqs = _drive(eng, arrivals)
+    wall = eng.clock() - t0
+    rows = {}
+    for tenant in weights:
+        mine = [r for r in reqs if r.tenant == tenant]
+        rows[tenant] = {
+            "weight": weights[tenant],
+            "priority": 1 if tenant == "interactive" else 0,
+            "requests": len(mine),
+            "generated_tokens": sum(len(r.out_tokens) for r in mine),
+            "latency_s": _percentiles([r.finish_t - r.submit_t
+                                       for r in mine]),
+            "ttft_s": _percentiles([r.first_token_t - r.submit_t
+                                    for r in mine]),
+        }
+    emit("serving/tenants", wall * 1e6,
+         ";".join(f"{t}_p50={rows[t]['latency_s']['p50']}" for t in rows))
+    return {"scheduler": "priority", "weights": weights, "rows": rows}
+
+
 def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
                workload, seed: int, params, verify: bool):
     engine, params = build_engine(arch, use_reduced=smoke, lcd=lcd,
@@ -91,9 +237,6 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
     t0 = engine.clock()
     reqs = _run_traffic(engine, workload, cfg.vocab, seed)
     wall = engine.clock() - t0
-    gen_total = sum(len(r.out_tokens) for r in reqs)
-    lat = [r.finish_t - r.submit_t for r in reqs]
-    ttft = [r.first_token_t - r.submit_t for r in reqs]
 
     if verify:
         # continuous batching must not change any request's output: re-decode
@@ -112,20 +255,12 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
                 f"{name}: request {r.rid} diverged under continuous batching")
         solo_eng.assert_bounded_traces()
 
-    row = {
-        "kv_dtype": engine.kv_dtype,
-        "requests": len(reqs), "generated_tokens": gen_total,
-        "wall_s": round(wall, 4),
-        "tokens_per_s": round(gen_total / max(wall, 1e-9), 2),
-        "latency_s": _percentiles(lat), "ttft_s": _percentiles(ttft),
-        "scheduler_steps": engine.steps, "traces": dict(engine.traces),
-        "preemptions": sum(r.preemptions for r in reqs),
-        "verified_vs_single_request": bool(verify),
-    }
+    row = _row_stats(engine, reqs, wall)
+    row["verified_vs_single_request"] = bool(verify)
     emit(f"serving/{name}_tokens_per_s", wall * 1e6,
          f"tok_s={row['tokens_per_s']};p50={row['latency_s']['p50']};"
          f"p99={row['latency_s']['p99']};traces={len(engine.traces)}")
-    return row, params, reqs, engine.model.cfg
+    return row, params, reqs, engine
 
 
 def run(smoke: bool = True, arch: str = "llama2-7b",
@@ -144,9 +279,10 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
                                  gen, mean_gap_steps=2.0)
     assert len(workload) >= 4, "parity contract needs >= 4 staggered requests"
 
-    dense, params, dense_reqs, cfg = _bench_one(
+    dense, params, dense_reqs, dense_eng = _bench_one(
         "dense", arch=arch, smoke=smoke, lcd=False, ecfg=ecfg,
         workload=workload, seed=7, params=None, verify=smoke)
+    cfg = dense_eng.model.cfg
     # interpret lane off-TPU: force the fused Pallas kernels through the
     # interpreter so the LCD row measures the real serving dispatch; compiled
     # lane: auto dispatch, so every number is compiled wall-clock
@@ -181,6 +317,11 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
          f"slots_ratio={capacity['slots_ratio_int8_vs_float']};"
          f"agreement={int8_row['token_agreement_vs_float']}")
 
+    # shared-prefix + multi-tenant lanes (DESIGN.md §12): bit-equality of
+    # cache-on vs cache-off is asserted inside, on every run
+    prefix_section = _bench_prefix_cache(dense_eng.model, params, ecfg, smoke)
+    tenants_section = _bench_tenants(dense_eng.model, params, ecfg, smoke)
+
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
         "bench_backend": backend,
@@ -190,6 +331,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
         "workload": {"requests": n_req, "max_prompt": max_prompt,
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
         "dense": dense, "lcd": lcd, "int8_kv": int8_row,
+        "prefix_cache": prefix_section, "tenants": tenants_section,
         "kv_cache": capacity,
         "lcd_vs_dense_tokens_per_s": round(
             lcd["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3),

@@ -74,6 +74,7 @@ def _suite_headlines(name: str, result: dict) -> dict:
             for row in (result.get("bits") or {}).values())
         return out
     if name == "serving":
+        prefix = result.get("prefix_cache") or {}
         return {
             "tokens_per_s": {r: (result.get(r) or {}).get("tokens_per_s")
                              for r in ("dense", "lcd", "int8_kv")},
@@ -81,9 +82,17 @@ def _suite_headlines(name: str, result: dict) -> dict:
             .get("latency_s", {}).get("p50"),
             "latency_p99_s": (result.get("lcd") or {})
             .get("latency_s", {}).get("p99"),
+            "ttft_p50_s": (result.get("lcd") or {})
+            .get("ttft_s", {}).get("p50"),
+            "ttft_p99_s": (result.get("lcd") or {})
+            .get("ttft_s", {}).get("p99"),
+            # DESIGN.md §12: the shared-prefix lane's block-reuse headline
+            "prefix_cache_hit_rate": (prefix.get("cache_on") or {})
+            .get("block_reuse_rate"),
             "parity": all((result.get(r) or {})
                           .get("verified_vs_single_request", True)
-                          for r in ("dense", "lcd", "int8_kv")),
+                          for r in ("dense", "lcd", "int8_kv"))
+            and bool(prefix.get("parity_on_vs_off", True)),
         }
     if name == "spec":
         return {

@@ -19,6 +19,8 @@ TIER1_MODULES = {
     "test_paged_kv",
     "test_packing",
     "test_autotune",
+    "test_block_allocator",
+    "test_perf_gate",
 }
 
 

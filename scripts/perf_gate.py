@@ -65,7 +65,8 @@ def _flat_metrics(rec: dict) -> dict:
         for role, v in (suite.get("tokens_per_s") or {}).items():
             if isinstance(v, (int, float)):
                 out[f"{name}.tokens_per_s.{role}"] = (float(v), True)
-        for lat in ("latency_p50_s", "latency_p99_s"):
+        for lat in ("latency_p50_s", "latency_p99_s",
+                    "ttft_p50_s", "ttft_p99_s"):
             v = suite.get(lat)
             if isinstance(v, (int, float)):
                 out[f"{name}.{lat}"] = (float(v), False)
@@ -94,7 +95,7 @@ def check_regressions(latest: dict, prev: dict, threshold: float) -> list:
     return regressions
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default=trajectory.OUT_PATH)
     ap.add_argument("--threshold", type=float, default=0.10,
@@ -102,7 +103,7 @@ def main() -> int:
     ap.add_argument("--strict", action="store_true",
                     help="make timing regressions blocking even on CPU "
                          "hosts (default: blocking on TPU only)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     records = trajectory.load(args.path)
     if not records:

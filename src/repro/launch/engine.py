@@ -46,6 +46,19 @@ Self-speculative decoding (`EngineConfig.speculative_k > 0`, DESIGN.md §8)
     each target dispatch advances every slot by 1..k+1 tokens. Rejected
     tokens roll back by bookkeeping alone: cache entries past `lengths` are
     unobservable, so not advancing `lengths` IS the rollback.
+
+Prefix caching + production scheduler (DESIGN.md §12)
+    `EngineConfig.prefix_cache=True` turns the BlockAllocator into a
+    refcounted, content-hash-indexed cache: completed full blocks are
+    published under position-0-anchored chain hashes (salted with kv dtype
+    and layer config), `submit`-ed prompts share their longest cached
+    block-aligned prefix read-only instead of re-prefilling it, and a write
+    into a shared tail block copies-on-write first — output stays bit-equal
+    to a cache-off run within a kv dtype. `chunked_prefill` admits long
+    prompts on first-chunk blocks (prefill interleaves with decode either
+    way); `scheduler="priority"` replaces FCFS with per-tenant token
+    budgets + weighted-fair pick; `submit(on_token=...)` streams tokens and
+    `cancel()` frees a request's slot/blocks through the refcounts.
 """
 from __future__ import annotations
 
@@ -174,41 +187,158 @@ def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
 
 
 # ---------------------------------------------------------------------------
-# Paged-block allocator
+# Paged-block allocator (refcounted, content-hash-indexed — DESIGN.md §12)
 # ---------------------------------------------------------------------------
 
 class BlockAllocator:
-    """Free-list allocator over the physical KV block pool.
+    """Refcounted free-list allocator over the physical KV block pool, with a
+    content-hash index for prefix caching.
 
-    Invariants (DESIGN.md §5): every block id is either on the free list or
-    owned by exactly one slot; `alloc` is all-or-nothing (no partial grants);
-    `free` returns blocks in O(1) with no compaction — block tables absorb
-    fragmentation, physical order never matters."""
+    Invariants (DESIGN.md §5, §12; pinned by tests/test_block_allocator.py):
+
+      * every block id is either on the free list (refcount 0) or referenced
+        (refcount >= 1) — `num_free + referenced == num_blocks` always;
+      * a reference is a slot's block-table entry OR the hash index's own
+        entry, so `refcount(b) == holders(b) + (1 if b is indexed)` and a
+        hash-index entry can NEVER point at a freed block (the index's
+        reference keeps it allocated);
+      * `alloc` is all-or-nothing (no partial grants) and may reclaim
+        cache-only blocks (refcount 1, held solely by the index) in LRU
+        order to satisfy a grant;
+      * `free` decrements; a block returns to the free list exactly when its
+        refcount hits zero, exactly once. Freeing an unallocated block or an
+        out-of-range id raises `ValueError` naming the block id (the PR 5/6
+        assert→ValueError pattern: survives `python -O`, messages pinned in
+        tests).
+    """
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free: collections.deque = collections.deque(range(num_blocks))
+        self._refcount: List[int] = [0] * num_blocks
+        # content hash -> block id; the index HOLDS one reference per entry.
+        # An OrderedDict doubles as the LRU order for cache-only reclaim
+        # (move_to_end on every hit/registration).
+        self._hash_index: "collections.OrderedDict" = collections.OrderedDict()
+        self._block_hash: List[Optional[int]] = [None] * num_blocks
 
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def num_cached(self) -> int:
+        return len(self._hash_index)
+
+    def refcount(self, b: int) -> int:
+        return self._refcount[b]
+
+    def _check_id(self, op: str, b) -> None:
+        if not isinstance(b, (int, np.integer)) or not 0 <= b < self.num_blocks:
+            raise ValueError(
+                f"BlockAllocator.{op}: block id {b!r} out of range "
+                f"[0, {self.num_blocks})")
+
+    def _reclaimable(self) -> int:
+        """Cache-only blocks (refcount 1, sole holder is the index) that
+        `alloc` may evict from the prefix cache to satisfy a grant."""
+        return sum(1 for h, b in self._hash_index.items()
+                   if self._refcount[b] == 1)
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+        if n > len(self._free) + self._reclaimable():
             return None
-        return [self._free.popleft() for _ in range(n)]
+        while len(self._free) < n:
+            self._evict_cached()
+        out = []
+        for _ in range(n):
+            b = self._free.popleft()
+            self._refcount[b] = 1
+            out.append(b)
+        return out
+
+    def share(self, b: int) -> int:
+        """Add a reference to an allocated block (read-only sharing across
+        slots — prefix caching's grant path). Returns the new refcount."""
+        self._check_id("share", b)
+        if self._refcount[b] == 0:
+            raise ValueError(
+                f"BlockAllocator.share: block {b} is free — only an "
+                f"allocated block can be shared")
+        self._refcount[b] += 1
+        return self._refcount[b]
 
     def free(self, blocks: List[int]) -> None:
+        """Drop one reference per block id; a block whose refcount hits zero
+        returns to the free list. Raises ValueError (naming the id) on an
+        out-of-range id or a refcount underflow (double free / free of a
+        never-allocated block)."""
         for b in blocks:
-            assert 0 <= b < self.num_blocks and b not in self._free, b
-            self._free.append(b)
+            self._check_id("free", b)
+            if self._refcount[b] == 0:
+                raise ValueError(
+                    f"BlockAllocator.free: block {b} is not allocated "
+                    f"(double free or refcount underflow)")
+            self._refcount[b] -= 1
+            if self._refcount[b] == 0:
+                # cannot still be hash-indexed: the index holds a reference,
+                # so an indexed block bottoms out at refcount 1
+                self._free.append(b)
+
+    # -- prefix-cache index --------------------------------------------------
+
+    def register(self, b: int, h: int) -> bool:
+        """Publish allocated block `b` under content hash `h`. The index
+        takes its own reference, so the entry keeps the block alive after
+        every slot lets go. First writer wins: an already-indexed hash is
+        left pointing at its existing block (returns False)."""
+        self._check_id("register", b)
+        if self._refcount[b] == 0:
+            raise ValueError(
+                f"BlockAllocator.register: block {b} is free — only an "
+                f"allocated block can enter the hash index")
+        if h in self._hash_index:
+            self._hash_index.move_to_end(h)
+            return False
+        if self._block_hash[b] is not None:
+            # block already published under some other hash — a second entry
+            # would take a second index reference and orphan the first one
+            # (leaving the block permanently unreclaimable); first
+            # publication wins
+            return False
+        self._hash_index[h] = b
+        self._block_hash[b] = h
+        self._refcount[b] += 1
+        return True
+
+    def lookup(self, h: int) -> Optional[int]:
+        """Block id cached under hash `h`, or None. A hit refreshes the
+        entry's LRU position (it just proved useful)."""
+        b = self._hash_index.get(h)
+        if b is not None:
+            self._hash_index.move_to_end(h)
+        return b
+
+    def _evict_cached(self) -> bool:
+        """Drop the least-recently-used cache-only index entry, returning its
+        block to the free list. Blocks a slot still holds (refcount > 1) are
+        never touched."""
+        for h, b in self._hash_index.items():
+            if self._refcount[b] == 1:
+                del self._hash_index[h]
+                self._block_hash[b] = None
+                self._refcount[b] = 0
+                self._free.append(b)
+                return True
+        return False
 
 
 # ---------------------------------------------------------------------------
 # Requests and engine configuration
 # ---------------------------------------------------------------------------
 
-QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+QUEUED, RUNNING, FINISHED, CANCELLED = ("queued", "running", "finished",
+                                        "cancelled")
 
 
 @dataclasses.dataclass
@@ -225,6 +355,19 @@ class Request:
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # multi-tenant scheduling (DESIGN.md §12): admission weight/budget key
+    # and the intra-tenant priority (higher admits first)
+    tenant: str = "default"
+    priority: int = 0
+    # prefix caching (DESIGN.md §12): prompt tokens served from shared cached
+    # blocks instead of re-prefilled, and the chain hashes of this request's
+    # full blocks registered so far (position-0-anchored, block-granular)
+    cached_tokens: int = 0
+    hash_chain: List[int] = dataclasses.field(default_factory=list)
+    # streaming: called as on_token(request, token) for every emitted token
+    on_token: Optional[Any] = None
+    # tokens counted against this request's tenant budget while admitted
+    inflight_tokens: int = 0
     # speculative decoding: draft tokens accepted AND emitted per verify
     # round (0..k each; round i emits accept_lens[i] + 1 tokens — a round
     # whose acceptance overshoots the token budget records the capped count)
@@ -281,6 +424,28 @@ class EngineConfig:
     # under that global element-weighted mean (compress_model(bits_budget=)).
     weight_bits: int = 4
     bits_budget: Optional[float] = None
+    # prefix caching (DESIGN.md §12): content-hashed block reuse with
+    # copy-on-write block tables. Off by default — with it on, a submitted
+    # prompt's longest block-aligned prefix already present in the hash
+    # index is shared read-only instead of re-prefilled, and output stays
+    # bit-equal to a cache-off run within a kv dtype.
+    prefix_cache: bool = False
+    # chunked-prefill admission (DESIGN.md §12): admit a long prompt once
+    # blocks for its FIRST prefill chunk are grantable (later chunks grow the
+    # block table lazily, interleaved with decode) instead of demanding the
+    # whole feed's blocks up front. Prefill is always chunk-interleaved with
+    # decode; this knob only lowers the admission bar.
+    chunked_prefill: bool = False
+    # admission policy (DESIGN.md §12): "fcfs" is strict arrival order;
+    # "priority" picks by (priority desc, weighted-fair tenant share asc,
+    # arrival) among tenants under their token budget.
+    scheduler: str = "fcfs"
+    # tenant -> fair-share weight (unlisted tenants weigh 1.0); only
+    # consulted by the "priority" scheduler
+    tenant_weights: Optional[Dict[str, float]] = None
+    # max concurrently admitted tokens (feed + generation budget) per
+    # tenant; None = unbounded. Only enforced by the "priority" scheduler.
+    tenant_token_budget: Optional[int] = None
 
     def __post_init__(self):
         """Eager validation: a bad knob fails at config construction with the
@@ -314,6 +479,20 @@ class EngineConfig:
                 f"EngineConfig.num_blocks ({self.num_blocks}) must be >= "
                 f"max_blocks_per_slot ({self.max_blocks_per_slot}) or no "
                 f"request can ever be fully admitted")
+        if self.scheduler not in ("fcfs", "priority"):
+            raise ValueError(
+                f"EngineConfig.scheduler must be 'fcfs' or 'priority'; got "
+                f"{self.scheduler!r}")
+        if self.tenant_token_budget is not None and self.tenant_token_budget <= 0:
+            raise ValueError(
+                f"EngineConfig.tenant_token_budget must be positive (max "
+                f"concurrently admitted tokens per tenant); got "
+                f"{self.tenant_token_budget!r}")
+        if self.tenant_weights is not None and any(
+                w <= 0 for w in self.tenant_weights.values()):
+            raise ValueError(
+                f"EngineConfig.tenant_weights must all be positive; got "
+                f"{self.tenant_weights!r}")
 
     @property
     def max_seq(self) -> int:
@@ -382,6 +561,25 @@ class ServingEngine:
         self.lengths = np.zeros(ecfg.num_slots, np.int32)
         self.queue: collections.deque = collections.deque()
         self.finished: List[Request] = []
+        # prefix cache (DESIGN.md §12): chain hashes are salted with the kv
+        # dtype and the layer config, so two engines only ever share content
+        # computed by an identical paged stack — the (token-chunk hash,
+        # kv_dtype, layer config) key of the hash index
+        self._prefix_salt = hash((self.kv_dtype, repr(model.cfg)))
+        self._cow_fn = None
+        # tenant accounting for the "priority" scheduler: tokens currently
+        # admitted (feed + generation budget) and total tokens served, per
+        # tenant — the weighted-fair share is served/weight
+        self._tenant_inflight: Dict[str, int] = {}
+        self._tenant_served: Dict[str, int] = {}
+        # prefix-cache telemetry (BENCH_serving.json prefix_cache section)
+        self.cache_stats: Dict[str, int] = {
+            "cached_tokens": 0,        # prompt tokens served from the cache
+            "shared_block_grants": 0,  # block grants satisfied by sharing
+            "fresh_block_grants": 0,   # block grants satisfied by alloc
+            "cow_copies": 0,           # copy-on-write block copies
+            "registered_blocks": 0,    # blocks published to the hash index
+        }
         with use_rules(self.mesh, fsdp=False):
             self.cache = model.init_paged_cache(
                 ecfg.num_blocks, ecfg.block_size, kv_dtype=self.kv_dtype)
@@ -417,7 +615,12 @@ class ServingEngine:
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int) -> Request:
+    def submit(self, prompt, max_new_tokens: int, *, tenant: str = "default",
+               priority: int = 0, on_token=None) -> Request:
+        """Queue a request. `tenant`/`priority` feed the "priority" scheduler
+        (DESIGN.md §12); `on_token(request, token)` streams every emitted
+        token as it is decoded (speculative rounds stream each accepted
+        token individually, in order)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         # speculative rounds write up to k tokens past the accepted length
         # before rolling back, so a request needs k tokens of cache headroom
@@ -427,10 +630,33 @@ class ServingEngine:
             f"{self.spec_k}); engine max_seq is {self.ecfg.max_seq} "
             f"(max_blocks_per_slot * block_size)")
         r = Request(self._next_rid, prompt, max_new_tokens,
-                    submit_t=self.clock())
+                    submit_t=self.clock(), tenant=tenant, priority=priority,
+                    on_token=on_token)
         self._next_rid += 1
         self.queue.append(r)
         return r
+
+    def cancel(self, r: Request) -> bool:
+        """Abort a queued or running request. A running request's slot and
+        blocks are released immediately — frees go through the refcounted
+        allocator, so blocks other slots (or the prefix-cache index) still
+        reference survive untouched (DESIGN.md §12). Returns False if the
+        request already finished or was already cancelled."""
+        if r.state == QUEUED:
+            self.queue.remove(r)
+            r.state = CANCELLED
+            return True
+        if r.state == RUNNING:
+            s = r.slot
+            self.alloc.free(r.blocks)
+            self._tenant_release(r)
+            r.blocks, r.slot, r.feed = [], None, None
+            r.state, r.finish_t = CANCELLED, self.clock()
+            self.slots[s] = None
+            self.lengths[s] = 0
+            self.block_tables[s] = 0
+            return True
+        return False
 
     @property
     def busy(self) -> bool:
@@ -458,6 +684,10 @@ class ServingEngine:
                        ("verify", self.spec_k + 1)}
         else:
             allowed = {1, self.ecfg.prefill_chunk}
+        if self.ecfg.prefix_cache:
+            # the copy-on-write block copy is one extra traced computation
+            # (block ids are data), shared by every COW this engine performs
+            allowed = allowed | {"cow"}
         assert set(self.traces) <= allowed, (
             f"unexpected step shapes {set(self.traces)} (allowed {allowed})")
         assert all(c == 1 for c in self.traces.values()), (
@@ -482,6 +712,18 @@ class ServingEngine:
                                   if entries else 0.0),
             "accepted_len_hist": {str(n): c for n, c in sorted(hist.items())},
         }
+
+    def prefix_cache_report(self) -> Dict[str, Any]:
+        """Prefix-cache telemetry (DESIGN.md §12): the cache_stats counters
+        plus the derived block-reuse rate (shared grants over all grants —
+        the BENCH_serving.json `prefix_cache.cache_on.block_reuse_rate`
+        headline) and the index's current size."""
+        out: Dict[str, Any] = dict(self.cache_stats)
+        grants = out["shared_block_grants"] + out["fresh_block_grants"]
+        out["block_reuse_rate"] = (
+            round(out["shared_block_grants"] / grants, 4) if grants else 0.0)
+        out["cached_blocks_now"] = self.alloc.num_cached
+        return out
 
     # -- scheduler ----------------------------------------------------------
 
@@ -514,7 +756,21 @@ class ServingEngine:
                 continue               # evicted by an earlier reservation
             self._ensure_blocks(r, int(self.lengths[s]) + want(r))
 
-        # pass 2 — pack the surviving slots into one traced batch
+        # pass 1.5 — copy-on-write (DESIGN.md §12): a slot about to write
+        # into a block prefix caching granted read-only (refcount > 1) gets
+        # a private copy first. Like pass 1 this can evict, so it completes
+        # before any tokens are packed.
+        if ecfg.prefix_cache:
+            for s, r in enumerate(self.slots):
+                if r is None:
+                    continue
+                w = want(r)
+                if len(r.blocks) * ecfg.block_size >= int(self.lengths[s]) + w:
+                    self._cow_for_write(r, s, w)
+
+        # pass 2 — pack the surviving slots into one traced batch (a slot
+        # whose tail block is still shared — COW could not get a block —
+        # waits this step, like starvation)
         tokens = np.zeros((ecfg.num_slots, t), np.int32)
         n_new = np.zeros(ecfg.num_slots, np.int32)
         active = [(s, r) for s, r in enumerate(self.slots) if r is not None]
@@ -522,6 +778,8 @@ class ServingEngine:
             w = want(r)
             if len(r.blocks) * ecfg.block_size < int(self.lengths[s]) + w:
                 continue               # starved of blocks: waits this step
+            if self._write_shared(r, s, w):
+                continue               # COW starved: waits this step
             if r.prefilling:
                 tokens[s, :w] = r.feed[r.fed:r.fed + w]
             else:
@@ -551,10 +809,12 @@ class ServingEngine:
                 continue               # evicted by _ensure_blocks, or starved
             r.fed += int(n_new[s])
             self.lengths[s] += int(n_new[s])
+            if self.ecfg.prefix_cache:
+                self._register_blocks(s, r)
             if not r.prefilling:       # last valid token's logits are usable
                 if r.first_token_t is None:
                     r.first_token_t = self.clock()
-                r.out_tokens.append(int(next_tok[s]))
+                self._emit(r, int(next_tok[s]))
                 if r.done:
                     self._finish(r)
                     done.append(r)
@@ -588,6 +848,17 @@ class ServingEngine:
                 continue               # evicted by an earlier reservation
             self._ensure_blocks(r, int(self.lengths[s]) + k + 1)
 
+        # copy-on-write pass (DESIGN.md §12): a round writes the span
+        # [lengths, lengths + k + 1), so a shared tail block must be copied
+        # first; like reservations this can evict, so it runs to completion
+        # before participation is decided
+        if ecfg.prefix_cache:
+            for s, r in enumerate(self.slots):
+                if r is None:
+                    continue
+                if len(r.blocks) * ecfg.block_size >= int(self.lengths[s]) + k + 1:
+                    self._cow_for_write(r, s, k + 1)
+
         # participation is decided after ALL reservations: a reservation may
         # have evicted a slot that reserved earlier
         live: List[tuple] = []
@@ -596,6 +867,8 @@ class ServingEngine:
                 continue
             if len(r.blocks) * ecfg.block_size >= int(self.lengths[s]) + k + 1:
                 assert r.out_tokens, "decoding slot must have a pending token"
+                if self._write_shared(r, s, k + 1):
+                    continue           # COW starved: waits this round
                 live.append((s, r))
         if not live:
             self.steps += 1            # starved round: everyone waits
@@ -638,9 +911,12 @@ class ServingEngine:
             # record the REALIZED advance (budget cap included), so the mean
             # accepted length is the true target-dispatch multiplier
             r.accept_lens.append(len(emit) - 1)
-            r.out_tokens.extend(emit)
+            for tok in emit:
+                self._emit(r, tok)
             # the rollback: only the emitted prefix becomes readable cache
             self.lengths[s] += len(emit)
+            if self.ecfg.prefix_cache:
+                self._register_blocks(s, r)
             if r.done:
                 self._finish(r)
                 done.append(r)
@@ -743,26 +1019,208 @@ class ServingEngine:
         return self._step_fns[key]
 
     def _admit(self) -> None:
-        """FCFS admission: a queued request enters the first free slot once
-        the allocator can grant every block its full feed needs (decode-time
-        blocks are still allocated lazily — a finishing request may free
-        capacity mid-flight that a later _ensure_blocks picks up)."""
-        for s in range(self.ecfg.num_slots):
+        """Admission (DESIGN.md §12): pick the next queued request under the
+        configured policy — "fcfs" is strict arrival order; "priority" picks
+        by (priority desc, weighted-fair tenant share asc, arrival) among
+        tenants under their token budget — then grant blocks all-or-nothing
+        for its feed (with `chunked_prefill`, only its first chunk: later
+        chunks grow the table lazily through _ensure_blocks). With
+        `prefix_cache` on, the feed's longest block-aligned prefix already
+        in the hash index is shared read-only instead of re-prefilled; at
+        least the feed's last token is always re-fed, because its logits
+        seed the first generated token."""
+        ecfg = self.ecfg
+        for s in range(ecfg.num_slots):
             if self.slots[s] is not None or not self.queue:
                 continue
-            r = self.queue[0]
+            r = self._pick_next()
+            if r is None:
+                return                 # nothing admissible this step
             feed = r.resume_feed()
-            need = -(-len(feed) // self.ecfg.block_size)
-            blocks = self.alloc.alloc(need)
+            shared, hashes = ([], [])
+            if ecfg.prefix_cache:
+                shared, hashes = self._match_prefix(feed)
+            cached_len = len(shared) * ecfg.block_size
+            if shared and cached_len >= len(feed):
+                cached_len = len(feed) - 1
+            # protect matched blocks from alloc()'s cache reclaim by taking
+            # our reference BEFORE allocating the fresh remainder
+            for b in shared:
+                self.alloc.share(b)
+            need_tokens = len(feed)
+            if ecfg.chunked_prefill:
+                need_tokens = min(len(feed), cached_len + ecfg.prefill_chunk)
+            need = -(-need_tokens // ecfg.block_size) - len(shared)
+            blocks = self.alloc.alloc(max(need, 0))
             if blocks is None:
-                return                 # FCFS: don't let a short request starve
-            self.queue.popleft()
+                self.alloc.free(shared)   # undo the shares; r stays queued
+                return                 # all-or-nothing: don't starve the pick
+            self.queue.remove(r)
+            self.cache_stats["cached_tokens"] += cached_len
+            self.cache_stats["shared_block_grants"] += len(shared)
+            self.cache_stats["fresh_block_grants"] += len(blocks)
+            r.cached_tokens = cached_len
+            r.hash_chain = hashes
             r.feed = feed
-            r.state, r.slot, r.blocks, r.fed = RUNNING, s, blocks, 0
+            r.blocks = shared + blocks
+            r.state, r.slot, r.fed = RUNNING, s, cached_len
             self.slots[s] = r
-            self.lengths[s] = 0
+            self.lengths[s] = cached_len
             self.block_tables[s] = 0
-            self.block_tables[s, :len(blocks)] = blocks
+            self.block_tables[s, :len(r.blocks)] = r.blocks
+            self._tenant_acquire(r)
+
+    # -- prefix cache, copy-on-write and tenant accounting (DESIGN.md §12) --
+
+    def _chunk_hash(self, prev: int, chunk: np.ndarray) -> int:
+        """Chain hash of one full token block given the chain value of
+        everything before it — position-0-anchored, so equal hashes mean the
+        ENTIRE prefix up to this block matches, not just the chunk."""
+        return hash((prev, np.ascontiguousarray(chunk, np.int32).tobytes()))
+
+    def _match_prefix(self, feed: np.ndarray):
+        """(shared_blocks, chain_hashes): the longest prefix of `feed`'s full
+        blocks present in the hash index, at block granularity."""
+        bs = self.ecfg.block_size
+        shared: List[int] = []
+        hashes: List[int] = []
+        h = self._prefix_salt
+        for i in range(len(feed) // bs):
+            h = self._chunk_hash(h, feed[i * bs:(i + 1) * bs])
+            b = self.alloc.lookup(h)
+            if b is None:
+                break
+            shared.append(b)
+            hashes.append(h)
+        return shared, hashes
+
+    def _register_blocks(self, s: int, r: Request) -> None:
+        """Publish every newly COMPLETED full block of slot `s` (its end is
+        below the accepted `lengths` — speculative overwrites past `lengths`
+        never reach a registered block) to the hash index. The index takes
+        its own reference, so the entry outlives the request."""
+        bs = self.ecfg.block_size
+        full = int(self.lengths[s]) // bs
+        if full <= len(r.hash_chain):
+            return
+        stream = (np.concatenate([r.prompt,
+                                  np.asarray(r.out_tokens, np.int32)])
+                  if r.out_tokens else r.prompt)
+        for i in range(len(r.hash_chain), full):
+            prev = r.hash_chain[-1] if r.hash_chain else self._prefix_salt
+            h = self._chunk_hash(prev, stream[i * bs:(i + 1) * bs])
+            if self.alloc.register(r.blocks[i], h):
+                self.cache_stats["registered_blocks"] += 1
+            r.hash_chain.append(h)
+
+    def _touched_blocks(self, r: Request, s: int, w: int):
+        """Logical block indices the next `w`-token write at `lengths[s]`
+        lands in (clipped to the table)."""
+        bs = self.ecfg.block_size
+        start = int(self.lengths[s])
+        return range(start // bs,
+                     min(-(-(start + w) // bs), len(r.blocks)))
+
+    def _write_shared(self, r: Request, s: int, w: int) -> bool:
+        """True if any block the next write touches is still shared —
+        writing would corrupt another reference's read-only view."""
+        if not self.ecfg.prefix_cache:
+            return False
+        return any(self.alloc.refcount(r.blocks[i]) > 1
+                   for i in self._touched_blocks(r, s, w))
+
+    def _cow_for_write(self, r: Request, s: int, w: int) -> bool:
+        """Copy-on-write (DESIGN.md §12): give `r` a private copy of every
+        shared block its next `w`-token write touches, before `quantize_kv`
+        appends through the traced step. The copy is ONE extra traced
+        computation (block ids are data; both KV pools in speculative mode).
+        Under pool exhaustion the youngest other running request is evicted,
+        exactly like _ensure_blocks; False means `r` waits this step."""
+        for i in self._touched_blocks(r, s, w):
+            old = r.blocks[i]
+            if self.alloc.refcount(old) <= 1:
+                continue               # sole owner: write in place
+            got = self.alloc.alloc(1)
+            while got is None:
+                victim = self._youngest_running(exclude=r)
+                if victim is None:
+                    return False       # nothing to evict; r waits this step
+                self._evict(victim)
+                got = self.alloc.alloc(1)
+            new = self._count_fresh(got)[0]
+            with use_rules(self.mesh, fsdp=False):
+                self.cache = self._cow_copy_fn()(
+                    self.cache, jnp.asarray(old, jnp.int32),
+                    jnp.asarray(new, jnp.int32))
+                if self.draft_cache is not None:
+                    self.draft_cache = self._cow_copy_fn()(
+                        self.draft_cache, jnp.asarray(old, jnp.int32),
+                        jnp.asarray(new, jnp.int32))
+            r.blocks[i] = new
+            self.block_tables[s, i] = new
+            self.alloc.free([old])     # drop our reference; sharers keep it
+            self.cache_stats["cow_copies"] += 1
+        return True
+
+    def _cow_copy_fn(self):
+        """One jitted pool-row copy shared by every COW: block ids arrive as
+        data, so the bounded-trace contract gains exactly one "cow" shape
+        (target and draft caches share the treedef, hence the trace)."""
+        if self._cow_fn is None:
+            def copy(cache, src, dst):
+                self.traces["cow"] = self.traces.get("cow", 0) + 1
+                out = dict(cache)
+                for name in ("k", "v", "k_scale", "v_scale"):
+                    if name in cache:
+                        out[name] = cache[name].at[:, dst].set(
+                            cache[name][:, src])
+                return out
+            self._cow_fn = jax.jit(copy, donate_argnums=(0,))
+        return self._cow_fn
+
+    def _pick_next(self) -> Optional[Request]:
+        """The admission pick. "fcfs": the queue head. "priority": among
+        requests whose tenant stays under `tenant_token_budget`, the highest
+        priority wins; ties go to the tenant with the smallest weighted fair
+        share (tokens served / weight), then to arrival order."""
+        if not self.queue:
+            return None
+        if self.ecfg.scheduler == "fcfs":
+            return self.queue[0]
+        budget = self.ecfg.tenant_token_budget
+        weights = self.ecfg.tenant_weights or {}
+
+        def admissible(r: Request) -> bool:
+            if budget is None:
+                return True
+            need = len(r.resume_feed()) + r.max_new_tokens - len(r.out_tokens)
+            return self._tenant_inflight.get(r.tenant, 0) + need <= budget
+
+        eligible = [r for r in self.queue if admissible(r)]
+        if not eligible:
+            return None
+        return min(eligible, key=lambda r: (
+            -r.priority,
+            self._tenant_served.get(r.tenant, 0) / weights.get(r.tenant, 1.0),
+            r.rid))
+
+    def _tenant_acquire(self, r: Request) -> None:
+        r.inflight_tokens = len(r.feed) + r.max_new_tokens - len(r.out_tokens)
+        self._tenant_inflight[r.tenant] = (
+            self._tenant_inflight.get(r.tenant, 0) + r.inflight_tokens)
+
+    def _tenant_release(self, r: Request) -> None:
+        self._tenant_inflight[r.tenant] = (
+            self._tenant_inflight.get(r.tenant, 0) - r.inflight_tokens)
+        r.inflight_tokens = 0
+
+    def _emit(self, r: Request, tok: int) -> None:
+        """Append one generated token: bookkeeping + streaming callback."""
+        r.out_tokens.append(tok)
+        self._tenant_served[r.tenant] = (
+            self._tenant_served.get(r.tenant, 0) + 1)
+        if r.on_token is not None:
+            r.on_token(r, tok)
 
     def _ensure_blocks(self, r: Request, tokens_needed: int) -> bool:
         """Grow `r`'s block table to cover `tokens_needed` cached tokens.
@@ -775,6 +1233,7 @@ class ServingEngine:
                 return True
             got = self.alloc.alloc(need)
             if got is not None:
+                self._count_fresh(got)
                 self.block_tables[r.slot, len(r.blocks):len(r.blocks) + len(got)] = got
                 r.blocks.extend(got)
                 continue
@@ -784,6 +1243,10 @@ class ServingEngine:
             self._evict(victim)
             if victim is r:            # cannot happen (excluded), but be safe
                 return False
+
+    def _count_fresh(self, got: List[int]) -> List[int]:
+        self.cache_stats["fresh_block_grants"] += len(got)
+        return got
 
     def _youngest_running(self, exclude: Request) -> Optional[Request]:
         running = [r for r in self.slots
@@ -796,8 +1259,10 @@ class ServingEngine:
         logger.info(f"engine: preempting request {r.rid} "
                     f"({len(r.out_tokens)}/{r.max_new_tokens} tokens done)")
         s = r.slot
-        self.alloc.free(r.blocks)
+        self.alloc.free(r.blocks)      # refcounted: sharers keep theirs
+        self._tenant_release(r)
         r.blocks, r.slot, r.fed, r.feed = [], None, 0, None
+        r.hash_chain = []
         r.state, r.preemptions = QUEUED, r.preemptions + 1
         self.slots[s] = None
         self.lengths[s] = 0
@@ -806,7 +1271,8 @@ class ServingEngine:
 
     def _finish(self, r: Request) -> None:
         s = r.slot
-        self.alloc.free(r.blocks)
+        self.alloc.free(r.blocks)      # hash-indexed blocks stay cached
+        self._tenant_release(r)
         r.blocks, r.slot, r.feed = [], None, None
         r.state, r.finish_t = FINISHED, self.clock()
         self.slots[s] = None

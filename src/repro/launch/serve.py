@@ -70,7 +70,10 @@ def _run_continuous(args) -> None:
                         draft_centroids=args.draft_centroids,
                         kv_dtype=args.kv_dtype,
                         weight_bits=args.bits,
-                        bits_budget=args.bits_budget)
+                        bits_budget=args.bits_budget,
+                        prefix_cache=args.prefix_cache,
+                        chunked_prefill=args.chunked_prefill,
+                        scheduler="priority" if args.priority else "fcfs")
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
                              ecfg=ecfg)
@@ -82,12 +85,21 @@ def _run_continuous(args) -> None:
     # staggered submissions: a fresh request every other scheduler step, with
     # varying prompt lengths — the continuous-batching case the static path
     # cannot serve without padding everyone to the slowest request
-    pending = [rng.integers(0, cfg.vocab, rng.integers(4, args.prompt_len + 1))
-               for _ in range(args.requests)]
+    shared = rng.integers(0, cfg.vocab, max(4, args.prompt_len // 2))
+    pending = []
+    for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab, rng.integers(4, args.prompt_len + 1))
+        # with --prefix-cache, every other request opens with the same
+        # "system prompt" so the demo actually exercises block reuse
+        prompt = (np.concatenate([shared, tail])
+                  if args.prefix_cache and i % 2 == 0 else tail)
+        pending.append((prompt, {"tenant": f"tenant{i % 2}",
+                                 "priority": i % 3} if args.priority else {}))
     finished = []
     while pending or engine.busy:
         if pending and engine.steps % 2 == 0:
-            engine.submit(pending.pop(0), max_new_tokens=args.tokens)
+            prompt, kw = pending.pop(0)
+            engine.submit(prompt, max_new_tokens=args.tokens, **kw)
         if engine.busy:
             finished.extend(engine.step())
         else:
@@ -102,6 +114,8 @@ def _run_continuous(args) -> None:
                 f"{engine.steps} steps, traces {engine.traces}")
     if args.speculative:
         logger.info(f"speculative: {engine.acceptance_summary()}")
+    if args.prefix_cache:
+        logger.info(f"prefix cache: {engine.prefix_cache_report()}")
 
 
 def main() -> None:
@@ -144,6 +158,19 @@ def main() -> None:
                          "element-weighted mean-bits cap (e.g. 3.0): "
                          "empirical-Fisher scores keep sensitive layers at "
                          "4-bit and drop the rest to 3/2 (overrides --bits)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hashed prefix caching with copy-on-write "
+                         "block tables (DESIGN.md §12): requests sharing a "
+                         "prompt prefix share physical KV blocks, bit-equal "
+                         "to cache-off (continuous mode only)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="admit long prompts with one prefill chunk's worth "
+                         "of blocks instead of the whole prompt's, so they "
+                         "start decoding behind a busy pool (DESIGN.md §12)")
+    ap.add_argument("--priority", action="store_true",
+                    help="priority/weighted-fair multi-tenant admission in "
+                         "place of FCFS (DESIGN.md §12); the demo tags "
+                         "requests with alternating tenants and priorities")
     ap.add_argument("--describe", action="store_true",
                     help="print the deployment inventory (per-layer bits "
                          "assignment, packed weight bytes, kv dtype) and "
@@ -155,6 +182,11 @@ def main() -> None:
         ap.error("--kv-dtype applies to the paged engine; add --continuous")
     if args.describe and not args.continuous:
         ap.error("--describe inspects the paged engine; add --continuous")
+    for flag, name in ((args.prefix_cache, "--prefix-cache"),
+                       (args.chunked_prefill, "--chunked-prefill"),
+                       (args.priority, "--priority")):
+        if flag and not args.continuous:
+            ap.error(f"{name} applies to the paged engine; add --continuous")
     if args.continuous:
         _run_continuous(args)
     else:

@@ -1,0 +1,283 @@
+"""BlockAllocator invariant suite (DESIGN.md §12): the refcounted,
+hash-indexed allocator under random interleavings of alloc / share /
+register (COW publish) / free / cancel-style mass-free.
+
+Four invariants, checked after EVERY operation:
+
+  * conservation — free + referenced == num_blocks (nothing leaks, nothing
+    is double-counted);
+  * rc == holders + indexed — a block's refcount is exactly the number of
+    model-side holders plus one if the hash index holds it;
+  * zero-exactly-once — a block returns to the free list exactly when its
+    refcount hits zero, and never re-enters it while allocated;
+  * live index — hash-index entries never point at a freed block (the
+    index's own reference makes this structural, not a discipline).
+
+The interleavings run twice: a deterministic numpy-seeded sweep that always
+runs (CI and bare checkouts alike), and a hypothesis-driven pass when the
+module is installed (CI installs it; locally it may be absent — the
+deterministic classes are the tier1 floor either way).
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.launch.engine import BlockAllocator
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# The pinned ValueError surface (satellite: assert→ValueError hardening)
+# ---------------------------------------------------------------------------
+
+class TestErrorSurface:
+    def test_free_of_never_allocated_block_names_the_id(self):
+        a = BlockAllocator(4)
+        with pytest.raises(ValueError) as ei:
+            a.free([2])
+        assert str(ei.value) == ("BlockAllocator.free: block 2 is not "
+                                 "allocated (double free or refcount "
+                                 "underflow)")
+
+    def test_double_free_names_the_id(self):
+        a = BlockAllocator(4)
+        got = a.alloc(2)
+        a.free(got)
+        with pytest.raises(ValueError, match=rf"block {got[0]} is not "
+                                             r"allocated \(double free"):
+            a.free([got[0]])
+
+    def test_refcount_underflow_after_shares_released(self):
+        a = BlockAllocator(4)
+        (b,) = a.alloc(1)
+        a.share(b)
+        a.free([b])
+        a.free([b])                       # rc 2 -> 1 -> 0: both legal
+        with pytest.raises(ValueError, match=f"block {b} is not allocated"):
+            a.free([b])                   # the underflow
+
+    def test_out_of_range_ids_rejected_everywhere(self):
+        a = BlockAllocator(4)
+        for op, call in (("free", lambda: a.free([4])),
+                         ("free", lambda: a.free([-1])),
+                         ("share", lambda: a.share(9)),
+                         ("register", lambda: a.register(99, 7))):
+            with pytest.raises(ValueError) as ei:
+                call()
+            assert str(ei.value).startswith(f"BlockAllocator.{op}: block id ")
+            assert "out of range [0, 4)" in str(ei.value)
+
+    def test_share_and_register_of_free_block_rejected(self):
+        a = BlockAllocator(4)
+        with pytest.raises(ValueError, match="block 0 is free"):
+            a.share(0)
+        with pytest.raises(ValueError, match="block 0 is free"):
+            a.register(0, 123)
+
+    def test_partial_free_failure_leaves_earlier_frees_applied(self):
+        """`free` is per-id, not transactional: ids before the bad one are
+        released. Callers pass lists they own, so this only matters for the
+        error path — documented by pinning it."""
+        a = BlockAllocator(4)
+        got = a.alloc(2)
+        with pytest.raises(ValueError):
+            a.free([got[0], got[0]])      # second occurrence underflows
+        assert a.refcount(got[0]) == 0 and a.refcount(got[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit coverage of the refcount / index mechanics
+# ---------------------------------------------------------------------------
+
+class TestRefcountMechanics:
+    def test_alloc_is_all_or_nothing(self):
+        a = BlockAllocator(4)
+        assert a.alloc(5) is None and a.num_free == 4
+        got = a.alloc(4)
+        assert sorted(got) == [0, 1, 2, 3] and a.alloc(1) is None
+
+    def test_share_then_free_returns_block_on_last_reference(self):
+        a = BlockAllocator(2)
+        (b,) = a.alloc(1)
+        assert a.share(b) == 2 and a.num_free == 1
+        a.free([b])
+        assert a.num_free == 1            # still one holder
+        a.free([b])
+        assert a.num_free == 2            # last reference released it
+
+    def test_register_takes_its_own_reference(self):
+        a = BlockAllocator(2)
+        (b,) = a.alloc(1)
+        assert a.register(b, 42)
+        a.free([b])                       # the slot lets go...
+        assert a.num_free == 1            # ...but the index keeps it alive
+        assert a.lookup(42) == b and a.refcount(b) == 1
+
+    def test_register_is_first_writer_wins(self):
+        a = BlockAllocator(4)
+        b0, b1 = a.alloc(2)
+        assert a.register(b0, 7) is True
+        assert a.register(b1, 7) is False     # hash already published
+        assert a.lookup(7) == b0
+        assert a.refcount(b1) == 1            # no reference taken
+
+    def test_register_same_block_twice_takes_one_reference(self):
+        """Regression (found by the interleaving sweep): publishing one block
+        under TWO hashes used to take two index references and orphan the
+        first entry, leaving the block permanently unreclaimable. First
+        publication wins; the second is a no-op."""
+        a = BlockAllocator(2)
+        (b,) = a.alloc(1)
+        assert a.register(b, 10) is True
+        assert a.register(b, 11) is False
+        assert a.refcount(b) == 2             # slot + ONE index reference
+        assert a.lookup(11) is None and a.lookup(10) == b
+        a.free([b])                           # slot releases -> cache-only
+        assert a.alloc(2) is not None         # still reclaimable
+
+    def test_alloc_reclaims_cache_only_blocks_in_lru_order(self):
+        a = BlockAllocator(2)
+        b0, b1 = a.alloc(2)
+        a.register(b0, 10), a.register(b1, 11)
+        a.free([b0, b1])                  # both now cache-only (rc 1)
+        assert a.lookup(10) == b0         # touch 10: 11 becomes the LRU
+        got = a.alloc(1)
+        assert got == [b1]                # LRU entry evicted, not the hot one
+        assert a.lookup(11) is None and a.lookup(10) == b0
+
+    def test_alloc_never_reclaims_a_held_block(self):
+        a = BlockAllocator(2)
+        b0, b1 = a.alloc(2)
+        a.register(b0, 10)
+        a.free([b1])                      # b1 free; b0 held by slot + index
+        assert a.alloc(2) is None         # b0 (rc 2) is not reclaimable
+        a.free([b0])                      # slot releases; b0 cache-only now
+        assert sorted(a.alloc(2)) == [0, 1]
+        assert a.num_cached == 0
+
+
+# ---------------------------------------------------------------------------
+# Random-interleaving invariant suite
+# ---------------------------------------------------------------------------
+
+class AllocatorModel:
+    """Shadow model driving a BlockAllocator through engine-shaped ops while
+    independently tracking who holds what. `holders[b]` counts model-side
+    references (block-table entries / shared grants); the allocator's
+    refcount must equal holders + (1 if indexed)."""
+
+    def __init__(self, num_blocks):
+        self.a = BlockAllocator(num_blocks)
+        self.num_blocks = num_blocks
+        self.holders = collections.Counter()
+        self.next_hash = 0
+
+    # -- engine-shaped operations -----------------------------------------
+    def op_alloc(self, n):
+        got = self.a.alloc(n)
+        if got is None:
+            return
+        for b in got:
+            # a granted block may have been reclaimed from the cache — its
+            # index entry (if any) died with the reclaim
+            self.holders[b] += 1
+
+    def op_share(self, b):
+        if self.a.refcount(b) == 0:
+            with pytest.raises(ValueError):
+                self.a.share(b)
+            return
+        self.a.share(b)
+        self.holders[b] += 1
+
+    def op_register(self, b):
+        if self.a.refcount(b) == 0:
+            with pytest.raises(ValueError):
+                self.a.register(b, self.next_hash)
+        else:
+            self.a.register(b, self.next_hash)
+        self.next_hash += 1
+
+    def op_free(self, b):
+        if self.holders[b] == 0:
+            # model holds nothing: a free is either an underflow (rc 0) or
+            # would steal the index's reference — don't issue it
+            return
+        self.a.free([b])
+        self.holders[b] -= 1
+
+    def op_cancel(self):
+        """Cancel-style mass release: drop every model-side reference of a
+        random 'request' (here: all holders of up to 3 block ids)."""
+        held = [b for b in range(self.num_blocks) if self.holders[b] > 0]
+        for b in held[:3]:
+            while self.holders[b] > 0:
+                self.op_free(b)
+
+    # -- the four invariants ----------------------------------------------
+    def check(self):
+        a = self.a
+        referenced = sum(1 for b in range(self.num_blocks)
+                         if a.refcount(b) > 0)
+        assert a.num_free + referenced == self.num_blocks, "conservation"
+        for b in range(self.num_blocks):
+            indexed = int(a._block_hash[b] is not None
+                          and a._hash_index.get(a._block_hash[b]) == b)
+            assert a.refcount(b) == self.holders[b] + indexed, \
+                f"rc({b}) = {a.refcount(b)} != holders {self.holders[b]} " \
+                f"+ indexed {indexed}"
+        free_set = list(a._free)
+        assert len(free_set) == len(set(free_set)), "free list has dupes"
+        for b in free_set:
+            assert a.refcount(b) == 0, "allocated block on the free list"
+        for h, b in a._hash_index.items():
+            assert a.refcount(b) >= 1, \
+                f"hash index entry {h}->{b} points at a freed block"
+
+    def run_script(self, script):
+        for opcode, arg in script:
+            if opcode == 0:
+                self.op_alloc(arg % 4 + 1)
+            elif opcode == 1:
+                self.op_share(arg % self.num_blocks)
+            elif opcode == 2:
+                self.op_register(arg % self.num_blocks)
+            elif opcode == 3:
+                self.op_free(arg % self.num_blocks)
+            else:
+                self.op_cancel()
+            self.check()
+        # drain: release every model-side reference; only cache-only blocks
+        # may remain out of the free list, each freed exactly once per cycle
+        for b in range(self.num_blocks):
+            while self.holders[b] > 0:
+                self.op_free(b)
+        self.check()
+        assert self.a.num_free + self.a.num_cached == self.num_blocks
+
+
+class TestRandomInterleavings:
+    @pytest.mark.parametrize("seed", range(20))
+    def test_deterministic_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        num_blocks = int(rng.integers(2, 12))
+        script = [(int(rng.integers(0, 5)), int(rng.integers(0, 64)))
+                  for _ in range(120)]
+        AllocatorModel(num_blocks).run_script(script)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+    def test_hypothesis_interleavings(self):
+        @settings(max_examples=150, deadline=None)
+        @given(num_blocks=st.integers(2, 12),
+               script=st.lists(st.tuples(st.integers(0, 4),
+                                         st.integers(0, 63)),
+                               max_size=120))
+        def run(num_blocks, script):
+            AllocatorModel(num_blocks).run_script(script)
+        run()

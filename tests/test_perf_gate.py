@@ -1,0 +1,220 @@
+"""PR 6 backfill: the perf gate and the trajectory file finally get tests
+(DESIGN.md §11). `scripts/perf_gate.py`: schema and parity problems block
+unconditionally, >threshold same-lane timing regressions block on TPU or
+`--strict` (informational on CPU), an empty trajectory exits 2.
+`benchmarks/trajectory.py`: `load` tolerates missing/corrupt files,
+`append_record` is append-only and emits the REQUIRED_FIELDS record shape
+the gate schema-checks.
+"""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+from benchmarks import trajectory
+
+_SPEC = importlib.util.spec_from_file_location(
+    "perf_gate", os.path.join(os.path.dirname(__file__), "..", "scripts",
+                              "perf_gate.py"))
+perf_gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(perf_gate)
+
+
+def make_record(**over):
+    rec = {
+        "schema_version": trajectory.SCHEMA_VERSION,
+        "git_sha": "abc1234",
+        "date": "2026-01-01T00:00:00Z",
+        "backend": "interpret",
+        "jax_backend": "cpu",
+        "device_kind": "cpu",
+        "smoke": True,
+        "suites": {
+            "serving": {
+                "tokens_per_s": {"dense": 50.0, "lcd": 100.0},
+                "latency_p50_s": 0.5, "latency_p99_s": 1.0,
+                "ttft_p50_s": 0.2, "ttft_p99_s": 0.4,
+                "prefix_cache_hit_rate": 0.3,
+                "parity": True,
+            },
+            "kernel": {"shapes": [
+                {"name": "gemv_64", "m": 1, "k": 64, "n": 64, "us": 10.0}]},
+        },
+        "block_shapes": {},
+    }
+    rec.update(over)
+    return rec
+
+
+def write_trajectory(tmp_path, records):
+    p = tmp_path / "BENCH_trajectory.json"
+    p.write_text(json.dumps(records))
+    return str(p)
+
+
+class TestSchemaCheck:
+    def test_valid_record_passes(self):
+        assert perf_gate.check_schema(make_record()) == []
+
+    @pytest.mark.parametrize("field", sorted(trajectory.REQUIRED_FIELDS))
+    def test_each_missing_field_blocks(self, field):
+        rec = make_record()
+        del rec[field]
+        errs = perf_gate.check_schema(rec)
+        assert any(f"missing field {field!r}" in e for e in errs)
+
+    def test_wrong_type_blocks(self):
+        errs = perf_gate.check_schema(make_record(smoke="yes"))
+        assert any("'smoke' is str, want bool" in e for e in errs)
+
+    def test_unknown_lane_and_version_block(self):
+        errs = perf_gate.check_schema(make_record(backend="turbo"))
+        assert any("not a lane" in e for e in errs)
+        errs = perf_gate.check_schema(
+            make_record(schema_version=trajectory.SCHEMA_VERSION + 1))
+        assert any("version" in e for e in errs)
+
+
+class TestParityCheck:
+    def test_parity_true_or_absent_passes(self):
+        assert perf_gate.check_parity(make_record()) == []
+
+    def test_any_false_suite_blocks_and_is_named(self):
+        rec = make_record()
+        rec["suites"]["serving"]["parity"] = False
+        errs = perf_gate.check_parity(rec)
+        assert errs == ["parity: suite 'serving' reports parity=False"]
+
+
+class TestRegressionCheck:
+    def _pair(self, mutate):
+        prev = make_record()
+        latest = copy.deepcopy(prev)
+        mutate(latest["suites"])
+        return latest, prev
+
+    def test_throughput_drop_beyond_threshold_flags(self):
+        latest, prev = self._pair(
+            lambda s: s["serving"]["tokens_per_s"].update(lcd=85.0))
+        lines = perf_gate.check_regressions(latest, prev, 0.10)
+        assert len(lines) == 1 and "serving.tokens_per_s.lcd" in lines[0]
+
+    def test_drop_within_threshold_passes(self):
+        latest, prev = self._pair(
+            lambda s: s["serving"]["tokens_per_s"].update(lcd=91.0))
+        assert perf_gate.check_regressions(latest, prev, 0.10) == []
+
+    def test_latency_ttft_and_kernel_us_increase_flag(self):
+        def worse(s):
+            s["serving"]["latency_p99_s"] = 1.5
+            s["serving"]["ttft_p50_s"] = 0.3
+            s["kernel"]["shapes"][0]["us"] = 20.0
+        latest, prev = self._pair(worse)
+        lines = perf_gate.check_regressions(latest, prev, 0.10)
+        keys = {ln.split()[1] for ln in lines}
+        assert keys == {"serving.latency_p99_s", "serving.ttft_p50_s",
+                        "kernel.us.gemv_64"}
+
+    def test_improvement_never_flags(self):
+        def better(s):
+            s["serving"]["tokens_per_s"]["lcd"] = 500.0
+            s["serving"]["latency_p99_s"] = 0.1
+        latest, prev = self._pair(better)
+        assert perf_gate.check_regressions(latest, prev, 0.10) == []
+
+    def test_threshold_is_configurable(self):
+        latest, prev = self._pair(
+            lambda s: s["serving"]["tokens_per_s"].update(lcd=91.0))
+        assert perf_gate.check_regressions(latest, prev, 0.05)
+
+
+class TestMainExitCodes:
+    def test_empty_or_missing_trajectory_exits_2(self, tmp_path):
+        assert perf_gate.main(["--path", str(tmp_path / "nope.json")]) == 2
+        path = write_trajectory(tmp_path, [])
+        assert perf_gate.main(["--path", path]) == 2
+
+    def test_healthy_record_exits_0(self, tmp_path):
+        path = write_trajectory(tmp_path, [make_record()])
+        assert perf_gate.main(["--path", path]) == 0
+
+    def test_parity_failure_blocks(self, tmp_path):
+        rec = make_record()
+        rec["suites"]["serving"]["parity"] = False
+        path = write_trajectory(tmp_path, [rec])
+        assert perf_gate.main(["--path", path]) == 1
+
+    def test_cpu_regression_informational_unless_strict(self, tmp_path):
+        prev, latest = make_record(), make_record()
+        latest["suites"]["serving"]["tokens_per_s"]["lcd"] = 50.0
+        path = write_trajectory(tmp_path, [prev, latest])
+        assert perf_gate.main(["--path", path]) == 0
+        assert perf_gate.main(["--path", path, "--strict"]) == 1
+
+    def test_tpu_regression_blocks_without_strict(self, tmp_path):
+        prev = make_record(device_kind="TPU v5e")
+        latest = make_record(device_kind="TPU v5e")
+        latest["suites"]["serving"]["tokens_per_s"]["lcd"] = 50.0
+        path = write_trajectory(tmp_path, [prev, latest])
+        assert perf_gate.main(["--path", path]) == 1
+
+    def test_comparison_never_crosses_lanes(self, tmp_path):
+        """A regression vs a DIFFERENT lane's record must not block: the
+        previous same-lane record is the baseline, and with none present the
+        timing gate is skipped."""
+        prev = make_record(device_kind="TPU v5e")
+        latest = make_record()     # cpu lane, "slower" than the TPU record
+        latest["suites"]["serving"]["tokens_per_s"]["lcd"] = 1.0
+        path = write_trajectory(tmp_path, [prev, latest])
+        assert perf_gate.main(["--path", path, "--strict"]) == 0
+
+
+class TestTrajectoryContracts:
+    def test_load_tolerates_missing_corrupt_and_nonlist(self, tmp_path):
+        assert trajectory.load(str(tmp_path / "absent.json")) == []
+        p = tmp_path / "corrupt.json"
+        p.write_text("{not json")
+        assert trajectory.load(str(p)) == []
+        p.write_text('{"a": 1}')
+        assert trajectory.load(str(p)) == []
+
+    def test_append_record_is_append_only_and_schema_clean(self, tmp_path):
+        path = write_trajectory(tmp_path, [make_record(git_sha="old0000")])
+        rec = trajectory.append_record(
+            "interpret", {"serving": {"lcd": {"tokens_per_s": 10.0}}},
+            smoke=True, path=path)
+        records = trajectory.load(path)
+        assert len(records) == 2
+        assert records[0]["git_sha"] == "old0000"   # prior record untouched
+        assert records[-1] == rec
+        assert perf_gate.check_schema(rec) == []    # REQUIRED_FIELDS shape
+
+    def test_serving_headlines_carry_ttft_and_prefix_fields(self):
+        result = {
+            "lcd": {"tokens_per_s": 10.0,
+                    "latency_s": {"p50": 0.5, "p99": 1.0},
+                    "ttft_s": {"p50": 0.2, "p99": 0.4},
+                    "verified_vs_single_request": True},
+            "prefix_cache": {"cache_on": {"block_reuse_rate": 0.4},
+                             "parity_on_vs_off": True},
+        }
+        head = trajectory._suite_headlines("serving", result)
+        assert head["ttft_p50_s"] == 0.2 and head["ttft_p99_s"] == 0.4
+        assert head["prefix_cache_hit_rate"] == 0.4
+        assert head["parity"] is True
+
+    def test_prefix_parity_failure_folds_into_suite_parity(self):
+        result = {"lcd": {"verified_vs_single_request": True},
+                  "prefix_cache": {"parity_on_vs_off": False}}
+        assert trajectory._suite_headlines("serving", result)["parity"] \
+            is False
+
+    def test_unknown_suites_drop_out_of_the_record(self, tmp_path):
+        path = str(tmp_path / "t.json")
+        rec = trajectory.append_record(
+            "compiled", {"mystery": {"x": 1}, "table": None}, smoke=False,
+            path=path)
+        assert rec["suites"] == {}
+        assert rec["backend"] == "compiled" and rec["smoke"] is False

@@ -99,10 +99,13 @@ class TestBlockAllocator:
         assert a.num_free == 0
 
     def test_double_free_rejected(self):
+        """Hardening (PR 7): freeing a free block is a ValueError naming the
+        block id, not a bare assert (python -O-proof; message pinned in
+        tests/test_block_allocator.py alongside the rest of the surface)."""
         a = BlockAllocator(2)
         blocks = a.alloc(1)
         a.free(blocks)
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match=r"block 0 is not allocated"):
             a.free(blocks)
 
 
@@ -283,3 +286,206 @@ class TestLCDThroughEngine:
         with lut_serving("interpret"):
             fused = run_two()
         assert ref == fused
+
+
+# ---------------------------------------------------------------------------
+# PR 7: prefix caching + production scheduler (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+_PFX = _prompt(99, 8)                     # the shared "system prompt"
+
+
+def _with_prefix(seed, extra):
+    if extra == 0:
+        return _PFX.copy()
+    return np.concatenate([_PFX, _prompt(seed, extra)])
+
+
+class TestPrefixCacheParity:
+    """The hard contract: prefix-cache-on output is bit-equal to cache-off
+    for EVERY request within a kv dtype. Sharing and COW are pure
+    bookkeeping — the traced step never learns caching exists."""
+
+    def _run(self, model, params, ecfg, specs, stagger=2):
+        eng = ServingEngine(model, params, ecfg)
+        reqs, pending = [], list(specs)
+        while pending or eng.busy:
+            if pending and eng.steps % stagger == 0:
+                s, extra, g = pending.pop(0)
+                reqs.append(eng.submit(_with_prefix(s, extra), g))
+            if eng.busy:
+                eng.step()
+            else:
+                eng.steps += 1        # idle tick: let the next arrival land
+        eng.assert_bounded_traces()
+        return eng, reqs, [r.out_tokens for r in reqs]
+
+    def test_staggered_shared_prefix_bit_equal(self, tiny):
+        cfg, model, params = tiny
+        base = dict(num_slots=3, block_size=4, num_blocks=32,
+                    max_blocks_per_slot=8, prefill_chunk=8)
+        specs = [(1, 3, 5), (2, 0, 5), (3, 6, 4), (4, 1, 5), (5, 0, 4)]
+        _, _, off = self._run(model, params, EngineConfig(**base), specs)
+        eng, _, on = self._run(model, params,
+                               EngineConfig(**base, prefix_cache=True), specs)
+        assert on == off                   # bit-equal, request for request
+        rep = eng.prefix_cache_report()
+        assert rep["cached_tokens"] > 0 and rep["block_reuse_rate"] > 0
+
+    def test_block_aligned_resubmit_hits_cow(self, tiny):
+        """Resubmitting an exactly block-aligned cached prompt re-feeds its
+        last token into a SHARED tail block: the write must copy-on-write,
+        and tokens still match the cache-off run."""
+        cfg, model, params = tiny
+        base = dict(num_slots=2, block_size=4, num_blocks=32,
+                    max_blocks_per_slot=8, prefill_chunk=8)
+        specs = [(1, 0, 4), (1, 0, 4)]     # identical 8-token (2-block) prompt
+        _, _, off = self._run(model, params, EngineConfig(**base), specs,
+                              stagger=50)  # sequential: second hits the index
+        eng, _, on = self._run(model, params,
+                               EngineConfig(**base, prefix_cache=True), specs,
+                               stagger=50)
+        assert on == off
+        assert eng.cache_stats["cow_copies"] >= 1
+        assert "cow" in eng.traces         # COW compiled exactly once
+        eng.assert_bounded_traces()
+
+    def test_eviction_of_sharer_leaves_other_sharers_intact(self, tiny):
+        """Pool pressure evicts a request holding SHARED blocks: refcounts
+        keep the survivor's blocks alive, both requests complete, and both
+        match the cache-off run bit-for-bit."""
+        cfg, model, params = tiny
+        base = dict(num_slots=2, block_size=2, num_blocks=8,
+                    max_blocks_per_slot=8, prefill_chunk=4)
+        specs = [(0, 0, 6), (0, 0, 6)]     # 8-token prompt grows to 7 blocks
+        # (14 tokens each: two full requests need 14 of the 8 blocks, so the
+        # younger sharer must be evicted mid-decode)
+        _, _, off = self._run(model, params, EngineConfig(**base), specs)
+        eng, reqs, on = self._run(model, params,
+                                  EngineConfig(**base, prefix_cache=True),
+                                  specs)
+        assert on == off
+        assert sum(r.preemptions for r in reqs) >= 1
+        # every non-cached block returned; the hash index holds the rest
+        assert eng.alloc.num_free + eng.alloc.num_cached == base["num_blocks"]
+
+    def test_speculative_composes_with_prefix_cache(self, tiny):
+        from repro.core.clustered_params import make_draft_params
+        cfg, model, params = tiny
+        draft, _ = make_draft_params(params, draft_centroids=4)
+        base = dict(num_slots=2, block_size=4, num_blocks=32,
+                    max_blocks_per_slot=8, prefill_chunk=8, speculative_k=2)
+        specs = [(1, 0, 5), (2, 3, 5)]
+
+        def run(ecfg):
+            eng = ServingEngine(model, params, ecfg, draft_params=draft)
+            out = []
+            for s, extra, g in specs:
+                r = eng.submit(_with_prefix(s, extra), g)
+                eng.run()
+                out.append(r.out_tokens)
+            eng.assert_bounded_traces()
+            return eng, out
+
+        _, off = run(EngineConfig(**base))
+        eng, on = run(EngineConfig(**base, prefix_cache=True))
+        assert on == off
+        assert eng.prefix_cache_report()["cached_tokens"] > 0
+
+    def test_cache_salted_by_kv_dtype(self, tiny):
+        """Same tokens under a different kv dtype hash to different index
+        entries — an int8 pool must never serve a float request's blocks."""
+        cfg, model, params = tiny
+        e_f = ServingEngine(model, params, EngineConfig(prefix_cache=True))
+        e_i = ServingEngine(model, params,
+                            EngineConfig(prefix_cache=True, kv_dtype="int8"))
+        assert e_f._prefix_salt != e_i._prefix_salt
+
+
+class TestChunkedPrefill:
+    def test_chunked_matches_whole_prefill(self, tiny):
+        cfg, model, params = tiny
+        base = dict(num_slots=2, block_size=4, num_blocks=16,
+                    max_blocks_per_slot=8, prefill_chunk=4)
+        p = _prompt(7, 20)
+        whole = _solo_tokens(model, params, p, 6, EngineConfig(**base))
+        chunked = _solo_tokens(model, params, p, 6,
+                               EngineConfig(**base, chunked_prefill=True))
+        assert chunked == whole
+
+    def test_long_prompt_admitted_under_pool_pressure(self, tiny):
+        """Chunked prefill admits with one chunk's worth of blocks instead
+        of the whole prompt's — a long prompt starts while a hog still owns
+        most of the pool, instead of stalling in the queue."""
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=8,
+                            max_blocks_per_slot=8, prefill_chunk=4,
+                            chunked_prefill=True)
+        eng = ServingEngine(model, params, ecfg)
+        eng.submit(_prompt(6, 8), 9)       # grows to 5 of the 8 blocks
+        eng.step()
+        late = eng.submit(_prompt(7, 20), 4)   # whole prompt would need 5
+        eng.step()
+        assert late.slot is not None       # admitted on chunk-sized grant
+        eng.run()
+        solo = _solo_tokens(model, params, _prompt(7, 20), 4,
+                            EngineConfig(num_slots=2, block_size=4,
+                                         num_blocks=8, max_blocks_per_slot=8,
+                                         prefill_chunk=4))
+        assert late.out_tokens == solo
+
+
+class TestSchedulerAndStreaming:
+    def test_priority_beats_arrival_order(self, tiny):
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=1, block_size=4, num_blocks=16,
+                            max_blocks_per_slot=4, prefill_chunk=8,
+                            scheduler="priority")
+        eng = ServingEngine(model, params, ecfg)
+        first = eng.submit(_prompt(1, 4), 3)
+        eng.step()                          # occupies the only slot
+        low = eng.submit(_prompt(2, 4), 3, priority=0)
+        high = eng.submit(_prompt(3, 4), 3, priority=5)
+        eng.run()
+        assert high.finish_t < low.finish_t
+
+    def test_tenant_budget_defers_admission(self, tiny):
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=32,
+                            max_blocks_per_slot=8, prefill_chunk=8,
+                            scheduler="priority", tenant_token_budget=12)
+        eng = ServingEngine(model, params, ecfg)
+        a = eng.submit(_prompt(1, 4), 6, tenant="t")   # 10 inflight tokens
+        b = eng.submit(_prompt(2, 4), 6, tenant="t")   # would exceed 12
+        c = eng.submit(_prompt(3, 4), 6, tenant="u")   # other tenant: fine
+        eng.step()
+        assert a.slot is not None and c.slot is not None
+        assert b.slot is None               # over t's budget, must wait
+        eng.run()
+        assert b.state == "finished"        # admitted once a released tokens
+
+    def test_streaming_callback_sees_every_token_in_order(self, tiny):
+        cfg, model, params = tiny
+        eng = ServingEngine(model, params, EngineConfig())
+        seen = []
+        r = eng.submit(_prompt(8, 5), 6,
+                       on_token=lambda req, tok: seen.append((req.rid, tok)))
+        eng.run()
+        assert seen == [(r.rid, t) for t in r.out_tokens]
+        assert len(seen) == 6
+
+    def test_cancel_queued_and_running(self, tiny):
+        cfg, model, params = tiny
+        ecfg = EngineConfig(num_slots=1, block_size=4, num_blocks=16,
+                            max_blocks_per_slot=4, prefill_chunk=8)
+        eng = ServingEngine(model, params, ecfg)
+        running = eng.submit(_prompt(1, 4), 8)
+        queued = eng.submit(_prompt(2, 4), 8)
+        eng.step()
+        assert eng.cancel(queued) and queued.state == "cancelled"
+        assert eng.cancel(running) and running.state == "cancelled"
+        assert running.slot is None
+        assert eng.alloc.num_free == ecfg.num_blocks   # blocks all returned
+        assert not eng.cancel(running)      # idempotent: already terminal
+        eng.run()
+        assert not eng.busy
