@@ -229,6 +229,65 @@ def _bench_tenants(model, params, ecfg, smoke: bool) -> dict:
     return {"scheduler": "priority", "weights": weights, "rows": rows}
 
 
+# non-transformer zoo lane (DESIGN.md §13): every serving cache protocol —
+# pure slot state (rwkv6, gla), hybrid slot+paged (zamba2) and encoder-decoder
+# slot state with an admission-time encode (whisper) — through the SAME engine
+ZOO_ARCHS = ("rwkv6-1.6b", "gla-1.3b", "zamba2-1.2b", "whisper-large-v3")
+
+
+def _zoo_arrivals(rng, cfg, n_req: int, max_prompt: int, gen: int):
+    arrivals, t = [], 0.0
+    for _ in range(n_req):
+        t += rng.exponential(2.0)
+        prompt = rng.integers(0, cfg.vocab,
+                              int(rng.integers(4, max_prompt + 1))).astype(np.int32)
+        kw = {}
+        if cfg.family == "audio":
+            kw["frames"] = rng.normal(
+                size=(1, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+        arrivals.append((int(t), prompt, gen, kw))
+    return arrivals
+
+
+def _bench_zoo(smoke: bool) -> dict:
+    """Per-arch rows for the model zoo: Poisson traffic through the
+    capability-typed engine, with EVERY request's tokens asserted equal to a
+    single-request run (the §13 parity contract, enforced on every lane run).
+    Zoo rows always use reduced configs — they are protocol telemetry (trace
+    counts, parity, per-arch latency shape), not full-size perf claims."""
+    from repro.models.registry import arch_capabilities
+    n_req, max_prompt, gen = (4, 10, 5) if smoke else (8, 24, 12)
+    section = {}
+    for arch in ZOO_ARCHS:
+        ecfg = EngineConfig(num_slots=2, block_size=4, num_blocks=16,
+                            max_blocks_per_slot=4, prefill_chunk=8, arch=arch)
+        engine, params = build_engine(arch, use_reduced=True, lcd=False,
+                                      ecfg=ecfg)
+        cfg = engine.model.cfg
+        arrivals = _zoo_arrivals(np.random.default_rng(13), cfg, n_req,
+                                 max_prompt, gen)
+        t0 = engine.clock()
+        reqs = _drive(engine, [(a, p.copy(), g, dict(kw))
+                               for a, p, g, kw in arrivals])
+        wall = engine.clock() - t0
+        solo_eng = ServingEngine(engine.model, params, ecfg, mesh=engine.mesh)
+        for r, (_, _, _, kw) in zip(reqs, arrivals):
+            solo = solo_eng.submit(r.prompt, r.max_new_tokens, **kw)
+            solo_eng.run()
+            assert solo.out_tokens == r.out_tokens, (
+                f"{arch}: request {r.rid} diverged under continuous batching")
+        solo_eng.assert_bounded_traces()
+        row = _row_stats(engine, reqs, wall)
+        row["family"] = cfg.family
+        row["capabilities"] = sorted(arch_capabilities(arch))
+        row["verified_vs_single_request"] = True
+        section[arch] = row
+        emit(f"serving/zoo_{cfg.family}", wall * 1e6,
+             f"arch={arch};tok_s={row['tokens_per_s']};"
+             f"traces={len(row['traces'])};parity=True")
+    return section
+
+
 def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
                workload, seed: int, params, verify: bool):
     engine, params = build_engine(arch, use_reduced=smoke, lcd=lcd,
@@ -246,8 +305,8 @@ def _bench_one(name: str, *, arch: str, smoke: bool, lcd: bool, ecfg,
         # so the check costs two compiles total instead of two per request.
         solo_eng = ServingEngine(engine.model, params, ecfg, mesh=engine.mesh,
                                  kv_smooth=None if engine.kv_dtype == "float"
-                                 else (engine.cache["k_smooth"],
-                                       engine.cache["v_smooth"]))
+                                 else (engine.caches["paged"]["k_smooth"],
+                                       engine.caches["paged"]["v_smooth"]))
         for r in reqs:
             solo = solo_eng.submit(r.prompt, r.max_new_tokens)
             solo_eng.run()
@@ -322,6 +381,10 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
     prefix_section = _bench_prefix_cache(dense_eng.model, params, ecfg, smoke)
     tenants_section = _bench_tenants(dense_eng.model, params, ecfg, smoke)
 
+    # non-transformer zoo (DESIGN.md §13): per-arch serving rows with the
+    # single-request parity contract asserted for every architecture
+    zoo_section = _bench_zoo(smoke)
+
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
         "bench_backend": backend,
@@ -332,6 +395,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
         "dense": dense, "lcd": lcd, "int8_kv": int8_row,
         "prefix_cache": prefix_section, "tenants": tenants_section,
+        "archs": zoo_section,
         "kv_cache": capacity,
         "lcd_vs_dense_tokens_per_s": round(
             lcd["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3),

@@ -21,6 +21,8 @@ TIER1_MODULES = {
     "test_autotune",
     "test_block_allocator",
     "test_perf_gate",
+    "test_cache_protocols",
+    "test_engine_zoo",
 }
 
 

@@ -65,6 +65,13 @@ DEFAULT_RULES: Dict[str, Axis] = {
     "layers": None,
     "conv": None,
     "state": None,
+    # capability-typed serving caches (DESIGN.md §13): hybrid paged pools
+    # carry a leading shared-attention-site dim (few sites — replicated);
+    # encoder-decoder slot state carries the encoder frame dim of the
+    # cross-KV. Both stay unsharded: "slots" already takes the data axes and
+    # "kv" the model axis, so these dims have no axes left to claim.
+    "sites": None,
+    "enc_seq": None,
 }
 
 

@@ -59,12 +59,35 @@ Prefix caching + production scheduler (DESIGN.md §12)
     way); `scheduler="priority"` replaces FCFS with per-tenant token
     budgets + weighted-fair pick; `submit(on_token=...)` streams tokens and
     `cancel()` frees a request's slot/blocks through the refcounts.
+
+Capability-typed cache protocols (DESIGN.md §13)
+    The engine is written against models/registry.py's cache protocols, not
+    against transformers. A family serves through a `PagedSeqCache` (the
+    block-table pool everything above describes), a `SlotStateCache`
+    (fixed-size per-slot recurrent state — rwkv6, linear-attention GLA,
+    whisper; the slot swap IS the allocator, so admission needs only a free
+    slot and no block arithmetic), or BOTH (zamba2 threads its shared-
+    attention KV pool and its mamba ssm/conv state through one step fn).
+    `self.caches` holds every instantiated cache keyed by kind; the traced
+    step donates the whole dict. Prefix caching, COW, speculation and int8
+    KV are capabilities a family must advertise — a config that asks for
+    one on a family without it fails eagerly (EngineConfig(arch=...) at
+    construction, ServingEngine at init). Preemption SNAPSHOTS slot state
+    where the family declares `snapshot` (rwkv/GLA/whisper: `preempt()`
+    saves the per-slot rows and re-admission restores them — no recompute)
+    and falls back to recompute eviction otherwise. Whisper's encoder runs
+    once per request at admission (the "encode" trace) and parks cross-
+    attention KV in per-slot state, so encoder-decoder requests batch with
+    the same scheduler. Slot ops add at most four traced shapes
+    ("slot_reset", "snapshot", "restore", "encode") — slot indices are
+    data — and `assert_bounded_traces` bounds them per capability.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import Any, Dict, List, Optional
 
@@ -76,7 +99,10 @@ from repro.core.api import compress_model, is_clustered
 from repro.distributed.sharding import use_rules
 from repro.launch.mesh import make_host_mesh
 from repro.models.config import get_config, reduced
-from repro.models.registry import Model, get_model
+from repro.models.registry import (CAP_ENCODER, CAP_INT8_KV, CAP_PAGED,
+                                   CAP_PREFIX_CACHE, CAP_SLOT_STATE,
+                                   CAP_SPECULATIVE, Model, arch_capabilities,
+                                   get_model)
 from repro.utils import human_bytes, logger, tree_size_bytes
 
 
@@ -372,6 +398,15 @@ class Request:
     # round (0..k each; round i emits accept_lens[i] + 1 tokens — a round
     # whose acceptance overshoots the token budget records the capped count)
     accept_lens: List[int] = dataclasses.field(default_factory=list)
+    # encoder-decoder (CAP_ENCODER, DESIGN.md §13): precomputed frame
+    # embeddings (1, enc_seq, d_model), encoded ONCE at admission into the
+    # slot's cross-attention state
+    frames: Optional[np.ndarray] = None
+    # snapshot preemption (CAP_SNAPSHOT, DESIGN.md §13): the per-slot state
+    # rows saved by `preempt()` and the readable length they cover;
+    # re-admission restores both instead of re-prefilling
+    snapshot: Optional[Any] = None
+    snap_len: int = 0
 
     # tokens to (re)prefill this running stint, SNAPSHOTTED at admission:
     # the prompt plus anything generated before a preemption. Tokens decoded
@@ -446,6 +481,12 @@ class EngineConfig:
     # max concurrently admitted tokens (feed + generation budget) per
     # tenant; None = unbounded. Only enforced by the "priority" scheduler.
     tenant_token_budget: Optional[int] = None
+    # architecture binding (DESIGN.md §13): when set, capability-dependent
+    # knobs are validated EAGERLY against the arch's family capabilities at
+    # config construction — speculation, prefix cache and int8 KV are
+    # paged-family features, so a slot-state arch fails here with the
+    # capability named, not deep inside engine init.
+    arch: Optional[str] = None
 
     def __post_init__(self):
         """Eager validation: a bad knob fails at config construction with the
@@ -493,6 +534,20 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.tenant_weights must all be positive; got "
                 f"{self.tenant_weights!r}")
+        if self.arch is not None:
+            caps = arch_capabilities(self.arch)  # ValueError when unknown
+            if self.speculative_k and CAP_SPECULATIVE not in caps:
+                raise ValueError(
+                    f"EngineConfig.speculative_k > 0 needs the 'speculative' "
+                    f"capability; arch {self.arch!r} has {sorted(caps)}")
+            if self.prefix_cache and CAP_PREFIX_CACHE not in caps:
+                raise ValueError(
+                    f"EngineConfig.prefix_cache=True needs the 'prefix_cache' "
+                    f"capability; arch {self.arch!r} has {sorted(caps)}")
+            if self.kv_dtype == "int8" and CAP_INT8_KV not in caps:
+                raise ValueError(
+                    f"EngineConfig.kv_dtype='int8' needs the 'int8_kv' "
+                    f"capability; arch {self.arch!r} has {sorted(caps)}")
 
     @property
     def max_seq(self) -> int:
@@ -530,23 +585,42 @@ class ServingEngine:
         # (EngineConfig is frozen today, so the shared instance was inert —
         # this hardens against any future mutable field)
         ecfg = EngineConfig() if ecfg is None else ecfg
-        assert model.supports_paging(), (
-            f"family '{model.cfg.family}' has no paged decode path")
+        caps = model.capabilities
+        assert CAP_PAGED in caps or CAP_SLOT_STATE in caps, (
+            f"family '{model.cfg.family}' publishes no serving cache "
+            f"protocol (needs 'paged' or 'slot_state', DESIGN.md §13)")
+        self.has_paged = CAP_PAGED in caps
+        self.has_slot = CAP_SLOT_STATE in caps
         # kv_dtype / block geometry are validated eagerly by
         # EngineConfig.__post_init__; only engine-level coupling lives here.
         # the RESOLVED pool dtype: an explicit knob wins, else follow the
         # model config (the pre-§9 engine raised NotImplementedError here
-        # for int8 configs — resolving beats silently serving full precision)
-        self.kv_dtype = ecfg.kv_dtype or (
-            "int8" if model.cfg.kv_cache_dtype == "int8" else "float")
+        # for int8 configs — resolving beats silently serving full precision).
+        # Families without the int8_kv capability always pool in the model
+        # dtype; asking them for int8 is a config error, not a silent float.
+        if CAP_INT8_KV in caps:
+            self.kv_dtype = ecfg.kv_dtype or (
+                "int8" if model.cfg.kv_cache_dtype == "int8" else "float")
+        else:
+            if ecfg.kv_dtype == "int8":
+                raise ValueError(
+                    f"EngineConfig.kv_dtype='int8' needs the 'int8_kv' "
+                    f"capability; family '{model.cfg.family}' has "
+                    f"{sorted(caps)}")
+            self.kv_dtype = "float"
         assert kv_smooth is None or self.kv_dtype == "int8", (
             "kv_smooth only applies to the int8 KV cache")
+        if ecfg.prefix_cache:
+            assert CAP_PREFIX_CACHE in caps, (
+                f"EngineConfig.prefix_cache=True needs the 'prefix_cache' "
+                f"capability; family '{model.cfg.family}' has {sorted(caps)}")
         self.model, self.params, self.ecfg = model, params, ecfg
         self.spec_k = ecfg.speculative_k
         self.draft_params = draft_params
         if self.spec_k:
-            assert model.supports_speculation(), (
-                f"family '{model.cfg.family}' has no paged verify path")
+            assert CAP_SPECULATIVE in caps, (
+                f"EngineConfig.speculative_k > 0 needs the 'speculative' "
+                f"capability; family '{model.cfg.family}' has {sorted(caps)}")
             assert draft_params is not None, (
                 "speculative decoding needs draft_params (see "
                 "core/clustered_params.py make_draft_params)")
@@ -581,13 +655,18 @@ class ServingEngine:
             "registered_blocks": 0,    # blocks published to the hash index
         }
         with use_rules(self.mesh, fsdp=False):
-            self.cache = model.init_paged_cache(
-                ecfg.num_blocks, ecfg.block_size, kv_dtype=self.kv_dtype)
+            # every cache the family declared, keyed by kind ("paged" block
+            # pool and/or "slot" per-slot state, DESIGN.md §13)
+            self.caches = model.init_seq_caches(
+                num_blocks=ecfg.num_blocks, block_size=ecfg.block_size,
+                num_slots=ecfg.num_slots, max_seq=ecfg.max_seq,
+                kv_dtype=self.kv_dtype if self.has_paged else None)
             # the draft's own K/V pool (draft weights produce different K/V),
             # same geometry, block ids and kv dtype as the target's
-            self.draft_cache = (model.init_paged_cache(
-                ecfg.num_blocks, ecfg.block_size, kv_dtype=self.kv_dtype)
-                if self.spec_k else None)
+            self.draft_caches = (model.init_seq_caches(
+                num_blocks=ecfg.num_blocks, block_size=ecfg.block_size,
+                num_slots=ecfg.num_slots, max_seq=ecfg.max_seq,
+                kv_dtype=self.kv_dtype) if self.spec_k else None)
         if kv_smooth is not None:
             # calibrated smoothing vectors (calibrate_kv_smooth); the draft
             # pool uses the same VALUES — its K/V track the target's closely
@@ -597,14 +676,18 @@ class ServingEngine:
             # the traced steps, and donating one shared array twice would
             # leave the second tree holding a deleted buffer.
             k_sm, v_sm = kv_smooth
-            for c in (self.cache, self.draft_cache):
+            for c in (self.caches, self.draft_caches):
                 if c is not None:
-                    c["k_smooth"] = jnp.array(k_sm, jnp.float32, copy=True)
-                    c["v_smooth"] = jnp.array(v_sm, jnp.float32, copy=True)
+                    c["paged"]["k_smooth"] = jnp.array(k_sm, jnp.float32,
+                                                       copy=True)
+                    c["paged"]["v_smooth"] = jnp.array(v_sm, jnp.float32,
+                                                       copy=True)
         # trace bookkeeping: width T -> count in normal mode; (role, width) ->
-        # count in speculative mode ("prefill" / "draft" / "verify")
+        # count in speculative mode ("prefill" / "draft" / "verify"); slot
+        # ops add at most {"slot_reset", "snapshot", "restore", "encode"}
         self.traces: Dict[Any, int] = {}
         self._step_fns: Dict[Any, Any] = {}
+        self._slot_fns: Dict[str, Any] = {}
         self._next_rid = 0
         self.steps = 0
         self.spec_rounds = 0
@@ -613,15 +696,51 @@ class ServingEngine:
         self.compress_report = None
         self.draft_report = None
 
+    # -- deprecated pre-§13 cache aliases -----------------------------------
+
+    @property
+    def cache(self):
+        warnings.warn(
+            "ServingEngine.cache is deprecated; use engine.caches['paged'] "
+            "(DESIGN.md §13)", DeprecationWarning, stacklevel=2)
+        return self.caches.get("paged")
+
+    @property
+    def draft_cache(self):
+        warnings.warn(
+            "ServingEngine.draft_cache is deprecated; use "
+            "engine.draft_caches['paged'] (DESIGN.md §13)",
+            DeprecationWarning, stacklevel=2)
+        return (None if self.draft_caches is None
+                else self.draft_caches.get("paged"))
+
     # -- public API ---------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int, *, tenant: str = "default",
-               priority: int = 0, on_token=None) -> Request:
+               priority: int = 0, on_token=None, frames=None) -> Request:
         """Queue a request. `tenant`/`priority` feed the "priority" scheduler
         (DESIGN.md §12); `on_token(request, token)` streams every emitted
         token as it is decoded (speculative rounds stream each accepted
-        token individually, in order)."""
+        token individually, in order). Encoder-decoder families
+        (CAP_ENCODER) REQUIRE `frames`, the request's precomputed frame
+        embeddings (enc_seq, d_model) or (1, enc_seq, d_model) — encoded
+        once at admission into the slot's cross-attention state."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if self.model.supports(CAP_ENCODER):
+            assert frames is not None, (
+                f"family '{self.model.cfg.family}' is encoder-decoder: "
+                f"submit() needs `frames` (1, enc_seq, d_model)")
+            frames = np.asarray(frames, self.model.cfg.jnp_dtype)
+            if frames.ndim == 2:
+                frames = frames[None]
+            want = (1, self.model.cfg.enc_seq, self.model.cfg.d_model)
+            assert frames.shape == want, (
+                f"frames must be {want} (one request's encoder input); got "
+                f"{frames.shape}")
+        else:
+            assert frames is None, (
+                f"family '{self.model.cfg.family}' has no encoder; submit() "
+                f"got unexpected `frames`")
         # speculative rounds write up to k tokens past the accepted length
         # before rolling back, so a request needs k tokens of cache headroom
         need = len(prompt) + max_new_tokens + self.spec_k
@@ -631,7 +750,7 @@ class ServingEngine:
             f"(max_blocks_per_slot * block_size)")
         r = Request(self._next_rid, prompt, max_new_tokens,
                     submit_t=self.clock(), tenant=tenant, priority=priority,
-                    on_token=on_token)
+                    on_token=on_token, frames=frames)
         self._next_rid += 1
         self.queue.append(r)
         return r
@@ -657,6 +776,37 @@ class ServingEngine:
             self.block_tables[s] = 0
             return True
         return False
+
+    def preempt(self, r: Request) -> None:
+        """Preempt a RUNNING request back to the queue front (DESIGN.md §13).
+
+        Families whose SlotStateCache declares `snapshot` (rwkv, GLA,
+        whisper) save the request's per-slot state rows — including any
+        cross-attention KV — and re-admission RESTORES them, so the request
+        resumes exactly where it stopped without recomputing a single token.
+        Everything else (paged pools whose blocks must be surrendered,
+        zamba2's non-snapshot hybrid state) falls back to recompute
+        preemption, identical to block-pressure eviction."""
+        assert r.state == RUNNING, f"cannot preempt a {r.state!r} request"
+        proto = self.model.seq_caches.get("slot")
+        if proto is None or not proto.snapshot or self.has_paged:
+            self._evict(r)
+            return
+        s = r.slot
+        logger.info(f"engine: snapshot-preempting request {r.rid} "
+                    f"({len(r.out_tokens)}/{r.max_new_tokens} tokens done)")
+        with use_rules(self.mesh, fsdp=False):
+            r.snapshot = self._slot_fn("snapshot")(
+                self.caches["slot"], jnp.asarray(s, jnp.int32))
+        r.snap_len = int(self.lengths[s])
+        self._tenant_release(r)
+        # feed/fed are KEPT: a mid-prefill request resumes its feed from the
+        # restored state; a decoding one keeps its pending token
+        r.slot = None
+        r.state, r.preemptions = QUEUED, r.preemptions + 1
+        self.slots[s] = None
+        self.lengths[s] = 0
+        self.queue.appendleft(r)
 
     @property
     def busy(self) -> bool:
@@ -688,6 +838,14 @@ class ServingEngine:
             # the copy-on-write block copy is one extra traced computation
             # (block ids are data), shared by every COW this engine performs
             allowed = allowed | {"cow"}
+        if self.has_slot:
+            # per-slot state ops (DESIGN.md §13): slot indices are data, so
+            # each op is one traced shape no matter how many slots it touches
+            allowed = allowed | {"slot_reset"}
+            if self.model.seq_caches["slot"].snapshot:
+                allowed = allowed | {"snapshot", "restore"}
+        if self.model.supports(CAP_ENCODER):
+            allowed = allowed | {"encode"}
         assert set(self.traces) <= allowed, (
             f"unexpected step shapes {set(self.traces)} (allowed {allowed})")
         assert all(c == 1 for c in self.traces.values()), (
@@ -746,15 +904,18 @@ class ServingEngine:
         ecfg = self.ecfg
         t = ecfg.prefill_chunk if any(r.prefilling for _, r in active) else 1
 
-        # pass 1 — reserve blocks. This may EVICT other active slots
-        # (recompute preemption), so it must complete before any tokens are
-        # packed: a slot evicted here simply drops out of pass 2.
+        # pass 1 — reserve blocks (paged families only: slot state is
+        # fixed-size, so slot-only families never starve or evict here).
+        # Reservation may EVICT other active slots (recompute preemption),
+        # so it must complete before any tokens are packed: a slot evicted
+        # here simply drops out of pass 2.
         def want(r):
             return min(len(r.feed) - r.fed, t) if r.prefilling else 1
-        for s, r in active:
-            if self.slots[s] is not r:
-                continue               # evicted by an earlier reservation
-            self._ensure_blocks(r, int(self.lengths[s]) + want(r))
+        if self.has_paged:
+            for s, r in active:
+                if self.slots[s] is not r:
+                    continue           # evicted by an earlier reservation
+                self._ensure_blocks(r, int(self.lengths[s]) + want(r))
 
         # pass 1.5 — copy-on-write (DESIGN.md §12): a slot about to write
         # into a block prefix caching granted read-only (refcount > 1) gets
@@ -776,7 +937,8 @@ class ServingEngine:
         active = [(s, r) for s, r in enumerate(self.slots) if r is not None]
         for s, r in active:
             w = want(r)
-            if len(r.blocks) * ecfg.block_size < int(self.lengths[s]) + w:
+            if self.has_paged and (
+                    len(r.blocks) * ecfg.block_size < int(self.lengths[s]) + w):
                 continue               # starved of blocks: waits this step
             if self._write_shared(r, s, w):
                 continue               # COW starved: waits this step
@@ -790,14 +952,14 @@ class ServingEngine:
             if self.spec_k:
                 # combined step: the draft cache ingests the same tokens so
                 # it stays in lockstep with the target's accepted prefix
-                next_tok, self.cache, self.draft_cache = self._spec_prefill_fn(t)(
-                    self.params, self.draft_params, self.cache,
-                    self.draft_cache, jnp.asarray(tokens),
+                next_tok, self.caches, self.draft_caches = self._spec_prefill_fn(t)(
+                    self.params, self.draft_params, self.caches,
+                    self.draft_caches, jnp.asarray(tokens),
                     jnp.asarray(self.lengths), jnp.asarray(n_new),
                     jnp.asarray(self.block_tables))
             else:
-                next_tok, self.cache = self._step_fn(t)(
-                    self.params, self.cache, jnp.asarray(tokens),
+                next_tok, self.caches = self._step_fn(t)(
+                    self.params, self.caches, jnp.asarray(tokens),
                     jnp.asarray(self.lengths), jnp.asarray(n_new),
                     jnp.asarray(self.block_tables))
         next_tok = np.asarray(next_tok)
@@ -881,8 +1043,8 @@ class ServingEngine:
             n_one[s] = 1
 
         with use_rules(self.mesh, fsdp=False):
-            drafts, self.draft_cache = self._draft_fn()(
-                self.draft_params, self.draft_cache, jnp.asarray(pend),
+            drafts, self.draft_caches = self._draft_fn()(
+                self.draft_params, self.draft_caches, jnp.asarray(pend),
                 jnp.asarray(self.lengths), jnp.asarray(n_one),
                 jnp.asarray(self.block_tables))
             drafts = np.asarray(drafts)                      # (S, k)
@@ -893,8 +1055,8 @@ class ServingEngine:
                 vtokens[s, 0] = r.out_tokens[-1]
                 vtokens[s, 1:] = drafts[s]
                 n_ver[s] = k + 1
-            target, self.cache = self._verify_fn()(
-                self.params, self.cache, jnp.asarray(vtokens),
+            target, self.caches = self._verify_fn()(
+                self.params, self.caches, jnp.asarray(vtokens),
                 jnp.asarray(self.lengths), jnp.asarray(n_ver),
                 jnp.asarray(self.block_tables))
         target = np.asarray(target)                          # (S, k+1)
@@ -929,12 +1091,12 @@ class ServingEngine:
             model, cfg = self.model, self.model.cfg
 
             @partial(jax.jit, donate_argnums=(1,))
-            def step(params, cache, tokens, lengths, n_new, block_tables):
+            def step(params, caches, tokens, lengths, n_new, block_tables):
                 self.traces[t] = self.traces.get(t, 0) + 1   # trace-time only
-                logits, cache = model.paged_decode(
-                    params, cache, tokens, lengths, n_new, block_tables)
+                logits, caches = model.serving_step(
+                    params, caches, tokens, lengths, n_new, block_tables)
                 nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
-                return nxt.astype(jnp.int32), cache
+                return nxt.astype(jnp.int32), caches
 
             self._step_fns[t] = step
         return self._step_fns[t]
@@ -950,15 +1112,15 @@ class ServingEngine:
             model, cfg = self.model, self.model.cfg
 
             @partial(jax.jit, donate_argnums=(2, 3))
-            def step(params, dparams, cache, dcache, tokens, lengths, n_new,
+            def step(params, dparams, caches, dcaches, tokens, lengths, n_new,
                      block_tables):
                 self.traces[key] = self.traces.get(key, 0) + 1
-                logits, cache = model.paged_decode(
-                    params, cache, tokens, lengths, n_new, block_tables)
-                _, dcache = model.paged_decode(
-                    dparams, dcache, tokens, lengths, n_new, block_tables)
+                logits, caches = model.serving_step(
+                    params, caches, tokens, lengths, n_new, block_tables)
+                _, dcaches = model.serving_step(
+                    dparams, dcaches, tokens, lengths, n_new, block_tables)
                 nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
-                return nxt.astype(jnp.int32), cache, dcache
+                return nxt.astype(jnp.int32), caches, dcaches
 
             self._step_fns[key] = step
         return self._step_fns[key]
@@ -981,20 +1143,20 @@ class ServingEngine:
             model, cfg, k = self.model, self.model.cfg, self.spec_k
 
             @partial(jax.jit, donate_argnums=(1,))
-            def draft(dparams, dcache, tok0, lengths, n_one, block_tables):
+            def draft(dparams, dcaches, tok0, lengths, n_one, block_tables):
                 self.traces[key] = self.traces.get(key, 0) + 1
 
                 def body(carry, _):
-                    tok, dcache, dlen = carry
-                    logits, dcache = model.paged_decode(
-                        dparams, dcache, tok, dlen, n_one, block_tables)
+                    tok, dcaches, dlen = carry
+                    logits, dcaches = model.serving_step(
+                        dparams, dcaches, tok, dlen, n_one, block_tables)
                     nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
                     nxt = nxt.astype(jnp.int32)
-                    return (nxt[:, None], dcache, dlen + n_one), nxt
+                    return (nxt[:, None], dcaches, dlen + n_one), nxt
 
-                (_, dcache, _), toks = jax.lax.scan(
-                    body, (tok0, dcache, lengths), None, length=k + 1)
-                return toks.swapaxes(0, 1)[:, :k], dcache    # (S, k)
+                (_, dcaches, _), toks = jax.lax.scan(
+                    body, (tok0, dcaches, lengths), None, length=k + 1)
+                return toks.swapaxes(0, 1)[:, :k], dcaches   # (S, k)
 
             self._step_fns[key] = draft
         return self._step_fns[key]
@@ -1008,15 +1170,81 @@ class ServingEngine:
             model, cfg = self.model, self.model.cfg
 
             @partial(jax.jit, donate_argnums=(1,))
-            def verify(params, cache, tokens, lengths, n_new, block_tables):
+            def verify(params, caches, tokens, lengths, n_new, block_tables):
                 self.traces[key] = self.traces.get(key, 0) + 1
-                logits, cache = model.paged_verify(
-                    params, cache, tokens, lengths, n_new, block_tables)
+                logits, caches = model.serving_verify(
+                    params, caches, tokens, lengths, n_new, block_tables)
                 nxt = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
-                return nxt.astype(jnp.int32), cache
+                return nxt.astype(jnp.int32), caches
 
             self._step_fns[key] = verify
         return self._step_fns[key]
+
+    # -- per-slot state ops (SlotStateCache, DESIGN.md §13) ------------------
+
+    def _slot_fn(self, name: str):
+        """One jitted per-slot state op per kind — the slot index arrives as
+        DATA (a traced int32), so "slot_reset"/"snapshot"/"restore"/"encode"
+        each cost exactly one traced shape no matter which or how many slots
+        they touch (every SlotStateCache leaf carries the slot on axis 1)."""
+        if name not in self._slot_fns:
+            model = self.model
+            if name == "slot_reset":
+                def reset(state, slot):
+                    self.traces["slot_reset"] = (
+                        self.traces.get("slot_reset", 0) + 1)
+                    return jax.tree_util.tree_map(
+                        lambda a: a.at[:, slot].set(0), state)
+                jitted = jax.jit(reset, donate_argnums=(0,))
+            elif name == "snapshot":
+                # NOT donated: the engine state stays live for other slots
+                def take(state, slot):
+                    self.traces["snapshot"] = (
+                        self.traces.get("snapshot", 0) + 1)
+                    return jax.tree_util.tree_map(lambda a: a[:, slot], state)
+                jitted = jax.jit(take)
+            elif name == "restore":
+                def put(state, snap, slot):
+                    self.traces["restore"] = self.traces.get("restore", 0) + 1
+                    return jax.tree_util.tree_map(
+                        lambda a, b: a.at[:, slot].set(b.astype(a.dtype)),
+                        state, snap)
+                jitted = jax.jit(put, donate_argnums=(0,))
+            else:                      # "encode": encoder prefill -> cross KV
+                def encode(params, state, frames, slot):
+                    self.traces["encode"] = self.traces.get("encode", 0) + 1
+                    ck, cv = model.encode_prefill(params, frames)
+                    out = dict(state)
+                    out["ck"] = state["ck"].at[:, slot].set(
+                        ck.astype(state["ck"].dtype))
+                    out["cv"] = state["cv"].at[:, slot].set(
+                        cv.astype(state["cv"].dtype))
+                    return out
+                jitted = jax.jit(encode, donate_argnums=(1,))
+            self._slot_fns[name] = jitted
+        return self._slot_fns[name]
+
+    def _slot_reset(self, s: int) -> None:
+        """Zero slot `s`'s state rows: a fresh stint must not read the
+        previous occupant's recurrence."""
+        with use_rules(self.mesh, fsdp=False):
+            self.caches["slot"] = self._slot_fn("slot_reset")(
+                self.caches["slot"], jnp.asarray(s, jnp.int32))
+
+    def _slot_encode(self, s: int, frames: np.ndarray) -> None:
+        """Run the encoder ONCE for the request admitted into slot `s` and
+        park its cross-attention KV in the slot's state (CAP_ENCODER) — the
+        encoder is a second prefill shape, fixed at (1, enc_seq, d_model)."""
+        with use_rules(self.mesh, fsdp=False):
+            self.caches["slot"] = self._slot_fn("encode")(
+                self.params, self.caches["slot"], jnp.asarray(frames),
+                jnp.asarray(s, jnp.int32))
+
+    def _slot_restore(self, s: int, r: Request) -> None:
+        """Put a preemption snapshot back into slot `s` (CAP_SNAPSHOT)."""
+        with use_rules(self.mesh, fsdp=False):
+            self.caches["slot"] = self._slot_fn("restore")(
+                self.caches["slot"], r.snapshot, jnp.asarray(s, jnp.int32))
 
     def _admit(self) -> None:
         """Admission (DESIGN.md §12): pick the next queued request under the
@@ -1028,7 +1256,13 @@ class ServingEngine:
         `prefix_cache` on, the feed's longest block-aligned prefix already
         in the hash index is shared read-only instead of re-prefilled; at
         least the feed's last token is always re-fed, because its logits
-        seed the first generated token."""
+        seed the first generated token.
+
+        Slot-state families (DESIGN.md §13) skip block accounting entirely —
+        a free slot is the only admission requirement; the slot's state rows
+        are zeroed (and, for encoder-decoder requests, the encoder runs into
+        them). A snapshot-preempted request restores its saved state and
+        resumes mid-stream instead of re-prefilling."""
         ecfg = self.ecfg
         for s in range(ecfg.num_slots):
             if self.slots[s] is not None or not self.queue:
@@ -1036,6 +1270,16 @@ class ServingEngine:
             r = self._pick_next()
             if r is None:
                 return                 # nothing admissible this step
+            if r.snapshot is not None:
+                self.queue.remove(r)
+                self._slot_restore(s, r)
+                r.state, r.slot = RUNNING, s
+                self.slots[s] = r
+                self.lengths[s] = r.snap_len
+                self.block_tables[s] = 0
+                r.snapshot, r.snap_len = None, 0
+                self._tenant_acquire(r)
+                continue
             feed = r.resume_feed()
             shared, hashes = ([], [])
             if ecfg.prefix_cache:
@@ -1047,14 +1291,17 @@ class ServingEngine:
             # our reference BEFORE allocating the fresh remainder
             for b in shared:
                 self.alloc.share(b)
-            need_tokens = len(feed)
-            if ecfg.chunked_prefill:
-                need_tokens = min(len(feed), cached_len + ecfg.prefill_chunk)
-            need = -(-need_tokens // ecfg.block_size) - len(shared)
-            blocks = self.alloc.alloc(max(need, 0))
-            if blocks is None:
-                self.alloc.free(shared)   # undo the shares; r stays queued
-                return                 # all-or-nothing: don't starve the pick
+            blocks: List[int] = []
+            if self.has_paged:
+                need_tokens = len(feed)
+                if ecfg.chunked_prefill:
+                    need_tokens = min(len(feed),
+                                      cached_len + ecfg.prefill_chunk)
+                need = -(-need_tokens // ecfg.block_size) - len(shared)
+                blocks = self.alloc.alloc(max(need, 0))
+                if blocks is None:
+                    self.alloc.free(shared)  # undo the shares; r stays queued
+                    return             # all-or-nothing: don't starve the pick
             self.queue.remove(r)
             self.cache_stats["cached_tokens"] += cached_len
             self.cache_stats["shared_block_grants"] += len(shared)
@@ -1068,6 +1315,10 @@ class ServingEngine:
             self.lengths[s] = cached_len
             self.block_tables[s] = 0
             self.block_tables[s, :len(r.blocks)] = r.blocks
+            if self.has_slot:
+                self._slot_reset(s)
+                if r.frames is not None:
+                    self._slot_encode(s, r.frames)
             self._tenant_acquire(r)
 
     # -- prefix cache, copy-on-write and tenant accounting (DESIGN.md §12) --
@@ -1149,12 +1400,12 @@ class ServingEngine:
                 got = self.alloc.alloc(1)
             new = self._count_fresh(got)[0]
             with use_rules(self.mesh, fsdp=False):
-                self.cache = self._cow_copy_fn()(
-                    self.cache, jnp.asarray(old, jnp.int32),
+                self.caches["paged"] = self._cow_copy_fn()(
+                    self.caches["paged"], jnp.asarray(old, jnp.int32),
                     jnp.asarray(new, jnp.int32))
-                if self.draft_cache is not None:
-                    self.draft_cache = self._cow_copy_fn()(
-                        self.draft_cache, jnp.asarray(old, jnp.int32),
+                if self.draft_caches is not None:
+                    self.draft_caches["paged"] = self._cow_copy_fn()(
+                        self.draft_caches["paged"], jnp.asarray(old, jnp.int32),
                         jnp.asarray(new, jnp.int32))
             r.blocks[i] = new
             self.block_tables[s, i] = new
@@ -1390,6 +1641,10 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
     `draft_report` so a deployment stays inspectable
     (launch/serve.py --describe)."""
     ecfg = EngineConfig() if ecfg is None else ecfg
+    if ecfg.arch is None:
+        # bind the config to the arch so capability-dependent knobs fail
+        # eagerly with the capability named (DESIGN.md §13)
+        ecfg = dataclasses.replace(ecfg, arch=arch)
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
@@ -1413,7 +1668,8 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
             logger.info("LCD draft: " + draft_report.summary())
         resolved_kv = ecfg.kv_dtype or (
             "int8" if cfg.kv_cache_dtype == "int8" else "float")
-        if resolved_kv == "int8" and kv_smooth is None:
+        if (resolved_kv == "int8" and kv_smooth is None
+                and model.supports(CAP_INT8_KV)):
             kv_smooth = calibrate_kv_smooth(model, params, seed=seed)
             logger.info("int8 KV cache: smoothing calibrated "
                         "(Eq. 9 candidate search per layer x kv-head)")

@@ -62,6 +62,10 @@ def _describe(engine) -> None:
 
 
 def _run_continuous(args) -> None:
+    # arch= binds the config to the architecture's capability set
+    # (DESIGN.md §13): a slot-state arch with --speculative/--prefix-cache/
+    # --kv-dtype int8 fails HERE with the missing capability named, before
+    # any params are built.
     ecfg = EngineConfig(num_slots=args.slots, block_size=args.block_size,
                         num_blocks=args.blocks,
                         max_blocks_per_slot=args.blocks_per_slot,
@@ -73,7 +77,8 @@ def _run_continuous(args) -> None:
                         bits_budget=args.bits_budget,
                         prefix_cache=args.prefix_cache,
                         chunked_prefill=args.chunked_prefill,
-                        scheduler="priority" if args.priority else "fcfs")
+                        scheduler="priority" if args.priority else "fcfs",
+                        arch=args.arch)
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
                              ecfg=ecfg)
@@ -82,6 +87,16 @@ def _run_continuous(args) -> None:
         return
     rng = np.random.default_rng(0)
     cfg = engine.model.cfg
+    # encoder-decoder archs (whisper): every request carries a synthetic
+    # frame buffer; admission runs the encoder once per request (the
+    # engine's "encode" trace) and decoding reads the per-slot cross-KV
+    audio = cfg.family == "audio"
+
+    def _frames():
+        if not audio:
+            return None
+        return rng.normal(size=(1, cfg.enc_seq, cfg.d_model)).astype(
+            cfg.jnp_dtype)
     # staggered submissions: a fresh request every other scheduler step, with
     # varying prompt lengths — the continuous-batching case the static path
     # cannot serve without padding everyone to the slowest request
@@ -99,7 +114,8 @@ def _run_continuous(args) -> None:
     while pending or engine.busy:
         if pending and engine.steps % 2 == 0:
             prompt, kw = pending.pop(0)
-            engine.submit(prompt, max_new_tokens=args.tokens, **kw)
+            engine.submit(prompt, max_new_tokens=args.tokens,
+                          frames=_frames(), **kw)
         if engine.busy:
             finished.extend(engine.step())
         else:

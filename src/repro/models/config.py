@@ -30,7 +30,8 @@ VOCAB_PAD = 4096
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     arch_id: str
-    family: str                     # dense | moe | rwkv | hybrid | vlm | audio
+    family: str                     # dense | moe | rwkv | linear_attn |
+                                    # hybrid | vlm | audio
     n_layers: int
     d_model: int
     n_heads: int
@@ -140,6 +141,10 @@ class ModelConfig:
             # r,k,v,g,o projections + decay lora + channel-mix
             per = 4 * d * d + d * d + 2 * d * 64 + d * f + f * d
             body = self.n_layers * per
+        elif self.family == "linear_attn":
+            # q,k,v,o projections + gate lora + gelu mlp
+            per = 4 * d * d + 2 * d * 64 + 2 * d * f
+            body = self.n_layers * per
         elif self.family == "hybrid":
             di, ns = self.d_inner, self.ssm_state
             per = d * (2 * di + 2 * ns + self.ssm_heads) + di * d
@@ -183,7 +188,7 @@ SHAPES: Dict[str, ShapeConfig] = {
 }
 
 # archs with sub-quadratic sequence mixing: long_500k applies to these only
-SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-1.2b"}
+SUBQUADRATIC = {"rwkv6-1.6b", "zamba2-1.2b", "gla-1.3b"}
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
@@ -240,10 +245,12 @@ def register(cfg: ModelConfig) -> ModelConfig:
 
 
 def get_config(arch_id: str) -> ModelConfig:
-    if not _REGISTRY:
-        _load_all()
     if arch_id not in _REGISTRY:
         _load_all()
+    if arch_id not in _REGISTRY:
+        raise ValueError(
+            f"unknown arch {arch_id!r}; registered archs: "
+            f"{', '.join(list_archs())}")
     return _REGISTRY[arch_id]
 
 

@@ -1,0 +1,208 @@
+"""GLA — gated linear attention (data-dependent forget gate) — arXiv:2312.06635.
+
+Linear attention with a per-key-channel sigmoid forget gate driven by a
+low-rank adapter:
+
+    a_t = sigmoid(g0 + x_t A B)^{1/tau}          (gate, in (0,1))
+    S_t = diag(a_t) S_{t-1} + k_t ⊗ v_t          (per-head state, (B,H,P,P))
+    y_t = q_t · S_t
+
+The q/k/v/o projections are LCD-clusterable; the gate adapter stays FP (it
+feeds sigmoid/pow, DESIGN.md §6). Full-sequence mode runs the block-parallel
+chunked form (linear_attn.gla_chunked); decode and serving carry the exact
+sequential recurrence.
+
+Distinct from rwkv6: the current token's k⊗v enters the output through S_t
+undecayed (inclusive decay, no u-bonus), there is no token-shift path, and
+the channel mixer is a plain GELU MLP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import maybe_shard
+from repro.models import params as PT
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, rmsnorm
+from repro.models.linear_attn import gla_chunked
+from repro.models.slot_state import gather_last_logits, mask_slot_state
+
+D = PT.ParamDecl
+LORA = 64
+TAU = 16.0   # gate temperature: a = sigmoid(.)^{1/tau} keeps decay near 1
+
+
+def param_table(cfg: ModelConfig) -> PT.Table:
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H, P = cfg.rwkv_heads, cfg.rwkv_head_dim
+    del H, P
+    ln = "layers,"
+    return {
+        "embed": D((cfg.padded_vocab, d), "vocab,embed", "embed"),
+        "blocks": {
+            "ln_attn": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            "ln_mlp": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            "attn": {
+                "wq": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wk": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wv": D((L, d, d), ln + "embed,q_dim", "fanin"),
+                "wo": D((L, d, d), ln + "q_dim,embed", "fanin"),
+                # forget-gate LoRA: sigmoid(g0 + x A B)^{1/tau}
+                "g0": D((L, d), ln + "embed_nofsdp", "uniform:2.0~6.0", "float32"),
+                "gate_A": D((L, d, LORA), ln + "embed_nofsdp,.", "fanin", "float32"),
+                "gate_B": D((L, LORA, d), ln + ".,embed_nofsdp", "fanin:0.1", "float32"),
+                "ln_out": {"scale": D((L, d), ln + "embed_nofsdp", "zeros", "float32")},
+            },
+            "mlp": {
+                "w_up": D((L, d, f), ln + "embed,ff", "fanin"),
+                "w_down": D((L, f, d), ln + "ff,embed", "fanin"),
+            },
+        },
+        "ln_final": {"scale": D((d,), "embed_nofsdp", "zeros", "float32")},
+        "lm_head": D((d, cfg.padded_vocab), "embed,vocab", "fanin"),
+    }
+
+
+def _gla_scan(q, k, v, a, s0):
+    """Sequential reference. q/k/v/a: (B,S,H,P) f32; s0: (B,H,P,P).
+    Returns y (B,S,H,P), s_final."""
+
+    def step(s, qkva):
+        qt, kt, vt, at = qkva                        # (B,H,P)
+        s = at[..., None] * s + jnp.einsum("bhp,bhq->bhpq", kt, vt)
+        y = jnp.einsum("bhp,bhpq->bhq", qt, s)
+        return s, y
+
+    qs, ks, vs, as_ = (jnp.moveaxis(t, 1, 0) for t in (q, k, v, a))
+    s_final, ys = jax.lax.scan(step, s0, (qs, ks, vs, as_))
+    return jnp.moveaxis(ys, 0, 1), s_final
+
+
+def gla_mix(p, x, cfg: ModelConfig, state):
+    """state = S (B,H,P,P) f32 or None (train, zero init)."""
+    b, s, d = x.shape
+    H, P = cfg.rwkv_heads, cfg.rwkv_head_dim
+    s0 = state if state is not None else jnp.zeros((b, H, P, P), jnp.float32)
+
+    q = linear(x, p["wq"]).reshape(b, s, H, P).astype(jnp.float32)
+    k = linear(x, p["wk"]).reshape(b, s, H, P).astype(jnp.float32)
+    v = linear(x, p["wv"]).reshape(b, s, H, P).astype(jnp.float32)
+
+    xg = x.astype(jnp.float32)
+    glog = p["g0"] + jnp.tanh(xg @ p["gate_A"]) @ p["gate_B"]   # (B,S,d)
+    a = jax.nn.sigmoid(glog).reshape(b, s, H, P) ** (1.0 / TAU)
+
+    if cfg.ssm_impl == "chunked" and s > 1:
+        y, s_new = gla_chunked(q, k, v, a, s0)
+    else:
+        y, s_new = _gla_scan(q, k, v, a, s0)
+    y = rmsnorm(y.reshape(b, s, d), p["ln_out"]["scale"])
+    out = linear(y, p["wo"]).astype(x.dtype)
+    return out, (s_new if state is not None else None)
+
+
+def _mlp(p, x):
+    return linear(jax.nn.gelu(linear(x, p["w_up"])), p["w_down"])
+
+
+def forward(params, tokens, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]
+    x = maybe_shard(x, "batch", None, None)
+
+    def body(x, p):
+        h, _ = gla_mix(p["attn"], rmsnorm(x, p["ln_attn"]["scale"]), cfg, None)
+        x = x + h
+        return x + _mlp(p["mlp"], rmsnorm(x, p["ln_mlp"]["scale"])), None
+
+    if cfg.remat:
+        pol = (jax.checkpoint_policies.nothing_saveable
+               if cfg.remat_policy == "nothing"
+               else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=pol)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return maybe_shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+# --- decode: constant-size recurrent state -----------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    H, P, L = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.n_layers
+    return {
+        "s": jnp.zeros((L, batch, H, P, P), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    H, P, L = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.n_layers
+    return {
+        "s": jax.ShapeDtypeStruct((L, batch, H, P, P), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+CACHE_NAMES = {"s": "layers,batch,rwkv_heads,.,.", "pos": ""}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    x = params["embed"].astype(cfg.jnp_dtype)[tokens]       # (B,1,d)
+
+    def body(x, layer):
+        p, s = layer
+        h, s = gla_mix(p["attn"], rmsnorm(x, p["ln_attn"]["scale"]), cfg, s)
+        x = x + h
+        return x + _mlp(p["mlp"], rmsnorm(x, p["ln_mlp"]["scale"])), s
+
+    x, ss = jax.lax.scan(body, x, (params["blocks"], cache["s"]))
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits[:, -1], {"s": ss, "pos": pos + 1}
+
+
+# --- serving: fixed-size per-slot state (launch/engine.py, DESIGN.md §13) ----
+
+def init_slot_state(cfg: ModelConfig, num_slots: int, max_seq: int):
+    H, P, L = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.n_layers
+    return {"s": jnp.zeros((L, num_slots, H, P, P), jnp.float32)}
+
+
+SLOT_STATE_NAMES = {"s": "layers,slots,rwkv_heads,.,."}
+
+
+def _state_step(params, state, tok, cfg: ModelConfig):
+    """One token for every slot: tok (slots, 1) -> (logits (slots, V), state)."""
+    x = params["embed"].astype(cfg.jnp_dtype)[tok]
+
+    def body(x, layer):
+        p, s = layer
+        h, s = gla_mix(p["attn"], rmsnorm(x, p["ln_attn"]["scale"]), cfg, s)
+        x = x + h
+        return x + _mlp(p["mlp"], rmsnorm(x, p["ln_mlp"]["scale"])), s
+
+    x, ss = jax.lax.scan(body, x, (params["blocks"], state["s"]))
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits[:, -1], {"s": ss}
+
+
+def serving_step(params, caches, tokens, lengths, n_new, block_tables,
+                 cfg: ModelConfig):
+    """Engine step over a (slots, T) window: per-token scan so the exact
+    sequential recurrence runs (bit-equal to solo decode); rows past their
+    request's n_new keep their state unchanged."""
+    del lengths, block_tables   # positionless recurrence, no paging
+    state = caches["slot"]
+    T = tokens.shape[1]
+
+    def step(state, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        logits, new = _state_step(params, state, tok, cfg)
+        return mask_slot_state(new, state, t < n_new), logits
+
+    state, logits = jax.lax.scan(step, state, jnp.arange(T))
+    return gather_last_logits(logits, n_new), {"slot": state}

@@ -128,3 +128,46 @@ def wkv6_chunked(r, k, v, w, u, s0, *, chunk: int = 32):
 
     s_final, ys = jax.lax.scan(body, s0, (rs, ks, vs, lws))
     return ys.swapaxes(0, 1).reshape(b, s, h, p), s_final
+
+
+# ---------------------------------------------------------------------------
+# GLA (gated linear attention), per-key-channel sigmoid gate
+# ---------------------------------------------------------------------------
+
+def gla_chunked(qh, k, v, a, s0, *, chunk: int = 32):
+    """q/k/v: (B,S,H,P) f32; a: (B,S,H,P) gate in (0,1]; s0: (B,H,P,P).
+    Matches gla._gla_scan:  S_t = diag(a_t) S_{t-1} + k⊗v,  y_t = q_t · S_t
+    (current token's k⊗v enters undecayed — the inclusive-decay variant of
+    the WKV6 form above, with no u-bonus)."""
+    b, s, h, p = qh.shape
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+
+    la = jnp.log(jnp.maximum(a, 1e-38))                   # (B,S,H,P) <= 0
+    qs, ks, vs, las = (_chunk(t, q) for t in (qh, k, v, la))
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32))         # causal incl diag
+
+    def body(s_in, inp):
+        qc, kc, vc, lac = inp                             # (B,Q,H,P)
+        L = jnp.cumsum(lac, axis=1)                       # (B,Q,H,P) inclusive
+        Lq = L[:, -1:]                                    # (B,1,H,P)
+        # y_t intra = Σ_{s<=t} Σ_p q_t[p] exp(L[t,p]-L[s,p]) k_s[p] v_s;
+        # mid-chunk reference bounds each factor's exponent (see WKV6 note)
+        Lref = jax.lax.stop_gradient(L[:, L.shape[1] // 2:L.shape[1] // 2 + 1])
+        q_sc = qc * jnp.exp(jnp.clip(L - Lref, -CLAMP, CLAMP))
+        k_sc = kc * jnp.exp(jnp.clip(Lref - L, -CLAMP, CLAMP))
+        scores = jnp.einsum("bthp,bshp->bhts", q_sc, k_sc)
+        scores = scores * tri[None, None]                 # s <= t
+        y_intra = jnp.einsum("bhts,bshp->bthp", scores, vc)
+        # inter-chunk: y_t += q_t · diag(exp(L_t)) S_in
+        q_in = qc * jnp.exp(jnp.clip(L, -CLAMP, 0))
+        y_inter = jnp.einsum("bthp,bhpz->bthz", q_in, s_in)
+        # state: S_out = diag(exp(Lq)) S_in + Σ_s diag(exp(Lq-L_s)) k_s ⊗ v_s
+        k_out = kc * jnp.exp(jnp.clip(Lq - L, -CLAMP, 0))
+        s_out = (jnp.exp(jnp.clip(Lq, -CLAMP, 0))[:, 0, :, :, None] * s_in
+                 + jnp.einsum("bshp,bshz->bhpz", k_out, vc))
+        return s_out, y_intra + y_inter
+
+    s_final, ys = jax.lax.scan(body, s0, (qs, ks, vs, las))
+    return ys.swapaxes(0, 1).reshape(b, s, h, p), s_final

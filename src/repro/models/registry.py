@@ -1,23 +1,106 @@
 """Model registry: one uniform interface over every architecture family.
 
-    model = get_model(cfg)
+    model = get_model(cfg)                      # cfg or arch-id string
     params = model.init(key)                    # real arrays (smoke/training)
     aparams = model.abstract()                  # ShapeDtypeStructs (dry-run)
     names = model.names()                       # logical-name strings (sharding)
     logits, aux = model.apply(params, batch)    # full-sequence forward
     logits, cache = model.decode(params, cache, batch)
+
+Serving surface (launch/engine.py, DESIGN.md §13): each family publishes the
+sequence-cache protocols it serves through, keyed by kind:
+
+    "paged"  PagedSeqCache  — block-table pool over (num_blocks, block_size)
+                              rows; grows per token, supports sharing/COW.
+    "slot"   SlotStateCache — fixed-size per-slot state; the slot swap IS the
+                              allocator (no paging, no block tables).
+
+plus a capability set (CAP_*) telling the engine which features apply
+(speculation, prefix cache, int8 KV, state snapshot, encoder prefill) and one
+`serving_step(params, caches, tokens, lengths, n_new, block_tables)` that
+threads every cache the family declared through one jitted call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import warnings
+from typing import Any, Callable, Dict, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import params as PT
+from repro.models import gla, params as PT
 from repro.models import rwkv6, transformer, whisper, zamba2
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, get_config
+
+# --- capabilities ------------------------------------------------------------
+
+CAP_PAGED = "paged"              # serves through a PagedSeqCache block pool
+CAP_SLOT_STATE = "slot_state"    # serves through fixed-size per-slot state
+CAP_SPECULATIVE = "speculative"  # width-(k+1) verify over the paged pool
+CAP_PREFIX_CACHE = "prefix_cache"  # content-hashed block sharing + COW
+CAP_INT8_KV = "int8_kv"          # smoothed int8 block pool (DESIGN.md §9)
+CAP_SNAPSHOT = "snapshot"        # preemption snapshots/restores slot state
+CAP_ENCODER = "encoder"          # encoder pass at admission (second prefill)
+
+_TRANSFORMER_CAPS = frozenset(
+    {CAP_PAGED, CAP_SPECULATIVE, CAP_PREFIX_CACHE, CAP_INT8_KV})
+_RECURRENT_CAPS = frozenset({CAP_SLOT_STATE, CAP_SNAPSHOT})
+
+FAMILY_CAPS: Dict[str, frozenset] = {
+    "dense": _TRANSFORMER_CAPS,
+    "moe": _TRANSFORMER_CAPS,
+    "vlm": _TRANSFORMER_CAPS,
+    "rwkv": _RECURRENT_CAPS,
+    "linear_attn": _RECURRENT_CAPS,
+    # hybrid threads BOTH caches through one step; its paged pool rows are
+    # recomputable from tokens, but its ssm/conv state is not snapshot-swapped
+    # (preemption recomputes, like a pure transformer)
+    "hybrid": frozenset({CAP_PAGED, CAP_SLOT_STATE}),
+    # encoder-decoder: self-KV and cross-KV both live in per-slot state
+    "audio": frozenset({CAP_SLOT_STATE, CAP_SNAPSHOT, CAP_ENCODER}),
+}
+
+
+def family_capabilities(family: str) -> frozenset:
+    if family not in FAMILY_CAPS:
+        raise ValueError(
+            f"unknown model family {family!r}; registered families: "
+            f"{', '.join(sorted(FAMILY_CAPS))}")
+    return FAMILY_CAPS[family]
+
+
+def arch_capabilities(arch_id: str) -> frozenset:
+    """Capability set for a registered arch id (ValueError when unknown)."""
+    return family_capabilities(get_config(arch_id).family)
+
+
+# --- sequence-cache protocols ------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedSeqCache:
+    """Block-table KV pool: rows of (num_blocks, block_size) pages.
+
+    init(cfg, num_blocks, block_size, kv_dtype) -> pool pytree. The engine
+    owns allocation (BlockAllocator), sharing, and copy-on-write.
+    """
+    init: Callable
+    names: Mapping[str, str]
+    kind: str = dataclasses.field(default="paged", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotStateCache:
+    """Fixed-size per-slot sequence state (axis 1 of every leaf = slot).
+
+    init(cfg, num_slots, max_seq) -> state pytree. There is no allocator:
+    admitting a request resets its slot; preemption (when `snapshot`) swaps
+    the slot's state out/in instead of recomputing.
+    """
+    init: Callable
+    names: Mapping[str, str]
+    snapshot: bool = True
+    kind: str = dataclasses.field(default="slot", init=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,15 +112,13 @@ class Model:
     _init_cache: Callable
     _abstract_cache: Callable
     cache_names: Dict[str, str]
-    # paged serving path (continuous-batching engine, DESIGN.md §5);
-    # None for families without it (rwkv/hybrid carry recurrent state, not a
-    # growable KV cache, so slot-paging does not apply to them)
-    _paged_decode: Optional[Callable] = None
-    _init_paged_cache: Optional[Callable] = None
-    paged_cache_names: Optional[Dict[str, str]] = None
-    # multi-token verification over the paged cache (speculative decoding,
-    # DESIGN.md §8): same trunk as _paged_decode, logits at every position
-    _paged_verify: Optional[Callable] = None
+    # serving surface (DESIGN.md §13): cache protocols by kind + one step fn
+    # threading all of them; verify is a paged-only capability.
+    seq_caches: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    capabilities: frozenset = frozenset()
+    _serving_step: Optional[Callable] = None
+    _serving_verify: Optional[Callable] = None
+    _encode_prefill: Optional[Callable] = None
 
     def init(self, key: jax.Array):
         return PT.init_params(key, self.table, self.cfg.jnp_dtype)
@@ -63,32 +144,101 @@ class Model:
     def param_count(self) -> int:
         return PT.param_count(self.table)
 
-    # --- paged serving path (launch/engine.py) -----------------------------
+    # --- serving surface (launch/engine.py) --------------------------------
+
+    def supports(self, cap: str) -> bool:
+        return cap in self.capabilities
+
+    def init_seq_caches(self, *, num_blocks: int, block_size: int,
+                        num_slots: int, max_seq: int,
+                        kv_dtype: Optional[str] = None) -> Dict[str, Any]:
+        """Instantiate every cache this family serves through, keyed by kind."""
+        caches: Dict[str, Any] = {}
+        if "paged" in self.seq_caches:
+            caches["paged"] = self.seq_caches["paged"].init(
+                self.cfg, num_blocks, block_size, kv_dtype)
+        if "slot" in self.seq_caches:
+            caches["slot"] = self.seq_caches["slot"].init(
+                self.cfg, num_slots, max_seq)
+        return caches
+
+    def serving_step(self, params, caches: Dict[str, Any], tokens, lengths,
+                     n_new, block_tables):
+        """One engine step: (logits at last valid position, updated caches)."""
+        assert self._serving_step is not None, (
+            f"{self.cfg.family}: no serving step")
+        return self._serving_step(params, caches, tokens, lengths, n_new,
+                                  block_tables, self.cfg)
+
+    def serving_verify(self, params, caches: Dict[str, Any], tokens, lengths,
+                       n_new, block_tables):
+        """Logits at every position (speculative verify; paged-only)."""
+        assert self._serving_verify is not None, (
+            f"{self.cfg.family}: no serving verify")
+        return self._serving_verify(params, caches, tokens, lengths, n_new,
+                                    block_tables, self.cfg)
+
+    def encode_prefill(self, params, frames):
+        """Encoder pass for one request -> per-slot cross state (CAP_ENCODER)."""
+        assert self._encode_prefill is not None, (
+            f"{self.cfg.family}: no encoder prefill")
+        return self._encode_prefill(params, frames, self.cfg)
+
+    # --- deprecated pre-§13 paged surface (one release of shims) -----------
+
+    @property
+    def paged_cache_names(self) -> Optional[Dict[str, str]]:
+        proto = self.seq_caches.get("paged")
+        return dict(proto.names) if proto is not None else None
 
     def supports_paging(self) -> bool:
-        return self._paged_decode is not None
+        warnings.warn(
+            "Model.supports_paging() is deprecated; check "
+            "'paged' in model.capabilities (DESIGN.md §13)",
+            DeprecationWarning, stacklevel=2)
+        return CAP_PAGED in self.capabilities
 
     def init_paged_cache(self, num_blocks: int, block_size: int,
                          kv_dtype: Optional[str] = None):
-        """kv_dtype: "float" | "int8" (quantized block pool, DESIGN.md §9);
-        None resolves from cfg.kv_cache_dtype."""
-        assert self.supports_paging(), f"{self.cfg.family}: no paged decode"
-        return self._init_paged_cache(self.cfg, num_blocks, block_size,
-                                      kv_dtype)
+        warnings.warn(
+            "Model.init_paged_cache() is deprecated; use "
+            "model.init_seq_caches(...)['paged'] (DESIGN.md §13)",
+            DeprecationWarning, stacklevel=2)
+        assert CAP_PAGED in self.capabilities, (
+            f"{self.cfg.family}: no paged decode")
+        return self.seq_caches["paged"].init(self.cfg, num_blocks, block_size,
+                                             kv_dtype)
 
     def paged_decode(self, params, cache, tokens, lengths, n_new, block_tables):
-        assert self.supports_paging(), f"{self.cfg.family}: no paged decode"
-        return self._paged_decode(params, cache, tokens, lengths, n_new,
-                                  block_tables, self.cfg)
+        warnings.warn(
+            "Model.paged_decode() is deprecated; use model.serving_step() "
+            "with a caches dict (DESIGN.md §13)",
+            DeprecationWarning, stacklevel=2)
+        assert CAP_PAGED in self.capabilities, (
+            f"{self.cfg.family}: no paged decode")
+        logits, caches = self._serving_step(
+            params, {"paged": cache}, tokens, lengths, n_new, block_tables,
+            self.cfg)
+        return logits, caches["paged"]
 
     def supports_speculation(self) -> bool:
-        return self._paged_verify is not None
+        warnings.warn(
+            "Model.supports_speculation() is deprecated; check "
+            "'speculative' in model.capabilities (DESIGN.md §13)",
+            DeprecationWarning, stacklevel=2)
+        return CAP_SPECULATIVE in self.capabilities
 
     def paged_verify(self, params, cache, tokens, lengths, n_new, block_tables):
-        assert self.supports_speculation(), (
+        warnings.warn(
+            "Model.paged_verify() is deprecated; use model.serving_verify() "
+            "with a caches dict (DESIGN.md §13)",
+            DeprecationWarning, stacklevel=2)
+        assert CAP_SPECULATIVE in self.capabilities, (
             f"{self.cfg.family}: no paged verify")
-        return self._paged_verify(params, cache, tokens, lengths, n_new,
-                                  block_tables, self.cfg)
+        logits, caches = self._serving_verify(
+            params, {"paged": cache}, tokens, lengths, n_new, block_tables,
+            self.cfg)
+        return logits, caches["paged"]
 
 
 # --- family adapters ---------------------------------------------------------
@@ -114,6 +264,14 @@ def _rwkv_decode(params, cache, batch, cfg):
     return rwkv6.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
 
 
+def _gla_apply(params, batch, cfg):
+    return gla.forward(params, batch["tokens"], cfg)
+
+
+def _gla_decode(params, cache, batch, cfg):
+    return gla.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
+
+
 def _zamba_apply(params, batch, cfg):
     return zamba2.forward(params, batch["tokens"], cfg)
 
@@ -130,6 +288,25 @@ def _whisper_decode(params, cache, batch, cfg):
     return whisper.decode_step(params, cache, batch["tokens"], batch["pos"], cfg)
 
 
+def _dense_serving_step(params, caches, tokens, lengths, n_new, block_tables,
+                        cfg):
+    logits, pool = transformer.paged_decode_step(
+        params, caches["paged"], tokens, lengths, n_new, block_tables, cfg)
+    return logits, {"paged": pool}
+
+
+def _dense_serving_verify(params, caches, tokens, lengths, n_new, block_tables,
+                          cfg):
+    logits, pool = transformer.paged_verify_step(
+        params, caches["paged"], tokens, lengths, n_new, block_tables, cfg)
+    return logits, {"paged": pool}
+
+
+_TRANSFORMER_SEQ_CACHES = {
+    "paged": PagedSeqCache(init=transformer.init_paged_cache,
+                           names=transformer.PAGED_CACHE_NAMES),
+}
+
 _FAMILIES = {
     "dense": (transformer.param_table, _dense_apply, _dense_decode,
               transformer.init_cache, transformer.abstract_cache, transformer.CACHE_NAMES),
@@ -139,25 +316,57 @@ _FAMILIES = {
             transformer.init_cache, transformer.abstract_cache, transformer.CACHE_NAMES),
     "rwkv": (rwkv6.param_table, _rwkv_apply, _rwkv_decode,
              rwkv6.init_cache, rwkv6.abstract_cache, rwkv6.CACHE_NAMES),
+    "linear_attn": (gla.param_table, _gla_apply, _gla_decode,
+                    gla.init_cache, gla.abstract_cache, gla.CACHE_NAMES),
     "hybrid": (zamba2.param_table, _zamba_apply, _zamba_decode,
                zamba2.init_cache, zamba2.abstract_cache, zamba2.CACHE_NAMES),
     "audio": (whisper.param_table, _whisper_apply, _whisper_decode,
               whisper.init_cache, whisper.abstract_cache, whisper.CACHE_NAMES),
 }
 
-# families whose KV cache pages (decoder-only transformer stacks)
-_PAGED_FAMILIES = {"dense", "moe", "vlm"}
+# per-family serving wiring: (seq_caches, serving_step, serving_verify, encode)
+_SERVING = {
+    "dense": (_TRANSFORMER_SEQ_CACHES, _dense_serving_step,
+              _dense_serving_verify, None),
+    "moe": (_TRANSFORMER_SEQ_CACHES, _dense_serving_step,
+            _dense_serving_verify, None),
+    "vlm": (_TRANSFORMER_SEQ_CACHES, _dense_serving_step,
+            _dense_serving_verify, None),
+    "rwkv": ({"slot": SlotStateCache(init=rwkv6.init_slot_state,
+                                     names=rwkv6.SLOT_STATE_NAMES)},
+             rwkv6.serving_step, None, None),
+    "linear_attn": ({"slot": SlotStateCache(init=gla.init_slot_state,
+                                            names=gla.SLOT_STATE_NAMES)},
+                    gla.serving_step, None, None),
+    "hybrid": ({"paged": PagedSeqCache(init=zamba2.init_paged_cache,
+                                       names=zamba2.PAGED_CACHE_NAMES),
+                "slot": SlotStateCache(init=zamba2.init_slot_state,
+                                       names=zamba2.SLOT_STATE_NAMES,
+                                       snapshot=False)},
+               zamba2.serving_step, None, None),
+    "audio": ({"slot": SlotStateCache(init=whisper.init_slot_state,
+                                      names=whisper.SLOT_STATE_NAMES)},
+              whisper.serving_step, None, whisper.encode_prefill),
+}
 
 
-def get_model(cfg: ModelConfig) -> Model:
+def get_model(cfg: Union[ModelConfig, str]) -> Model:
+    """Build the uniform Model for a config (or a registered arch-id string)."""
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)   # ValueError naming arch + registered archs
+    if cfg.family not in _FAMILIES:
+        raise ValueError(
+            f"unknown model family {cfg.family!r} (arch {cfg.arch_id!r}); "
+            f"registered families: {', '.join(sorted(_FAMILIES))}")
     table_fn, apply_fn, decode_fn, ic, ac, cn = _FAMILIES[cfg.family]
-    paged = cfg.family in _PAGED_FAMILIES
+    seq_caches, step_fn, verify_fn, encode_fn = _SERVING[cfg.family]
     return Model(
         cfg, table_fn(cfg), apply_fn, decode_fn, ic, ac, cn,
-        _paged_decode=transformer.paged_decode_step if paged else None,
-        _init_paged_cache=transformer.init_paged_cache if paged else None,
-        paged_cache_names=transformer.PAGED_CACHE_NAMES if paged else None,
-        _paged_verify=transformer.paged_verify_step if paged else None)
+        seq_caches=dict(seq_caches),
+        capabilities=family_capabilities(cfg.family),
+        _serving_step=step_fn,
+        _serving_verify=verify_fn,
+        _encode_prefill=encode_fn)
 
 
 # --- loss ---------------------------------------------------------------------

@@ -30,6 +30,7 @@ from repro.models import params as PT
 from repro.models.config import ModelConfig
 from repro.models.layers import linear, rmsnorm
 from repro.models.linear_attn import wkv6_chunked
+from repro.models.slot_state import gather_last_logits, mask_slot_state
 
 D = PT.ParamDecl
 LORA = 64
@@ -204,3 +205,55 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
     logits = x @ params["lm_head"].astype(x.dtype)
     new_cache = {"wkv": wkvs, "x_tm": xtms, "x_cm": xcms, "pos": pos + 1}
     return logits[:, -1], new_cache
+
+
+# --- serving: fixed-size per-slot state (launch/engine.py, DESIGN.md §13) ----
+
+def init_slot_state(cfg: ModelConfig, num_slots: int, max_seq: int):
+    H, P, d, L = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model, cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, num_slots, H, P, P), jnp.float32),
+        "x_tm": jnp.zeros((L, num_slots, d), cfg.jnp_dtype),
+        "x_cm": jnp.zeros((L, num_slots, d), cfg.jnp_dtype),
+    }
+
+
+SLOT_STATE_NAMES = {"wkv": "layers,slots,rwkv_heads,.,.",
+                    "x_tm": "layers,slots,.", "x_cm": "layers,slots,."}
+
+
+def _state_step(params, state, tok, cfg: ModelConfig):
+    """One token for every slot: tok (slots, 1) -> (logits (slots, V), state)."""
+    x = params["embed"].astype(cfg.jnp_dtype)[tok]
+
+    def body(x, layer):
+        p, wkv, x_tm, x_cm = layer
+        h, st = time_mix(p["tm"], rmsnorm(x, p["ln_tm"]["scale"]), cfg, (wkv, x_tm))
+        x = x + h
+        h, cm_prev = channel_mix(p["cm"], rmsnorm(x, p["ln_cm"]["scale"]), cfg, x_cm)
+        return x + h, (st[0], st[1], cm_prev)
+
+    x, (wkvs, xtms, xcms) = jax.lax.scan(
+        body, x, (params["blocks"], state["wkv"], state["x_tm"], state["x_cm"]))
+    x = rmsnorm(x, params["ln_final"]["scale"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits[:, -1], {"wkv": wkvs, "x_tm": xtms, "x_cm": xcms}
+
+
+def serving_step(params, caches, tokens, lengths, n_new, block_tables,
+                 cfg: ModelConfig):
+    """Engine step over a (slots, T) window: per-token scan so the exact
+    sequential WKV recurrence runs (bit-equal to solo decode; the chunked
+    form needs s > 1 and never triggers); rows past their request's n_new
+    keep their state unchanged."""
+    del lengths, block_tables   # positionless recurrence, no paging
+    state = caches["slot"]
+    T = tokens.shape[1]
+
+    def step(state, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        logits, new = _state_step(params, state, tok, cfg)
+        return mask_slot_state(new, state, t < n_new), logits
+
+    state, logits = jax.lax.scan(step, state, jnp.arange(T))
+    return gather_last_logits(logits, n_new), {"slot": state}

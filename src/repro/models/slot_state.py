@@ -1,0 +1,32 @@
+"""Shared helpers for SlotStateCache serving steps (DESIGN.md §13).
+
+Slot-state leaves put the slot axis at position 1 — (layers, slots, ...) —
+mirroring the paged pools' (layers, blocks, ...) layout so the same sharding
+rules and engine-side per-slot swap code apply across families.
+
+Recurrent families serve a (slots, T) token window by scanning one token at a
+time: width-1 steps run the exact sequential recurrences (the chunked
+block-parallel forms in linear_attn.py require s > 1 and never trigger), so
+engine decode is bit-equal to solo token-by-token decode by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_slot_state(new, old, active):
+    """Keep `new` per-slot leaves where `active` (bool, shape (slots,)); slots
+    past their request's token count must hold their state bit-exactly."""
+    def pick(n, o):
+        m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n.astype(o.dtype), o)
+    return jax.tree_util.tree_map(pick, new, old)
+
+
+def gather_last_logits(logits_tsv: jax.Array, n_new: jax.Array) -> jax.Array:
+    """Stacked per-token logits (T, slots, V) -> logits at each slot's last
+    valid position (slots, V); inactive slots (n_new == 0) read position 0."""
+    idx = jnp.maximum(n_new - 1, 0)
+    bsv = jnp.moveaxis(logits_tsv, 0, 1)
+    return jnp.take_along_axis(bsv, idx[:, None, None], axis=1)[:, 0]

@@ -20,7 +20,7 @@ import numpy as np
 from repro.distributed.sharding import maybe_shard
 from repro.models import params as PT
 from repro.models.config import ModelConfig
-from repro.models.layers import attention, linear, layernorm
+from repro.models.layers import _attn_chunk, attention, linear, layernorm
 
 D = PT.ParamDecl
 
@@ -303,3 +303,87 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
     if int8:
         new_cache["k_scale"], new_cache["v_scale"] = kss, vss
     return logits[:, -1], new_cache
+
+
+# --- serving: per-slot state, encoder as a second prefill shape --------------
+# (launch/engine.py, DESIGN.md §13) Encoder-decoder serving keeps BOTH KV
+# kinds in SlotStateCache leaves: decoder self-KV indexed by per-slot write
+# positions, and cross-KV written once per request at admission by
+# `encode_prefill` (the engine's "encode" trace — a second prefill shape).
+
+def init_slot_state(cfg: ModelConfig, num_slots: int, max_seq: int):
+    L, nh, hd = cfg.n_layers, cfg.n_heads_eff, cfg.hd
+    f = cfg.jnp_dtype
+    return {
+        "k": jnp.zeros((L, num_slots, max_seq, nh, hd), f),
+        "v": jnp.zeros((L, num_slots, max_seq, nh, hd), f),
+        "ck": jnp.zeros((L, num_slots, cfg.enc_seq, nh, hd), f),
+        "cv": jnp.zeros((L, num_slots, cfg.enc_seq, nh, hd), f),
+    }
+
+
+SLOT_STATE_NAMES = {
+    "k": "layers,slots,seq_kv,kv,.", "v": "layers,slots,seq_kv,kv,.",
+    "ck": "layers,slots,enc_seq,kv,.", "cv": "layers,slots,enc_seq,kv,.",
+}
+
+
+def encode_prefill(params, frames: jax.Array, cfg: ModelConfig):
+    """One request's encoder pass: frames (1, enc_seq, d) -> per-slot cross
+    K/V, each (L, enc_seq, nh, hd). Run once at admission."""
+    enc_out = encode(params, frames, cfg)
+    ks, vs = build_cross_cache(params, enc_out, cfg)
+    return ks[:, 0], vs[:, 0]
+
+
+def serving_step(params, caches, tokens, lengths, n_new, block_tables,
+                 cfg: ModelConfig):
+    """Engine step over a (slots, T) decoder window. No recurrence — one
+    ragged-attention pass: per-slot positions index the learned pos table and
+    the self-KV write sites (invalid tokens scatter out of range and drop)."""
+    del block_tables
+    state = caches["slot"]
+    dec = params["dec"]
+    s_slots, t = tokens.shape
+    nh, hd = cfg.n_heads_eff, cfg.hd
+    max_seq = state["k"].shape[2]
+
+    pos = lengths[:, None] + jnp.arange(t)[None]            # (S, T) absolute
+    valid = jnp.arange(t)[None] < n_new[:, None]
+    wpos = jnp.where(valid, pos, max_seq)                   # OOB -> dropped
+    slot_ix = jnp.arange(s_slots)[:, None]
+    k_pos = jnp.arange(max_seq)
+    k_len = lengths + n_new
+    scale = 1.0 / np.sqrt(hd)
+
+    x = dec["embed"].astype(cfg.jnp_dtype)[tokens]
+    x = x + dec["pos_embed"][jnp.where(valid, pos, 0)].astype(x.dtype)
+
+    def body(x, layer):
+        p, kc, vc, ck, cv = layer                           # kc (S, max_seq, nh, hd)
+        h = layernorm(x, p["ln_self"]["scale"], p["ln_self"]["bias"])
+        q = linear(h, p["self_attn"]["wq"]).reshape(s_slots, t, nh, hd)
+        k = linear(h, p["self_attn"]["wk"]).reshape(s_slots, t, nh, hd)
+        v = linear(h, p["self_attn"]["wv"]).reshape(s_slots, t, nh, hd)
+        kc = kc.at[slot_ix, wpos].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[slot_ix, wpos].set(v.astype(vc.dtype), mode="drop")
+        o = _attn_chunk(q, kc, vc, pos, k_pos, causal=True, window=0,
+                        softcap=0.0, scale=scale, k_len=k_len)
+        x = x + linear(o.reshape(s_slots, t, nh * hd), p["self_attn"]["wo"])
+        h = layernorm(x, p["ln_cross"]["scale"], p["ln_cross"]["bias"])
+        q = linear(h, p["cross_attn"]["wq"]).reshape(s_slots, t, nh, hd)
+        o = _attn_chunk(q, ck, cv, pos, jnp.arange(ck.shape[1]), causal=False,
+                        window=0, softcap=0.0, scale=scale)
+        x = x + linear(o.reshape(s_slots, t, nh * hd), p["cross_attn"]["wo"])
+        h = layernorm(x, p["ln_mlp"]["scale"], p["ln_mlp"]["bias"])
+        return x + _gelu_mlp(p["mlp"], h), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (dec["blocks"], state["k"], state["v"], state["ck"],
+                  state["cv"]))
+    p = dec["ln_final"]
+    x = layernorm(x, p["scale"], p["bias"])
+    last = jnp.take_along_axis(x, jnp.maximum(n_new - 1, 0)[:, None, None],
+                               axis=1)[:, 0]
+    logits = last @ dec["embed"].astype(last.dtype).T
+    return logits, {"slot": dict(state, k=ks, v=vs)}

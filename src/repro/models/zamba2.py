@@ -30,8 +30,10 @@ import jax.numpy as jnp
 from repro.distributed.sharding import maybe_shard
 from repro.models import params as PT
 from repro.models.config import ModelConfig
-from repro.models.layers import attn_block, linear, mlp_block, rmsnorm
+from repro.models.layers import (attn_block, linear, mlp_block,
+                                 paged_attn_block, rmsnorm)
 from repro.models.linear_attn import ssd_chunked
+from repro.models.slot_state import gather_last_logits, mask_slot_state
 from repro.models.transformer import _attn_table, _mlp_table
 
 D = PT.ParamDecl
@@ -255,3 +257,99 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
         "pos": pos + 1,
     }
     return logits[:, -1], new_cache
+
+
+# --- serving: hybrid — BOTH cache protocols through one step -----------------
+# (launch/engine.py, DESIGN.md §13) The mamba backbone's ssm/conv state lives
+# in a SlotStateCache; the shared-attention sites keep per-site paged KV pools
+# driven by the engine's block tables, exactly like a transformer layer.
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     kv_dtype=None):
+    if kv_dtype not in (None, "float"):
+        raise ValueError(
+            f"hybrid paged pool supports kv_dtype='float' only, got {kv_dtype!r}"
+            " (no int8_kv capability)")
+    shape = (n_sites(cfg), num_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.jnp_dtype),
+            "v": jnp.zeros(shape, cfg.jnp_dtype)}
+
+
+PAGED_CACHE_NAMES = {"k": "sites,blocks,.,kv,.", "v": "sites,blocks,.,kv,."}
+
+
+def init_slot_state(cfg: ModelConfig, num_slots: int, max_seq: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    L, di, K = cfg.n_layers, cfg.d_inner, cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((L, num_slots, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, num_slots, K - 1, di), cfg.jnp_dtype),
+    }
+
+
+SLOT_STATE_NAMES = {"ssm": "layers,slots,ssm_heads,.,.",
+                    "conv": "layers,slots,.,ssm_inner"}
+
+
+def serving_step(params, caches, tokens, lengths, n_new, block_tables,
+                 cfg: ModelConfig):
+    """Engine step over a (slots, T) window. Per-token scan: mamba layers run
+    the exact sequential SSD recurrence on slot state, shared-attention sites
+    read/write their paged pools through the block tables (width 1 per token,
+    so pool writes land at lengths + t for the t-th valid token)."""
+    state, pool = caches["slot"], caches["paged"]
+    per = max(cfg.attn_period, 1)
+    sites = n_sites(cfg)
+    blocks = params["blocks"]
+    shared = params["shared"]
+    T = tokens.shape[1]
+
+    def mamba_body(x, layer):
+        p, s_ssm, s_conv = layer
+        h, st = mamba_block(p, rmsnorm(x, p["ln"]["scale"]), cfg, (s_ssm, s_conv))
+        return x + h, st
+
+    def tok_body(carry, t):
+        state, pool = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)   # (S, 1)
+        active = t < n_new
+        len_t = lengths + t
+        act1 = active.astype(lengths.dtype)
+        x = params["embed"].astype(cfg.jnp_dtype)[tok]
+
+        new_ssm, new_conv, new_k, new_v = [], [], [], []
+        for seg in range(sites):
+            sl = slice(seg * per, (seg + 1) * per)
+            seg_layers = (jax.tree_util.tree_map(lambda a: a[sl], blocks),
+                          state["ssm"][sl], state["conv"][sl])
+            x, (s_ssm, s_conv) = jax.lax.scan(mamba_body, x, seg_layers)
+            new_ssm.append(s_ssm)
+            new_conv.append(s_conv)
+            h = rmsnorm(x, shared["ln_attn"]["scale"])
+            a, kc, vc = paged_attn_block(
+                shared["attn"], h, cfg, layer_window=0,
+                kc=pool["k"][seg], vc=pool["v"][seg],
+                block_tables=block_tables, lengths=len_t, n_new=act1)
+            x = x + a
+            h = rmsnorm(x, shared["ln_mlp"]["scale"])
+            x = x + mlp_block(shared["mlp"], h, cfg)
+            new_k.append(kc)
+            new_v.append(vc)
+        rem = cfg.n_layers - sites * per
+        if rem:
+            seg_layers = (jax.tree_util.tree_map(lambda a: a[-rem:], blocks),
+                          state["ssm"][-rem:], state["conv"][-rem:])
+            x, (s_ssm, s_conv) = jax.lax.scan(mamba_body, x, seg_layers)
+            new_ssm.append(s_ssm)
+            new_conv.append(s_conv)
+
+        new_state = {"ssm": jnp.concatenate(new_ssm, axis=0),
+                     "conv": jnp.concatenate(new_conv, axis=0)}
+        state = mask_slot_state(new_state, state, active)
+        pool = {"k": jnp.stack(new_k, axis=0), "v": jnp.stack(new_v, axis=0)}
+        x = rmsnorm(x, params["ln_final"]["scale"])
+        logits = (x @ params["lm_head"].astype(x.dtype))[:, -1]    # (S, V)
+        return (state, pool), logits
+
+    (state, pool), logits = jax.lax.scan(tok_body, (state, pool), jnp.arange(T))
+    return gather_last_logits(logits, n_new), {"slot": state, "paged": pool}

@@ -1,0 +1,223 @@
+"""Capability-typed cache protocols (DESIGN.md §13): the registry surface.
+
+Pins the engine↔model contract introduced by the §13 redesign:
+
+* every family declares its sequence-cache protocols (`PagedSeqCache` /
+  `SlotStateCache`) and a capability set, and the two agree;
+* unknown arch / family lookups raise `ValueError` naming what was asked
+  for AND what is registered (exact message shape pinned);
+* `EngineConfig(arch=...)` validates capability-dependent knobs eagerly,
+  with the missing capability named in the error;
+* the pre-§13 paged surface survives one release as DeprecationWarning
+  shims that forward to the protocol path;
+* every slot-state leaf's logical sharding names resolve against
+  DEFAULT_RULES (so the dry-run mesh can shard serving state).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import DEFAULT_RULES, parse_names
+from repro.launch.engine import EngineConfig
+from repro.models import params as PT
+from repro.models.config import get_config, list_archs, reduced
+from repro.models.registry import (CAP_PAGED, CAP_SLOT_STATE, CAP_SNAPSHOT,
+                                   FAMILY_CAPS, arch_capabilities,
+                                   family_capabilities, get_model)
+
+ZOO = {
+    "llama2-7b": ("dense", {"paged"}),
+    "rwkv6-1.6b": ("rwkv", {"slot"}),
+    "gla-1.3b": ("linear_attn", {"slot"}),
+    "zamba2-1.2b": ("hybrid", {"paged", "slot"}),
+    "whisper-large-v3": ("audio", {"slot"}),
+}
+
+
+# --- protocol surface --------------------------------------------------------
+
+@pytest.mark.parametrize("arch", sorted(ZOO))
+def test_declared_caches_match_capabilities(arch):
+    family, kinds = ZOO[arch]
+    model = get_model(reduced(get_config(arch)))
+    assert set(model.seq_caches) == kinds
+    assert model.capabilities == FAMILY_CAPS[family]
+    assert model.supports(CAP_PAGED) == ("paged" in kinds)
+    assert model.supports(CAP_SLOT_STATE) == ("slot" in kinds)
+    # a declared cache always has init + names; slot protocols also declare
+    # whether preemption may snapshot-swap them
+    for kind, proto in model.seq_caches.items():
+        assert proto.kind == kind
+        assert callable(proto.init)
+        assert proto.names
+    if "slot" in kinds:
+        snap = model.seq_caches["slot"].snapshot
+        assert snap == (CAP_SNAPSHOT in model.capabilities)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "gla-1.3b", "zamba2-1.2b",
+                                  "whisper-large-v3"])
+def test_slot_state_slot_axis_and_names(arch):
+    """Every slot-state leaf carries the slot axis at position 1, and its
+    logical sharding names resolve against DEFAULT_RULES."""
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    caches = model.init_seq_caches(num_blocks=8, block_size=4, num_slots=3,
+                                   max_seq=16)
+    state = caches["slot"]
+    names = model.seq_caches["slot"].names
+    assert set(state) == set(names)
+    for leaf_name, arr in state.items():
+        assert arr.shape[1] == 3, (arch, leaf_name, arr.shape)
+        logical = parse_names(names[leaf_name])
+        assert len(logical) == arr.ndim, (arch, leaf_name)
+        assert logical[1] == "slots"
+        for dim in logical:
+            assert dim is None or dim in DEFAULT_RULES, (arch, leaf_name, dim)
+
+
+def test_hybrid_paged_pool_names_resolve():
+    cfg = reduced(get_config("zamba2-1.2b"))
+    model = get_model(cfg)
+    caches = model.init_seq_caches(num_blocks=8, block_size=4, num_slots=2,
+                                   max_seq=16)
+    names = model.seq_caches["paged"].names
+    for leaf_name, arr in caches["paged"].items():
+        logical = parse_names(names[leaf_name])
+        assert len(logical) == arr.ndim
+        for dim in logical:
+            assert dim is None or dim in DEFAULT_RULES, (leaf_name, dim)
+    # the new §13 logical dims exist as rules (replicated is fine — present
+    # means a later mesh can re-map them without touching model code)
+    assert "sites" in DEFAULT_RULES and "enc_seq" in DEFAULT_RULES
+
+
+def test_hybrid_paged_pool_rejects_int8():
+    cfg = reduced(get_config("zamba2-1.2b"))
+    model = get_model(cfg)
+    with pytest.raises(ValueError, match="kv_dtype='float' only"):
+        model.init_seq_caches(num_blocks=8, block_size=4, num_slots=2,
+                              max_seq=16, kv_dtype="int8")
+
+
+# --- unknown arch / family errors -------------------------------------------
+
+def test_unknown_arch_names_requested_and_registered():
+    with pytest.raises(ValueError) as ei:
+        get_config("frobnicator-9b")
+    msg = str(ei.value)
+    assert "unknown arch 'frobnicator-9b'" in msg
+    assert "registered archs:" in msg
+    for arch in list_archs():
+        assert arch in msg
+
+
+def test_unknown_family_names_requested_and_registered():
+    cfg = dataclasses.replace(reduced(get_config("llama2-7b")),
+                              family="frobnicator")
+    with pytest.raises(ValueError) as ei:
+        get_model(cfg)
+    msg = str(ei.value)
+    assert "unknown model family 'frobnicator'" in msg
+    assert "registered families:" in msg
+    assert "dense" in msg and "audio" in msg
+
+
+def test_family_capabilities_unknown_family():
+    with pytest.raises(ValueError, match="unknown model family 'nope'"):
+        family_capabilities("nope")
+    with pytest.raises(ValueError, match="registered archs"):
+        arch_capabilities("not-an-arch")
+
+
+# --- EngineConfig eager capability validation --------------------------------
+
+def test_engine_config_validates_speculation_against_arch():
+    with pytest.raises(ValueError, match=r"needs the 'speculative' capability"):
+        EngineConfig(speculative_k=2, arch="rwkv6-1.6b")
+    # same knob against a paged arch constructs fine
+    EngineConfig(speculative_k=2, arch="llama2-7b")
+
+
+def test_engine_config_validates_prefix_cache_against_arch():
+    with pytest.raises(ValueError,
+                       match=r"needs the 'prefix_cache' capability"):
+        EngineConfig(prefix_cache=True, arch="gla-1.3b")
+    EngineConfig(prefix_cache=True, arch="qwen2-1.5b")
+
+
+def test_engine_config_validates_int8_kv_against_arch():
+    with pytest.raises(ValueError, match=r"needs the 'int8_kv' capability"):
+        EngineConfig(kv_dtype="int8", arch="whisper-large-v3")
+    EngineConfig(kv_dtype="int8", arch="llama2-7b")
+    # capability errors name the arch's actual capability set
+    with pytest.raises(ValueError, match=r"slot_state"):
+        EngineConfig(kv_dtype="int8", arch="zamba2-1.2b")
+
+
+def test_engine_config_unknown_arch():
+    with pytest.raises(ValueError, match="registered archs"):
+        EngineConfig(arch="frobnicator-9b")
+
+
+# --- deprecation shims -------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_model_params():
+    cfg = reduced(get_config("llama2-7b"))
+    model = get_model(cfg)
+    params = PT.init_params(jax.random.PRNGKey(0), model.table, cfg.jnp_dtype)
+    return model, params
+
+
+def test_supports_paging_shim_warns(dense_model_params):
+    model, _ = dense_model_params
+    with pytest.deprecated_call():
+        assert model.supports_paging() is True
+    with pytest.deprecated_call():
+        assert model.supports_speculation() is True
+    slot_model = get_model(reduced(get_config("rwkv6-1.6b")))
+    with pytest.deprecated_call():
+        assert slot_model.supports_paging() is False
+
+
+def test_init_paged_cache_shim_matches_protocol(dense_model_params):
+    model, _ = dense_model_params
+    with pytest.deprecated_call():
+        old = model.init_paged_cache(8, 4)
+    new = model.init_seq_caches(num_blocks=8, block_size=4, num_slots=1,
+                                max_seq=16)["paged"]
+    assert set(old) == set(new)
+    for k in old:
+        assert old[k].shape == new[k].shape and old[k].dtype == new[k].dtype
+
+
+def test_paged_decode_shim_forwards_to_serving_step(dense_model_params):
+    model, params = dense_model_params
+    pool = model.init_seq_caches(num_blocks=8, block_size=4, num_slots=1,
+                                 max_seq=16)["paged"]
+    tokens = jnp.asarray([[3, 5]], jnp.int32)
+    lengths = jnp.asarray([0], jnp.int32)
+    n_new = jnp.asarray([2], jnp.int32)
+    bt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    with pytest.deprecated_call():
+        lg_old, pool_old = model.paged_decode(params, pool, tokens, lengths,
+                                              n_new, bt)
+    lg_new, caches_new = model.serving_step(params, {"paged": pool}, tokens,
+                                            lengths, n_new, bt)
+    np.testing.assert_array_equal(np.asarray(lg_old), np.asarray(lg_new))
+    for k in pool_old:
+        np.testing.assert_array_equal(np.asarray(pool_old[k]),
+                                      np.asarray(caches_new["paged"][k]))
+
+
+def test_serving_step_asserts_without_wiring():
+    model = get_model(reduced(get_config("rwkv6-1.6b")))
+    with pytest.raises(AssertionError, match="no serving verify"):
+        model.serving_verify(None, {}, None, None, None, None)
+    dense = get_model(reduced(get_config("llama2-7b")))
+    with pytest.raises(AssertionError, match="no encoder prefill"):
+        dense.encode_prefill(None, None)

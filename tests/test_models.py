@@ -125,3 +125,27 @@ def test_full_configs_match_assignment():
     assert get_config("zamba2-1.2b").ssm_state == 64
     assert get_config("gemma2-27b").layer_pattern == "alt_local_global"
     assert get_config("qwen2-1.5b").qkv_bias
+
+
+def test_unknown_arch_error_names_requested_and_registered():
+    """DESIGN.md §13: a typo'd --arch fails with the requested id AND the
+    registered ids in one message (message shape pinned)."""
+    with pytest.raises(ValueError) as ei:
+        get_config("frobnicator-9b")
+    msg = str(ei.value)
+    assert "unknown arch 'frobnicator-9b'" in msg
+    assert "registered archs:" in msg
+    for arch in list_archs():
+        assert arch in msg
+
+
+def test_unknown_family_error_names_requested_and_registered():
+    import dataclasses
+    cfg = dataclasses.replace(reduced(get_config("llama2-7b")),
+                              family="frobnicator")
+    with pytest.raises(ValueError) as ei:
+        get_model(cfg)
+    msg = str(ei.value)
+    assert "unknown model family 'frobnicator'" in msg
+    assert "(arch 'llama2-7b-smoke')" in msg
+    assert "registered families:" in msg
