@@ -229,6 +229,36 @@ def _bench_tenants(model, params, ecfg, smoke: bool) -> dict:
     return {"scheduler": "priority", "weights": weights, "rows": rows}
 
 
+def _bench_tp(model, params, ecfg, smoke: bool) -> dict:
+    """Tensor-parallel lane (DESIGN.md §14): run the hlo_cost layout search
+    over the visible devices, serve the same Poisson traffic on the chosen
+    mesh, and ship the full per-candidate report so the layout decision is
+    auditable from the checked-in JSON. On a 1-device host the search
+    degenerates to scoring the trivial 1x1 mesh — the lane still exercises
+    the sharded placement path (params/pools committed via NamedShardings);
+    CI's forced-8-device lane covers the genuinely partitioned case."""
+    from repro.distributed.layout import choose_layout
+    n_req, max_prompt, gen = (5, 12, 6) if smoke else (16, 64, 32)
+    mesh, layout = choose_layout(model, params, ecfg)
+    eng = ServingEngine(model, params, ecfg, mesh=mesh)
+    workload = _poisson_workload(np.random.default_rng(5), n_req, max_prompt,
+                                 gen, mean_gap_steps=2.0)
+    t0 = eng.clock()
+    reqs = _run_traffic(eng, workload, model.cfg.vocab, seed=7)
+    wall = eng.clock() - t0
+    row = _row_stats(eng, reqs, wall)
+    row["mesh"] = {k: int(v) for k, v in dict(eng.mesh.shape).items()}
+    row["layout"] = layout
+    # the bench-smoke gate: a tp section that stopped serving (or a chooser
+    # that stopped scoring) fails the lane rather than shipping empty JSON
+    assert row["generated_tokens"] > 0, row
+    assert layout["chosen"] in layout["candidates"], layout
+    emit("serving/tp_tokens_per_s", wall * 1e6,
+         f"layout={layout['chosen']};tok_s={row['tokens_per_s']};"
+         f"p50={row['latency_s']['p50']};p99={row['latency_s']['p99']}")
+    return row
+
+
 # non-transformer zoo lane (DESIGN.md §13): every serving cache protocol —
 # pure slot state (rwkv6, gla), hybrid slot+paged (zamba2) and encoder-decoder
 # slot state with an admission-time encode (whisper) — through the SAME engine
@@ -385,6 +415,10 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
     # single-request parity contract asserted for every architecture
     zoo_section = _bench_zoo(smoke)
 
+    # tensor-parallel lane (DESIGN.md §14): layout search + serving on the
+    # chosen mesh; non-emptiness asserted inside
+    tp_section = _bench_tp(dense_eng.model, params, ecfg, smoke)
+
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
         "bench_backend": backend,
@@ -395,7 +429,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
         "dense": dense, "lcd": lcd, "int8_kv": int8_row,
         "prefix_cache": prefix_section, "tenants": tenants_section,
-        "archs": zoo_section,
+        "archs": zoo_section, "tp": tp_section,
         "kv_cache": capacity,
         "lcd_vs_dense_tokens_per_s": round(
             lcd["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3),
@@ -414,6 +448,32 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
     return out
 
 
+def run_mesh(smoke: bool = True, arch: str = "llama2-7b") -> dict:
+    """The `--mesh` lane: ONLY the tensor-parallel section — layout search +
+    serving on the chosen mesh — refreshed into BENCH_serving.json in place
+    (the other sections keep their last full-run values). Pair with
+    `XLA_FLAGS=--xla_force_host_platform_device_count=8` to exercise a real
+    layout search on a CPU host."""
+    ecfg = (EngineConfig(num_slots=3, block_size=4, num_blocks=24,
+                         max_blocks_per_slot=6, prefill_chunk=8) if smoke
+            else EngineConfig(num_slots=8, block_size=16, num_blocks=256,
+                              max_blocks_per_slot=16, prefill_chunk=64))
+    engine, params = build_engine(arch, use_reduced=smoke, lcd=False,
+                                  ecfg=ecfg)
+    tp = _bench_tp(engine.model, params, ecfg, smoke)
+    try:
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        out = {"arch": arch, "smoke": smoke}
+    out["tp"] = tp
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    emit("serving/bench_json", 0.0, f"wrote={os.path.normpath(OUT_PATH)} "
+                                    f"(tp section only)")
+    return tp
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -424,7 +484,17 @@ def main() -> None:
                     choices=("interpret", "compiled"),
                     help="bench lane: interpreter telemetry vs compiled "
                          "wall-clock (DESIGN.md §11)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="run only the tensor-parallel lane (DESIGN.md §14): "
+                         "hlo_cost layout search + serving on the chosen "
+                         "mesh, refreshing the `tp` section of "
+                         "BENCH_serving.json in place")
     args = ap.parse_args()
+    if args.mesh:
+        tp = run_mesh(smoke=args.smoke, arch=args.arch)
+        print(json.dumps({"tp_layout": tp["layout"]["chosen"],
+                          "tokens_per_s": tp["tokens_per_s"]}))
+        return
     out = run(smoke=args.smoke, arch=args.arch, backend=args.backend)
     print(json.dumps({k: out[k] for k in
                       ("lcd_vs_dense_tokens_per_s", "backend", "smoke")}))

@@ -176,6 +176,62 @@ def parse_names(names: str) -> Tuple[Optional[str], ...]:
     return tuple(None if n in (".", "") else n for n in names.split(","))
 
 
+def auto_shard(tree, tree_names, sr: Optional[ShardingRules] = None):
+    """NamedShardings for a whole (possibly LCD-compressed) parameter pytree.
+
+    `tree_names` is the DENSE tree's names pytree (plain comma-joined strings,
+    models/params.py names_tree) — it does not know about compression. A
+    ClusteredTensor leaf (core/api.py) expands into six array children, so the
+    two trees stop matching structurally after compress_model; this is the
+    single place that bridges them (DESIGN.md §4, §10):
+
+      codes / packed -> the dense weight's names (packed rows are d_in·nbits/8;
+                        the divisibility fallback replicates them when the
+                        model axis stops dividing);
+      smooth / inv_scale -> the names minus the output dim (they are (d_in,)
+                        vectors, (L, d_in) when stacked);
+      codebook / act_scale -> replicated (tiny).
+
+    Returns a pytree with the same structure as `tree` (None fields stay
+    None), ready for `jax.device_put(tree, auto_shard(tree, names))` or for
+    attaching to ShapeDtypeStructs when lowering.
+    """
+    sr = sr or current_rules()
+    assert sr is not None, "auto_shard needs a rules context (use_rules) or sr"
+    try:
+        from repro.core.api import is_clustered
+    except ImportError:              # core not importable in stripped builds
+        def is_clustered(x):
+            return False
+
+    def clustered(ct, nm: Tuple[Optional[str], ...]):
+        vec_nm = nm[:-1]             # smoothing vectors live on the d_in dims
+
+        def ns(arr, names):
+            if arr is None:
+                return None
+            return named_sharding(arr.shape, names, sr)
+
+        return type(ct)(
+            codes=ns(ct.codes, nm),
+            codebook=ns(ct.codebook, (None,) * ct.codebook.ndim),
+            smooth=ns(ct.smooth, vec_nm),
+            packed=ns(ct.packed, nm),
+            inv_scale=ns(ct.inv_scale, vec_nm),
+            act_scale=(None if ct.act_scale is None
+                       else ns(ct.act_scale, (None,) * ct.act_scale.ndim)),
+            nbits=ct.nbits,
+        )
+
+    def one(leaf, names: str):
+        nm = parse_names(names)
+        if is_clustered(leaf):
+            return clustered(leaf, nm)
+        return named_sharding(leaf.shape, nm, sr)
+
+    return jax.tree_util.tree_map(one, tree, tree_names, is_leaf=is_clustered)
+
+
 def tree_shardings(tree_shapes, tree_names, sr: Optional[ShardingRules] = None):
     """Map a pytree of ShapeDtypeStructs + a matching pytree of comma-joined
     logical-name strings to NamedShardings (for in_shardings/out_shardings).

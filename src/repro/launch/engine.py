@@ -487,6 +487,13 @@ class EngineConfig:
     # paged-family features, so a slot-state arch fails here with the
     # capability named, not deep inside engine init.
     arch: Optional[str] = None
+    # mesh layout (DESIGN.md §14): requested (data, model) axis sizes of the
+    # serving mesh. None = let build_engine pick (the hlo_cost layout search
+    # on multi-device hosts, the trivial 1-device mesh otherwise). A knob
+    # that disagrees with the mesh an engine is actually constructed on
+    # fails at engine init with both values named.
+    data_parallel: Optional[int] = None
+    model_parallel: Optional[int] = None
 
     def __post_init__(self):
         """Eager validation: a bad knob fails at config construction with the
@@ -534,6 +541,12 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.tenant_weights must all be positive; got "
                 f"{self.tenant_weights!r}")
+        for knob in ("data_parallel", "model_parallel"):
+            v = getattr(self, knob)
+            if v is not None and (not isinstance(v, int) or v < 1):
+                raise ValueError(
+                    f"EngineConfig.{knob} must be a positive int (mesh axis "
+                    f"size) or None (auto layout); got {v!r}")
         if self.arch is not None:
             caps = arch_capabilities(self.arch)  # ValueError when unknown
             if self.speculative_k and CAP_SPECULATIVE not in caps:
@@ -625,6 +638,19 @@ class ServingEngine:
                 "speculative decoding needs draft_params (see "
                 "core/clustered_params.py make_draft_params)")
         self.mesh = mesh if mesh is not None else make_host_mesh()
+        # mesh-knob agreement (DESIGN.md §14): a config that requested axis
+        # sizes must match the mesh this engine actually serves on — a silent
+        # mismatch would mean the deployment is NOT running the layout the
+        # operator asked for (messages pinned by tests/test_sharded_serving).
+        axes = dict(self.mesh.shape)
+        for knob, axis in (("data_parallel", "data"),
+                           ("model_parallel", "model")):
+            want = getattr(ecfg, knob)
+            if want is not None and want != axes.get(axis, 1):
+                raise ValueError(
+                    f"EngineConfig.{knob}={want} does not match the engine "
+                    f"mesh's '{axis}' axis ({axes.get(axis, 1)}); mesh shape "
+                    f"is {axes}")
         self.clock = clock
         self.alloc = BlockAllocator(ecfg.num_blocks)
         self.slots: List[Optional[Request]] = [None] * ecfg.num_slots
@@ -695,6 +721,37 @@ class ServingEngine:
         # CompressReports here so --describe can print the bits assignment
         self.compress_report = None
         self.draft_report = None
+        # layout audit trail: build_engine attaches the hlo_cost layout search
+        # report here when it chose the mesh (DESIGN.md §14)
+        self.layout_report = None
+        self._place_sharded()
+
+    def _place_sharded(self):
+        """Commit params and cache pools to the mesh (DESIGN.md §14).
+
+        Weights get the dense logical names (ClusteredTensor leaves expand via
+        `auto_shard`: codes/packed shard like the dense weight, smoothing
+        vectors like its d_in dims, LUTs replicate); pools get the family's
+        declared cache names — kv heads on the model axis, so each chip holds
+        its kv-head shard of EVERY block and block tables stay valid
+        everywhere. With the arrays committed, every jitted step partitions
+        under GSPMD and the all-reduces land only where the row-parallel
+        projections (wo, w_down) demand them."""
+        from repro.distributed.layout import cache_shardings
+        from repro.distributed.sharding import auto_shard
+        with use_rules(self.mesh, fsdp=False):
+            names = self.model.names()
+            self.params = jax.device_put(
+                self.params, auto_shard(self.params, names))
+            if self.draft_params is not None:
+                self.draft_params = jax.device_put(
+                    self.draft_params, auto_shard(self.draft_params, names))
+            self.caches = jax.device_put(
+                self.caches, cache_shardings(self.model, self.caches))
+            if self.draft_caches is not None:
+                self.draft_caches = jax.device_put(
+                    self.draft_caches,
+                    cache_shardings(self.model, self.draft_caches))
 
     # -- deprecated pre-§13 cache aliases -----------------------------------
 
@@ -1626,7 +1683,7 @@ def kv_capacity_report(cfg, ecfg: EngineConfig,
 def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
                  target_centroids: int = 8, ecfg: Optional[EngineConfig] = None,
                  seed: int = 0, params=None, draft_params=None,
-                 kv_smooth=None):
+                 kv_smooth=None, mesh=None):
     """(engine, params): model + (optionally LCD-compressed) params wrapped in
     a ready ServingEngine.
 
@@ -1639,7 +1696,15 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
     `ecfg.bits_budget` set the LCD packing policy (DESIGN.md §10); the
     resulting CompressReports land on the engine as `compress_report` /
     `draft_report` so a deployment stays inspectable
-    (launch/serve.py --describe)."""
+    (launch/serve.py --describe).
+
+    Mesh selection (DESIGN.md §14): pass `mesh=` to serve on an explicit
+    mesh; otherwise `ecfg.data_parallel` / `ecfg.model_parallel` pin the
+    layout (the missing factor is derived from the visible device count, a
+    non-factoring request raises eagerly), and with neither, multi-device
+    hosts get the hlo_cost layout search (`distributed/layout.choose_layout`,
+    report attached as `engine.layout_report`) while 1-device hosts take the
+    trivial mesh."""
     ecfg = EngineConfig() if ecfg is None else ecfg
     if ecfg.arch is None:
         # bind the config to the arch so capability-dependent knobs fail
@@ -1649,9 +1714,11 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
     model = get_model(cfg)
-    mesh = make_host_mesh()
+    # params are built/compressed/calibrated on a provisional host mesh; the
+    # engine commits them to the serving mesh at init (_place_sharded)
+    build_mesh = mesh if mesh is not None else make_host_mesh()
     compress_report = draft_report = None
-    with use_rules(mesh, fsdp=False):
+    with use_rules(build_mesh, fsdp=False):
         if params is None:
             params = model.init(jax.random.key(seed))
         if lcd and not any(is_clustered(l) for l in jax.tree_util.tree_leaves(
@@ -1673,8 +1740,32 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
             kv_smooth = calibrate_kv_smooth(model, params, seed=seed)
             logger.info("int8 KV cache: smoothing calibrated "
                         "(Eq. 9 candidate search per layer x kv-head)")
+    layout_report = None
+    if mesh is None:
+        n = len(jax.devices())
+        dp, mp = ecfg.data_parallel, ecfg.model_parallel
+        if dp is not None or mp is not None:
+            # derive the unpinned factor from the visible device count
+            if dp is None:
+                dp = n // mp if mp and n % mp == 0 else 0
+            if mp is None:
+                mp = n // dp if dp and n % dp == 0 else 0
+            if dp < 1 or mp < 1 or dp * mp != n:
+                raise ValueError(
+                    f"build_engine: data_parallel x model_parallel must "
+                    f"factor the {n} visible device(s); got "
+                    f"{ecfg.data_parallel} x {ecfg.model_parallel}")
+            mesh = jax.make_mesh((dp, mp), ("data", "model"))
+        elif n > 1:
+            from repro.distributed.layout import choose_layout
+            mesh, layout_report = choose_layout(model, params, ecfg)
+            logger.info("mesh layout: chose %s over %d device(s)",
+                        layout_report["chosen"], n)
+        else:
+            mesh = build_mesh
     engine = ServingEngine(model, params, ecfg, mesh=mesh,
                            draft_params=draft_params, kv_smooth=kv_smooth)
     engine.compress_report = compress_report
     engine.draft_report = draft_report
+    engine.layout_report = layout_report
     return engine, params

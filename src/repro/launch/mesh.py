@@ -37,7 +37,13 @@ def make_elastic_mesh(n_chips: int, *, model_parallel: int = 16,
                       chips_per_pod: int = 256):
     """Derive a mesh from a live chip count (straggler-exclusion restarts).
     Keeps the model axis fixed and gives the remainder to (pod, data)."""
-    assert n_chips % model_parallel == 0, (n_chips, model_parallel)
+    if model_parallel < 1 or n_chips < 1 or n_chips % model_parallel:
+        # ValueError, not assert: the check must survive `python -O` — a
+        # silently mis-factored serving mesh is a deployment outage
+        # (message pinned by tests/test_sharded_serving.py)
+        raise ValueError(
+            f"make_elastic_mesh: n_chips ({n_chips}) must be a positive "
+            f"multiple of model_parallel ({model_parallel})")
     rows = n_chips // model_parallel
     pods = max(n_chips // chips_per_pod, 1)
     while rows % pods:

@@ -78,6 +78,8 @@ def _run_continuous(args) -> None:
                         prefix_cache=args.prefix_cache,
                         chunked_prefill=args.chunked_prefill,
                         scheduler="priority" if args.priority else "fcfs",
+                        data_parallel=args.data_parallel,
+                        model_parallel=args.model_parallel,
                         arch=args.arch)
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
@@ -187,6 +189,16 @@ def main() -> None:
                     help="priority/weighted-fair multi-tenant admission in "
                          "place of FCFS (DESIGN.md §12); the demo tags "
                          "requests with alternating tenants and priorities")
+    ap.add_argument("--data-parallel", type=int, default=None, metavar="N",
+                    help="pin the serving mesh's data axis (DESIGN.md §14); "
+                         "the model axis is derived from the visible device "
+                         "count. Default: the hlo_cost layout search on "
+                         "multi-device hosts (continuous mode only)")
+    ap.add_argument("--model-parallel", type=int, default=None, metavar="N",
+                    help="pin the serving mesh's model (tensor-parallel) "
+                         "axis; ClusteredTensor codes/scales and the paged "
+                         "pool's kv heads shard across it (DESIGN.md §14; "
+                         "continuous mode only)")
     ap.add_argument("--describe", action="store_true",
                     help="print the deployment inventory (per-layer bits "
                          "assignment, packed weight bytes, kv dtype) and "
@@ -200,6 +212,8 @@ def main() -> None:
         ap.error("--describe inspects the paged engine; add --continuous")
     for flag, name in ((args.prefix_cache, "--prefix-cache"),
                        (args.chunked_prefill, "--chunked-prefill"),
+                       (args.data_parallel is not None, "--data-parallel"),
+                       (args.model_parallel is not None, "--model-parallel"),
                        (args.priority, "--priority")):
         if flag and not args.continuous:
             ap.error(f"{name} applies to the paged engine; add --continuous")
