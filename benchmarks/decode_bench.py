@@ -19,7 +19,11 @@ them to BENCH_decode.json so the speedup trajectory is tracked PR over PR:
     identical greedy tokens at every width);
   * per-layer fused-kernel timings: the single-pass smooth+quant+LUT GEMM
     (decode GEMV shape) vs the dense matmul, plus the v5e roofline byte model
-    (packed sub-byte codes vs bf16 weight stream).
+    (packed sub-byte codes vs bf16 weight stream);
+  * the fused multi-projection row (DESIGN.md §15): tokens/s of the fused
+    QKV / gate+up GEMV path vs the per-projection escape hatch, their token
+    parity (asserted in smoke — the fusion is bit-equal), and the per-layer
+    LUT kernel-launch count of each path (fused must launch fewer, asserted).
 
 --smoke runs a reduced config for a few tokens. The --backend lane
 (benchmarks/run.py, DESIGN.md §11) picks what the LCD rows dispatch:
@@ -30,6 +34,7 @@ Pallas kernels on TPU, the XLA gather fallback elsewhere — and feeds the
 BENCH_trajectory.json perf record instead of overwriting the telemetry file.
 """
 import argparse
+import dataclasses
 import json
 import os
 
@@ -40,8 +45,11 @@ import numpy as np
 from benchmarks.common import emit, serving_mode, timeit_p50
 from repro.core.api import is_clustered
 from repro.core.clustered_params import packed_weight_bytes
-from repro.kernels.ops import lut_gemm_fused, lut_serving, packed_view
+from repro.kernels.ops import (lut_gemm_fused, lut_serving, packed_view,
+                               track_lut_launches)
 from repro.launch.serve import serve
+from repro.models.config import get_config, reduced
+from repro.models.registry import get_model
 
 HBM_BW = 819e9  # v5e
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
@@ -140,6 +148,70 @@ def _bits_row(name, cfg, params, serve_kw, smoke, mode):
     return row, cparams
 
 
+def _count_lut_launches(serve_kw, fused: bool):
+    """LUT kernel launches per layer per decode step, counted at TRACE time
+    (DESIGN.md §15): abstract-trace one decode step under interpret dispatch
+    inside `track_lut_launches` — the layer stack is a lax.scan, so the body
+    traces once and the log IS the per-layer launch sequence. eval_shape
+    never executes anything, so the count is lane-independent and free."""
+    cfg = get_config(serve_kw["arch"])
+    if serve_kw["use_reduced"]:
+        cfg = reduced(cfg, dtype="float32")
+    cfg = dataclasses.replace(cfg, fused_projections=fused)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    from repro.core.api import compress_model
+    params, _ = compress_model(params, target_centroids=8, nbits=4)
+    cache = model.init_cache(1, 8)
+
+    def step(p, c):
+        return model.decode(p, c, {"tokens": jnp.zeros((1, 1), jnp.int32),
+                                   "pos": c["pos"]})
+
+    with lut_serving("interpret"), track_lut_launches() as log:
+        jax.eval_shape(step, params, cache)
+    return list(log)
+
+
+def _fused_section(cparams, serve_kw, smoke, mode):
+    """Fused multi-projection serving row (DESIGN.md §15): tokens/s for the
+    fused QKV / gate+up GEMV path vs the per-projection escape hatch
+    (--no-fused-projections), token parity between the two (asserted in
+    smoke — the fusion is bit-equal, not approximately equal), and the
+    per-layer LUT launch count of each path."""
+    st_f, st_u = {}, {}
+    with lut_serving(mode):
+        gen_f, _ = serve(lcd=True, params=cparams, stats=st_f, **serve_kw)
+        gen_u, _ = serve(lcd=True, params=cparams, stats=st_u,
+                         fused_projections=False, **serve_kw)
+    tags_f = _count_lut_launches(serve_kw, fused=True)
+    tags_u = _count_lut_launches(serve_kw, fused=False)
+    row = {
+        "tokens_per_s": st_f["tokens_per_s"],
+        "unfused_tokens_per_s": st_u["tokens_per_s"],
+        "fused_vs_unfused_tokens_equal": bool(
+            np.array_equal(np.asarray(gen_f), np.asarray(gen_u))),
+        "lut_launches_per_layer": {"fused": len(tags_f),
+                                   "unfused": len(tags_u)},
+        "launch_tags_fused": tags_f,
+    }
+    if smoke:
+        assert row["fused_vs_unfused_tokens_equal"], (
+            "fused projection path emitted different greedy tokens than the "
+            "per-projection path — the fusion must be bit-equal")
+    assert len(tags_f) < len(tags_u), (
+        f"fused path must launch fewer LUT kernels per layer: "
+        f"{tags_f} vs {tags_u}")
+    emit("decode/fused_tokens_per_s", st_f["decode_s"] * 1e6,
+         f"tok_s={st_f['tokens_per_s']:.1f};"
+         f"unfused_tok_s={st_u['tokens_per_s']:.1f};"
+         f"tokens_equal={row['fused_vs_unfused_tokens_equal']}")
+    emit("decode/lut_launches_per_layer", 0.0,
+         f"fused={len(tags_f)};unfused={len(tags_u)};"
+         f"tags={'+'.join(tags_f)}")
+    return row
+
+
 def run(smoke: bool = True, arch: str = "llama2-7b",
         bits: str = "4,2,mixed", backend: str = "interpret") -> dict:
     if smoke:
@@ -188,6 +260,10 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
                                  batch, interpret=not on_tpu)
               if backend == "interpret" or on_tpu else [])
 
+    # fused multi-projection row (DESIGN.md §15) rides on the 4-bit params
+    fused = (_fused_section(cparams4, serve_kw, smoke, mode)
+             if cparams4 is not None else None)
+
     out = {
         "arch": arch, "smoke": smoke, "backend": jax.default_backend(),
         "bench_backend": backend,
@@ -197,6 +273,7 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
             (lcd_stats or {"tokens_per_s": 0})["tokens_per_s"]
             / max(dense_stats["tokens_per_s"], 1e-9), 3),
         "bits": bits_rows,
+        "fused": fused,
         "layers": layers,
         "note": ("compiled TPU timings" if on_tpu else
                  "interpret-mode wall times are correctness telemetry, not "

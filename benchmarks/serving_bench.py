@@ -424,7 +424,11 @@ def run(smoke: bool = True, arch: str = "llama2-7b",
         "bench_backend": backend,
         "engine": {"num_slots": ecfg.num_slots, "block_size": ecfg.block_size,
                    "num_blocks": ecfg.num_blocks,
-                   "prefill_chunk": ecfg.prefill_chunk},
+                   "prefill_chunk": ecfg.prefill_chunk,
+                   # DESIGN.md §15: the projection-dispatch mode every row
+                   # served under (bit-equal either way; recorded so a
+                   # trajectory row is attributable to its kernel count)
+                   "fused_projections": cfg.fused_projections},
         "workload": {"requests": n_req, "max_prompt": max_prompt,
                      "gen_tokens": gen, "arrivals": "poisson(mean=2 steps)"},
         "dense": dense, "lcd": lcd, "int8_kv": int8_row,

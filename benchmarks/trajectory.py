@@ -69,9 +69,17 @@ def _suite_headlines(name: str, result: dict) -> dict:
         out["tokens_per_s"].update({
             f"bits_{w}": row.get("tokens_per_s")
             for w, row in (result.get("bits") or {}).items()})
+        fused = result.get("fused") or {}
+        if fused:
+            # DESIGN.md §15: the fused multi-projection row gates like any
+            # other throughput headline; parity folds in its bit-equality
+            out["tokens_per_s"]["fused"] = fused.get("tokens_per_s")
+            out["tokens_per_s"]["unfused"] = fused.get("unfused_tokens_per_s")
+            out["lut_launches_per_layer"] = fused.get("lut_launches_per_layer")
         out["parity"] = all(
             row.get("kernel_vs_oracle_tokens_equal", True)
-            for row in (result.get("bits") or {}).values())
+            for row in (result.get("bits") or {}).values()) and bool(
+            fused.get("fused_vs_unfused_tokens_equal", True))
         return out
     if name == "serving":
         prefix = result.get("prefix_cache") or {}

@@ -24,6 +24,7 @@ TIER1_MODULES = {
     "test_cache_protocols",
     "test_engine_zoo",
     "test_sharded_serving",
+    "test_fused_multi",
 }
 
 

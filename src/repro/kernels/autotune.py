@@ -52,11 +52,19 @@ from repro.utils import round_up
 
 VMEM_BUDGET = 8 * 1024 * 1024  # the working-set bound _pick_blocks was sized to
 
-CACHE_SCHEMA_VERSION = 1
+# v2: the fused multi-projection variants (lut_fused_multi[_gemv]) key their
+# own entries and the VMEM formula became P-aware (`n_ops`); v1 entries could
+# alias a multi call onto a single-projection winner that blows the budget,
+# so old caches are discarded wholesale rather than migrated.
+CACHE_SCHEMA_VERSION = 2
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 _ENV_ENABLE = "REPRO_AUTOTUNE"
 
-LUT_VARIANTS = ("lut_f32", "lut_int8", "lut_fused", "lut_fused_gemv")
+LUT_VARIANTS = ("lut_f32", "lut_int8", "lut_fused", "lut_fused_gemv",
+                "lut_fused_multi", "lut_fused_multi_gemv")
+
+# variants whose M dimension is one resident decode block (N-major grid)
+GEMV_VARIANTS = ("lut_fused_gemv", "lut_fused_multi_gemv")
 
 
 def heuristic_blocks(m: int, k: int, n: int) -> Tuple[int, int, int]:
@@ -72,21 +80,31 @@ def heuristic_blocks(m: int, k: int, n: int) -> Tuple[int, int, int]:
     return bm, bn, bk
 
 
-def vmem_bytes(bm: int, bn: int, bk: int, nbits: int = 4) -> int:
+def vmem_bytes(bm: int, bn: int, bk: int, nbits: int = 4,
+               n_ops: int = 1) -> int:
     """Working-set bytes of one LUT-matmul grid step: f32 x tile + packed
     code tile + f32 accumulator (the budget formula of `heuristic_blocks`,
-    generalized over the packing width)."""
-    return bm * bk * 4 + bk * bn * nbits // 8 + bm * bn * 4
+    generalized over the packing width).
+
+    `n_ops` is the projection count of a fused multi call
+    (lut_matmul_fused_multi): every projection's current packed tile stays
+    resident in VMEM simultaneously — Pallas holds one block per operand —
+    so the code-tile term scales with P even though only one tile is read
+    per grid step."""
+    return bm * bk * 4 + n_ops * (bk * bn * nbits // 8) + bm * bn * 4
 
 
 def candidate_blocks(m: int, k: int, n: int, nbits: int = 4,
-                     variant: str = "lut_fused") -> List[Tuple[int, int, int]]:
+                     variant: str = "lut_fused",
+                     n_ops: int = 1) -> List[Tuple[int, int, int]]:
     """The measured grid: MXU-aligned (bm, bn, bk) triples that (a) never pad
     the problem beyond one block of slack, (b) cover whole packing groups
-    (bk·nbits ≡ 0 mod 8), and (c) fit the VMEM budget. The heuristic's choice
-    is always first, so the tuner's argmin can only match or beat it."""
+    (bk·nbits ≡ 0 mod 8), and (c) fit the VMEM budget — P-aware for the
+    fused multi variants (`n_ops` resident code tiles). The heuristic's
+    choice is always first, so the tuner's argmin can only match or beat
+    it."""
     heur = heuristic_blocks(m, k, n)
-    if variant == "lut_fused_gemv" or m < 128:
+    if variant in GEMV_VARIANTS or m < 128:
         bms: Sequence[int] = (round_up(m, 8),)  # one resident M block
     else:
         bms = [b for b in (128, 256) if b <= round_up(m, 128)]
@@ -101,7 +119,7 @@ def candidate_blocks(m: int, k: int, n: int, nbits: int = 4,
                     continue
                 if (bk * nbits) % 8:
                     continue
-                if vmem_bytes(bm, bn, bk, nbits) > VMEM_BUDGET:
+                if vmem_bytes(bm, bn, bk, nbits, n_ops) > VMEM_BUDGET:
                     continue
                 out.append(cand)
     return out
@@ -146,12 +164,14 @@ def paged_candidates(l: int) -> List[Tuple[int]]:
 # ---------------------------------------------------------------------------
 
 def normalize_key(m: int, k: int, n: int, nbits: int, variant: str,
-                  backend: str) -> str:
+                  backend: str, n_ops: int = 1) -> str:
     """Canonical cache key: the problem rounded to the shape the kernel runs
     after padding. Decode GEMVs (m < 128) bucket M to the sublane multiple;
     larger M, and K/N always, round to the 128-lane tile. Two calls that pad
-    to the same kernel problem share one entry."""
-    if variant in ("lut_fused_gemv",) or (variant in LUT_VARIANTS and m < 128):
+    to the same kernel problem share one entry. Fused multi calls
+    additionally key on the projection count (`n_ops`): a 2-way and a 3-way
+    fusion at the same concatenated N have different VMEM residency."""
+    if variant in GEMV_VARIANTS or (variant in LUT_VARIANTS and m < 128):
         m_n = round_up(max(m, 1), 8)
     elif variant in LUT_VARIANTS:
         m_n = round_up(m, 128)
@@ -159,7 +179,10 @@ def normalize_key(m: int, k: int, n: int, nbits: int, variant: str,
         m_n = m                       # attention: sq / gt are exact geometry
     k_n = round_up(k, 128) if variant in LUT_VARIANTS else k
     n_n = round_up(n, 128) if variant in LUT_VARIANTS else n
-    return f"{variant}|{backend}|m{m_n},k{k_n},n{n_n}|b{nbits}"
+    key = f"{variant}|{backend}|m{m_n},k{k_n},n{n_n}|b{nbits}"
+    if n_ops > 1:
+        key += f"|p{n_ops}"
+    return key
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +309,8 @@ def _tune(key: str, candidates, measure, cache: AutotuneCache):
 def pick_blocks(m: int, k: int, n: int, *, nbits: int = 4,
                 variant: str = "lut_fused", interpret: bool = True,
                 measure: Optional[Callable[..., float]] = None,
-                cache: Optional[AutotuneCache] = None) -> Tuple[int, int, int]:
+                cache: Optional[AutotuneCache] = None,
+                n_ops: int = 1) -> Tuple[int, int, int]:
     """(bm, bn, bk) for a LUT matmul problem — cached winner, else measured,
     else the deterministic heuristic.
 
@@ -302,13 +326,14 @@ def pick_blocks(m: int, k: int, n: int, *, nbits: int = 4,
     """
     backend = "interpret" if interpret else jax.default_backend()
     cache = cache or get_cache()
-    key = normalize_key(m, k, n, nbits, variant, backend)
+    key = normalize_key(m, k, n, nbits, variant, backend, n_ops)
     hit = cache.get(key)
     if hit is not None:
         return hit                    # cache hit: never re-measure
     if interpret or measure is None or not tuning_enabled():
         return heuristic_blocks(m, k, n)
-    won = _tune(key, candidate_blocks(m, k, n, nbits, variant), measure, cache)
+    won = _tune(key, candidate_blocks(m, k, n, nbits, variant, n_ops),
+                measure, cache)
     return won if won is not None else heuristic_blocks(m, k, n)
 
 

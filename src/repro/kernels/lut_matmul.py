@@ -415,3 +415,240 @@ def lut_matmul_fused_gemv(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, inv_scale[None, :], packed_codes, codebook)
+
+
+# ---------------------------------------------------------------------------
+# Fused MULTI-projection serving GEMM/GEMV (QKV, gate+up share one input)
+# ---------------------------------------------------------------------------
+
+def _fused_multi_kernel(x_ref, inv_ref, cb_ref, *rest, bk: int, bn: int,
+                        nsteps: int, quantize, k_axis: int, nbits,
+                        bounds):
+    """One body for both fused multi variants: P projections sharing the
+    activation tile, concatenated along N. `bounds[p] = (s0, nblk)` is
+    projection p's N-block segment (static — projection widths are shapes).
+
+    Each grid step serves exactly one projection: the one whose segment the
+    N-block index `j` falls in. Its Eq. 11 transform and select-sum decode
+    run under a `pl.when` guard, so the activation tile is transformed with
+    that projection's inv row and accumulated against that projection's
+    codes — per output column this is the identical f32 op sequence the
+    single-projection `_fused_kernel` performs at the same (bk, bn), which
+    is what makes the fused path bit-equal to the unfused one. Dead
+    projections' packed operands hold a frozen block index (their index map
+    clamps), so Pallas never re-DMAs them.
+
+    `quantize` and `nbits` are per-projection tuples: a mixed-precision
+    layer (wq at 4-bit, wk/wv demoted to 2-bit) still fuses into ONE kernel
+    launch — each packed operand unpacks at its own static width.
+    """
+    n_proj = len(bounds)
+    packed_refs = rest[:n_proj]
+    o_ref, acc_ref = rest[n_proj], rest[n_proj + 1]
+    j = pl.program_id(k_axis - 1)
+    ks = pl.program_id(k_axis)
+
+    @pl.when(ks == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    inv = inv_ref[...].astype(jnp.float32)                # (P, bk)
+    cb = cb_ref[...]                                      # (P, KC)
+    for p, (s0, nblk) in enumerate(bounds):
+        @pl.when((j >= s0) & (j < s0 + nblk))
+        def _proj(p=p):
+            xs = x * inv[p][None, :]
+            if quantize[p]:
+                xs = jnp.clip(jnp.round(xs), -127.0, 127.0)
+            w = _decode_tile(packed_refs[p], cb[p], bk, bn, jnp.float32,
+                             nbits[p])
+            acc_ref[...] += jnp.dot(xs, w,
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(ks == nsteps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _multi_segments(widths, bn: int):
+    """(s0, nblk) N-block segment per projection of the concatenated output."""
+    bounds, s0 = [], 0
+    for w in widths:
+        nblk = w // bn
+        bounds.append((s0, nblk))
+        s0 += nblk
+    return tuple(bounds)
+
+
+def _check_multi(x, inv_stack, cb_stack, packed_list, widths, quantize,
+                 nbits, bm, bn, bk, caller):
+    m, k = x.shape
+    n_proj = len(packed_list)
+    if not (len(widths) == len(quantize) == len(nbits) == n_proj > 0):
+        raise ValueError(
+            f"{caller}: {n_proj} packed operands but widths={widths}, "
+            f"quantize={quantize}, nbits={nbits}")
+    if inv_stack.shape != (n_proj, k):
+        raise ValueError(f"{caller}: inv_stack must be ({n_proj}, {k}); got "
+                         f"{inv_stack.shape}")
+    if cb_stack.shape != (n_proj, KC):
+        raise ValueError(f"{caller}: cb_stack must be ({n_proj}, {KC}); got "
+                         f"{cb_stack.shape}")
+    for p in range(n_proj):
+        _check_packed_shape(k, packed_list[p].shape, nbits[p], caller)
+        if packed_list[p].shape[1] != widths[p]:
+            raise ValueError(
+                f"{caller}: projection {p} packed N={packed_list[p].shape[1]}"
+                f" != width {widths[p]}")
+        if widths[p] % bn:
+            raise ValueError(
+                f"{caller}: projection {p} width {widths[p]} must be a "
+                f"multiple of bn={bn} (the wrapper pads each projection)")
+        if (bk * nbits[p]) % 8:
+            raise ValueError(
+                f"{caller}: bk={bk} must cover whole packing groups at "
+                f"{nbits[p]}-bit (bk*nbits divisible by 8)")
+    if m % bm or k % bk:
+        raise ValueError(
+            f"{caller}: pad shapes to block multiples: {(m, k)} vs "
+            f"{(bm, bk)}")
+
+
+def _packed_multi_spec(s0: int, nblk: int, rows: int, bn: int, gemv: bool):
+    """BlockSpec for one projection's packed codes in the multi grid: inside
+    its N segment the K-block index advances with the grid; outside it the
+    index FREEZES at (0, nearest-edge) so the dead operand is never
+    re-DMA'd (Pallas skips the copy when the block index repeats)."""
+    if gemv:
+        def imap(j, s):
+            live = (j >= s0) & (j < s0 + nblk)
+            return (jnp.where(live, s, 0), jnp.clip(j - s0, 0, nblk - 1))
+    else:
+        def imap(i, j, s):
+            live = (j >= s0) & (j < s0 + nblk)
+            return (jnp.where(live, s, 0), jnp.clip(j - s0, 0, nblk - 1))
+    return pl.BlockSpec((rows, bn), imap)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("widths", "quantize", "bm", "bn", "bk", "interpret",
+                     "out_dtype", "nbits"))
+def lut_matmul_fused_multi(
+    x: jax.Array,            # (M, K) RAW activations shared by all projections
+    inv_stack: jax.Array,    # (P, K) f32 — per-projection Eq. 11 multipliers
+    cb_stack: jax.Array,     # (P, KC) f32 — per-projection padded codebooks
+    *packed_list: jax.Array, # P × (K*nbits_p//8, widths[p]) uint8
+    widths: tuple,           # per-projection output width (multiple of bn)
+    quantize: tuple,         # per-projection Eq. 11 quantize flag
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+    nbits: tuple = (4,),     # per-projection packing width
+) -> jax.Array:
+    """Y = concat_p(transform_p(x) @ codebook_p[codes_p]) in ONE kernel.
+
+    The activation tile is read (and smoothed/quantized) once per K-step and
+    reused by whichever projection owns the current N segment — one kernel
+    launch and one activation stream replace P of each, which is the entire
+    win for decode QKV / gate+up (DESIGN.md §15). Returns (M, Σ widths);
+    the ops.py wrapper splits segments and applies per-projection act_scale.
+    """
+    m, k = x.shape
+    n = sum(widths)
+    if bm is None or bn is None or bk is None:
+        tb = autotune.pick_blocks(m, k, n, nbits=max(nbits),
+                                  variant="lut_fused_multi",
+                                  interpret=interpret, n_ops=len(widths))
+        bm, bn, bk = bm or tb[0], bn or tb[1], bk or tb[2]
+    _check_multi(x, inv_stack, cb_stack, packed_list, widths, quantize,
+                 nbits, bm, bn, bk, "lut_matmul_fused_multi")
+    nsteps = k // bk
+    bounds = _multi_segments(widths, bn)
+    grid = (m // bm, n // bn, nsteps)
+    kernel = functools.partial(
+        _fused_multi_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize,
+        k_axis=2, nbits=nbits, bounds=bounds)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+        pl.BlockSpec((len(widths), bk), lambda i, j, s: (0, s)),
+        pl.BlockSpec((len(widths), KC), lambda i, j, s: (0, 0)),
+    ] + [
+        _packed_multi_spec(s0, nblk, bk * nbits[p] // 8, bn, gemv=False)
+        for p, (s0, nblk) in enumerate(bounds)
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, inv_stack, cb_stack, *packed_list)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("widths", "quantize", "bm", "bn", "bk", "interpret",
+                     "out_dtype", "nbits"))
+def lut_matmul_fused_multi_gemv(
+    x: jax.Array,            # (M, K), M = bm < 128 (decode micro-batch)
+    inv_stack: jax.Array,    # (P, K) f32
+    cb_stack: jax.Array,     # (P, KC) f32
+    *packed_list: jax.Array, # P × (K*nbits_p//8, widths[p]) uint8
+    widths: tuple,
+    quantize: tuple,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+    nbits: tuple = (4,),
+) -> jax.Array:
+    """Decode specialization of the fused multi kernel: one resident M block,
+    N-major grid (ΣN/bn, K/bk) walking every projection's packed stream
+    back-to-back — the decode step's QKV (or gate+up) is ONE kernel launch
+    whose only HBM-bound operand is the concatenated sub-byte code stream.
+    """
+    m, k = x.shape
+    n = sum(widths)
+    if bm is None:
+        bm = m
+    if bn is None or bk is None:
+        tb = autotune.pick_blocks(m, k, n, nbits=max(nbits),
+                                  variant="lut_fused_multi_gemv",
+                                  interpret=interpret, n_ops=len(widths))
+        bn, bk = bn or tb[1], bk or tb[2]
+    if m != bm or bm > 128:
+        raise ValueError(
+            f"lut_matmul_fused_multi_gemv: M ({m}) must equal bm ({bm}) "
+            f"<= 128")
+    _check_multi(x, inv_stack, cb_stack, packed_list, widths, quantize,
+                 nbits, bm, bn, bk, "lut_matmul_fused_multi_gemv")
+    nsteps = k // bk
+    bounds = _multi_segments(widths, bn)
+    grid = (n // bn, nsteps)
+    kernel = functools.partial(
+        _fused_multi_kernel, bk=bk, bn=bn, nsteps=nsteps, quantize=quantize,
+        k_axis=1, nbits=nbits, bounds=bounds)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda j, s: (0, s)),
+        pl.BlockSpec((len(widths), bk), lambda j, s: (0, s)),
+        pl.BlockSpec((len(widths), KC), lambda j, s: (0, 0)),
+    ] + [
+        _packed_multi_spec(s0, nblk, bk * nbits[p] // 8, bn, gemv=True)
+        for p, (s0, nblk) in enumerate(bounds)
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda j, s: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, inv_stack, cb_stack, *packed_list)

@@ -24,7 +24,10 @@ from repro.core.api import ClusteredTensor, clustered_matmul
 from repro.core.lut import pack_codes_jax, packed_rows, padded_d_in
 from repro.kernels import autotune
 from repro.kernels.lut_matmul import (KC, lut_matmul_f32, lut_matmul_fused,
-                                      lut_matmul_fused_gemv, lut_matmul_int8)
+                                      lut_matmul_fused_gemv,
+                                      lut_matmul_fused_multi,
+                                      lut_matmul_fused_multi_gemv,
+                                      lut_matmul_int8)
 from repro.utils import round_up
 
 # the deterministic fallback the autotuner resolves to on a miss (DESIGN.md
@@ -204,6 +207,120 @@ def lut_gemm_fused(
 
 
 # ---------------------------------------------------------------------------
+# Fused multi-projection serving GEMM/GEMV (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _lut_multi_measure_fn(variant: str, m: int, k: int, widths, nbits):
+    """measure(bm, bn, bk) -> seconds for the fused multi kernel on synthetic
+    per-projection operands — built only on a compiled backend."""
+    kern = (lut_matmul_fused_multi_gemv
+            if variant == "lut_fused_multi_gemv" else lut_matmul_fused_multi)
+    rng = np.random.default_rng(0)
+    cb = jnp.asarray(
+        np.stack([np.linspace(-0.05, 0.05, KC)] * len(widths))
+        .astype(np.float32))
+    quantize = tuple(True for _ in widths)
+
+    def measure(bm: int, bn: int, bk: int) -> float:
+        mp, kp = round_up(m, bm), round_up(k, bk)
+        wps = tuple(round_up(w, bn) for w in widths)
+        packed = [jax.block_until_ready(pack_codes_jax(
+            jnp.asarray(rng.integers(0, 1 << nb, size=(kp, wp))
+                        .astype(np.uint8)), nb))
+            for wp, nb in zip(wps, nbits)]
+        x = jnp.asarray(rng.normal(size=(mp, kp)).astype(np.float32))
+        inv = jnp.ones((len(widths), kp), jnp.float32)
+        kw = dict(widths=wps, quantize=quantize, bn=bn, bk=bk,
+                  interpret=False, nbits=tuple(nbits))
+        if variant == "lut_fused_multi_gemv":
+            fn = lambda: kern(x, inv, cb, *packed, bm=mp, **kw)
+        else:
+            fn = lambda: kern(x, inv, cb, *packed, bm=bm, **kw)
+        return autotune.measure_candidate(fn)
+
+    return measure
+
+
+def _multi_blocks(m: int, k: int, widths, nbits, interpret: bool):
+    """(bm, bn, bk) for a fused multi call, or None when the projections'
+    heuristic bn choices disagree (the wrapper then falls back to unfused
+    calls so fused-vs-unfused bit-equality never depends on a re-tiling).
+
+    Under the interpreter the per-projection heuristic is used directly —
+    the SAME (bm, bk) every unfused call gets (they depend only on m and k)
+    and the SAME bn (agreement enforced), which is what makes the fused
+    output bit-equal to the unfused one on the CPU parity lanes. On a
+    compiled TPU backend the multi variant autotunes under its own cache
+    key (`lut_fused_multi[_gemv]`, P-aware VMEM budget)."""
+    bns = {autotune.heuristic_blocks(m, k, n)[1] for n in widths}
+    if len(bns) > 1:
+        return None
+    bm, _, bk = autotune.heuristic_blocks(m, k, widths[0])
+    bn = bns.pop()
+    variant = "lut_fused_multi_gemv" if m < 128 else "lut_fused_multi"
+    if not interpret and jax.default_backend() == "tpu":
+        measure = _lut_multi_measure_fn(variant, m, k, widths, nbits)
+        return autotune.pick_blocks(
+            m, k, sum(widths), nbits=max(nbits), variant=variant,
+            interpret=False, measure=measure, n_ops=len(widths))
+    return bm, bn, bk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("quantize", "interpret", "nbits"))
+def lut_gemm_fused_multi(
+    x: jax.Array,            # (M, K) RAW activations shared by P projections
+    inv_stack: jax.Array,    # (P, K) f32 — per-projection Eq. 11 multipliers
+    cb_stack: jax.Array,     # (P, KC) f32
+    act_stack: jax.Array,    # (P,) f32 s_q per projection (1.0 where unused)
+    *packed_list: jax.Array, # P × (packed_rows(K, nbits_p), n_p) uint8
+    quantize: tuple,         # P × bool
+    interpret: bool = True,
+    nbits: tuple = (4,),
+):
+    """Single-launch multi-projection serving GEMM: every projection's
+    smooth(+quant) and LUT contraction fused into ONE kernel walking the
+    shared activation once (DESIGN.md §15). The caller guarantees the
+    projections' heuristic bn agree (`_multi_blocks`); each projection's
+    output segment is then bit-equal to its `lut_gemm_fused` result (same
+    bm/bn/bk, same padding, same f32 op sequence per output column).
+    Returns a tuple of P (M, n_p) arrays."""
+    m, k = x.shape
+    n_true = tuple(int(pk.shape[1]) for pk in packed_list)
+    blocks = _multi_blocks(m, k, n_true, nbits, interpret)
+    if blocks is None:
+        raise ValueError("lut_gemm_fused_multi: projections disagree on bn; "
+                         "caller must fall back to unfused calls")
+    bm, bn, bk = blocks
+    # shared K padding: bk is a multiple of every packing group size, so
+    # round_up(k, bk) covers each projection's group padding exactly as the
+    # unfused wrapper's padded_d_in -> pad_for_kernel chain does
+    kp, mp = round_up(k, bk), round_up(m, bm)
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    inv = inv_stack.astype(jnp.float32)
+    if kp != k:
+        inv = jnp.pad(inv, ((0, 0), (0, kp - k)))
+    wps = tuple(round_up(n, bn) for n in n_true)
+    padded = [
+        jnp.pad(pk, ((0, kp * nb // 8 - pk.shape[0]), (0, wp - pk.shape[1])))
+        for pk, wp, nb in zip(packed_list, wps, nbits)]
+    kw = dict(widths=wps, quantize=quantize, bn=bn, bk=bk,
+              interpret=interpret, nbits=nbits)
+    if m < 128:
+        y = lut_matmul_fused_multi_gemv(x, inv, cb_stack, *padded,
+                                        bm=mp, **kw)
+    else:
+        y = lut_matmul_fused_multi(x, inv, cb_stack, *padded, bm=bm, **kw)
+    outs, off = [], 0
+    for p, (wp, n0) in enumerate(zip(wps, n_true)):
+        seg = y[:m, off:off + n0]
+        outs.append(seg * act_stack[p] if quantize[p] else seg)
+        off += wp
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
 # Serving dispatch
 # ---------------------------------------------------------------------------
 
@@ -260,6 +377,40 @@ def _transform_params(ct: ClusteredTensor):
     return inv.astype(jnp.float32), act, quantize
 
 
+def _resolve_mode(use_kernel: Optional[bool]) -> str:
+    mode = _FORCED_MODE
+    if use_kernel is not None:
+        mode = "kernel" if use_kernel else "ref"
+    if mode is None:
+        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+# trace-time kernel-launch tracker (benchmarks/decode_bench.py): every LUT
+# pallas_call the serving trace would launch per executed step appends a tag
+# here while a `track_lut_launches` context is open. Counting happens at
+# trace time — jit replays the same launch sequence every step, so one
+# traced step IS the per-step launch count.
+_LAUNCH_LOG: Optional[list] = None
+
+
+@contextlib.contextmanager
+def track_lut_launches():
+    """Collect the LUT kernel launches of everything traced inside the
+    context; yields the list of tags (e.g. 'fused_multi[3]', 'fused')."""
+    global _LAUNCH_LOG
+    prev, _LAUNCH_LOG = _LAUNCH_LOG, []
+    try:
+        yield _LAUNCH_LOG
+    finally:
+        _LAUNCH_LOG = prev
+
+
+def _log_launch(tag: str) -> None:
+    if _LAUNCH_LOG is not None:
+        _LAUNCH_LOG.append(tag)
+
+
 def clustered_linear(
     x: jax.Array,
     ct: ClusteredTensor,
@@ -269,18 +420,57 @@ def clustered_linear(
     """Model-facing clustered matmul. use_kernel=None auto-selects (see
     lut_serving): the fused Pallas path on TPU backends, the gather
     contraction elsewhere (identical numerics)."""
-    mode = _FORCED_MODE
-    if use_kernel is not None:
-        mode = "kernel" if use_kernel else "ref"
-    if mode is None:
-        mode = "kernel" if jax.default_backend() == "tpu" else "ref"
+    mode = _resolve_mode(use_kernel)
     if mode == "ref" or ct.codebook.ndim != 1:
         # stacked/expert codebooks take the gather path (vmapped in models)
         return clustered_matmul(x, ct)
     inv, act, quantize = _transform_params(ct)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    _log_launch("fused")
     y = lut_gemm_fused(x2, inv, packed_view(ct), ct.codebook, act,
                        quantize=quantize, interpret=(mode == "interpret"),
                        nbits=ct.nbits)
     return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def clustered_linear_multi(
+    x: jax.Array,
+    cts,
+    *,
+    use_kernel: Optional[bool] = None,
+):
+    """Model-facing MULTI-projection clustered matmul: P projections sharing
+    the input x (QKV; gate+up) served by ONE fused kernel launch
+    (DESIGN.md §15). Returns a tuple of P outputs, each bit-equal to the
+    corresponding `clustered_linear(x, ct)` — per-projection nbits may
+    differ (mixed-precision layers fuse too).
+
+    Falls back to per-projection `clustered_linear` calls whenever the
+    single-kernel form can't hold the bit-equality contract or the kernel
+    path isn't in play: ref mode, stacked/expert codebooks, a single
+    projection, or projections whose heuristic bn disagree."""
+    cts = tuple(cts)
+    mode = _resolve_mode(use_kernel)
+    fusable = (mode != "ref" and len(cts) > 1
+               and all(ct.codebook.ndim == 1 for ct in cts))
+    if fusable:
+        m = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+        n_true = tuple(int(packed_view(ct).shape[1]) for ct in cts)
+        nbits = tuple(ct.nbits for ct in cts)
+        fusable = _multi_blocks(m, x.shape[-1], n_true, nbits, True) is not None
+    if not fusable:
+        return tuple(clustered_linear(x, ct, use_kernel=use_kernel)
+                     for ct in cts)
+    params = [_transform_params(ct) for ct in cts]
+    inv_stack = jnp.stack([inv for inv, _, _ in params])
+    act_stack = jnp.stack([act.astype(jnp.float32) for _, act, _ in params])
+    cb_stack = jnp.stack([pad_codebook(ct.codebook) for ct in cts])
+    quantize = tuple(qz for _, _, qz in params)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    _log_launch(f"fused_multi[{len(cts)}]")
+    ys = lut_gemm_fused_multi(
+        x2, inv_stack, cb_stack, act_stack, *[packed_view(ct) for ct in cts],
+        quantize=quantize, interpret=(mode == "interpret"), nbits=nbits)
+    return tuple(y.reshape(*lead, -1).astype(x.dtype) for y in ys)

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import autotune
 from repro.utils import round_up
@@ -227,6 +228,204 @@ def paged_dequant_attention(
       lengths.astype(jnp.int32).reshape(s_slots, 1),
       n_new.astype(jnp.int32).reshape(s_slots, 1),
       jnp.asarray(window, jnp.int32).reshape(1, 1))
+
+    out = out[:, :, :gt].reshape(s_slots, kv, g, t, d)
+    return out.transpose(0, 3, 1, 2, 4).reshape(s_slots, t, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Pool-direct scalar-prefetch paged attention (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+#
+# `paged_dequant_attention` above reads a GATHERED logical view: the caller
+# materializes kc[block_tables] through XLA first — a full HBM copy of every
+# slot's visible cache, padded to the block-table width, every layer, every
+# step. The kernel below removes that copy entirely: the block tables and
+# per-slot lengths ride in as SCALAR-PREFETCH operands
+# (pltpu.PrefetchScalarGridSpec), so each grid step's index map computes
+# which physical pool block to DMA — the kernel reads the paged pools
+# IN PLACE. Dead iterations (past a slot's live block count) clamp their
+# index to the last live block, which Pallas recognizes as "same block, no
+# re-DMA", and a `pl.when(b < live)` guard skips their compute; the softmax
+# is the standard online (flash) accumulation across a slot's blocks.
+
+def _pool_kernel(bt_ref, len_ref, nnew_ref, win_ref, q_ref, *rest,
+                 t: int, bs: int, d: int, gt: int, nb_grid: int,
+                 scale: float, softcap: float, int8_kv: bool):
+    """One (slot, kv-head, block) program: attend the slot's query rows over
+    ONE physical cache block, accumulating online-softmax partials in VMEM
+    scratch; the output DMAs once, at the slot's last block iteration."""
+    if int8_kv:
+        (kq_ref, ks_ref, vq_ref, vs_ref, ksm_ref, vsm_ref,
+         o_ref, acc_ref, m_ref, l_ref) = rest
+    else:
+        k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    s_i = pl.program_id(0)
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[s_i]
+    total = length + nnew_ref[s_i]
+    live = jnp.maximum(jax.lax.div(total + bs - 1, bs), 1)
+
+    @pl.when(b < live)
+    def _block():
+        q = q_ref[...].reshape(gt, d).astype(jnp.float32) * scale
+        if int8_kv:
+            k = (kq_ref[...].reshape(bs, d).astype(jnp.float32)
+                 * ks_ref[...].reshape(bs, 1) * ksm_ref[...].reshape(1, d))
+            v = (vq_ref[...].reshape(bs, d).astype(jnp.float32)
+                 * vs_ref[...].reshape(bs, 1) * vsm_ref[...].reshape(1, d))
+        else:
+            k = k_ref[...].reshape(bs, d).astype(jnp.float32)
+            v = v_ref[...].reshape(bs, d).astype(jnp.float32)
+        s_blk = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (gt, bs)
+        if softcap > 0:
+            s_blk = softcap * jnp.tanh(s_blk / softcap)
+
+        window = win_ref[0]
+        weff = jnp.where(window > 0, window, 1 << 30)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (gt, bs), 0)
+        cols = b * bs + jax.lax.broadcasted_iota(jnp.int32, (gt, bs), 1)
+        q_pos = length + rows % t      # q rows are (group, T) flattened
+        mask = (q_pos >= cols) & ((q_pos - cols) < weff) & (cols < total)
+        s_blk = jnp.where(mask, s_blk, NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s_blk, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s_blk - m_new) * mask.astype(jnp.float32)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(b == nb_grid - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)   # all-masked rows -> 0 out
+        o_ref[...] = (acc_ref[...] / denom).reshape(1, 1, gt, d).astype(
+            o_ref.dtype)
+
+
+def _pool_block_map(nb: int, bs: int):
+    """Index map for the K/V pool operands: scalar-prefetched block table +
+    lengths pick the physical block this grid step reads. Past the slot's
+    live count the index clamps to the last live block — an identical index
+    to the previous iteration, so Pallas skips the DMA."""
+    def imap(s, h, b, bt_ref, len_ref, nnew_ref, win_ref):
+        total = len_ref[s] + nnew_ref[s]
+        live = jnp.maximum(jax.lax.div(total + bs - 1, bs), 1)
+        bid = bt_ref[s, jnp.minimum(b, live - 1)]
+        return (jnp.clip(bid, 0, nb - 1), 0, h, 0)
+    return imap
+
+
+def _pool_scale_map(nb: int, bs: int):
+    def imap(s, h, b, bt_ref, len_ref, nnew_ref, win_ref):
+        total = len_ref[s] + nnew_ref[s]
+        live = jnp.maximum(jax.lax.div(total + bs - 1, bs), 1)
+        bid = bt_ref[s, jnp.minimum(b, live - 1)]
+        return (jnp.clip(bid, 0, nb - 1), 0, h)
+    return imap
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_pool_attention(
+    q: jax.Array,            # (S, T, H, D) float — post-rope queries
+    k_pool: jax.Array,       # (nb, bs, KV, D) float or int8 — the paged pool
+    v_pool: jax.Array,       # (nb, bs, KV, D)
+    block_tables: jax.Array, # (S, NB) int32 logical->physical
+    lengths: jax.Array,      # (S,) int32 — cached tokens per slot
+    n_new: jax.Array,        # (S,) int32 — valid tokens in this window
+    window: jax.Array,       # scalar int32 — sliding window (0 = global)
+    *,
+    k_scale: Optional[jax.Array] = None,   # (nb, bs, KV) f32 — int8 pools
+    v_scale: Optional[jax.Array] = None,
+    k_smooth: Optional[jax.Array] = None,  # (KV, D) f32 — int8 pools
+    v_smooth: Optional[jax.Array] = None,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged attention reading the block pools IN PLACE (no gather).
+
+    Grid (S, KV, NB) with the block tables, lengths and n_new as
+    scalar-prefetch operands: each (slot, head, block) step DMAs exactly one
+    live physical block out of HBM — per decode step the cache traffic is
+    each slot's true length, not the table-width-padded gathered copy the
+    `paged_dequant_attention` path pays before it even starts. Works on
+    float and int8 pools (int8 dequantizes per-block in VMEM; pass the scale
+    pools + smoothing vectors). Returns (S, T, H, D) in q's dtype.
+
+    Numerics: online softmax over a slot's blocks — equal to the
+    materialized softmax up to f32 rounding (the oracle tests use
+    tolerances; the engine's bit-parity contracts compare this path only
+    against itself)."""
+    s_slots, t, h, d = q.shape
+    nb, bs, kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    nb_grid = block_tables.shape[1]
+    g = h // kv
+    gt = g * t
+    gt_p = round_up(gt, 8)
+    int8_kv = k_pool.dtype == jnp.int8
+
+    # (S, T, H, D) -> (S, KV, g*T, D): row r = gi*T + t (as the dequant kernel)
+    qt = q.reshape(s_slots, t, kv, g, d).transpose(0, 2, 3, 1, 4)
+    qt = qt.reshape(s_slots, kv, gt, d)
+    if gt_p != gt:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, gt_p - gt), (0, 0)))
+
+    grid = (s_slots, kv, nb_grid)
+    in_specs = [
+        pl.BlockSpec((1, 1, gt_p, d), lambda s, hh, b, bt, ln, nn, w:
+                     (s, hh, 0, 0)),
+        pl.BlockSpec((1, bs, 1, d), _pool_block_map(nb, bs)),
+    ]
+    operands = [qt, k_pool]
+    if int8_kv:
+        in_specs += [pl.BlockSpec((1, bs, 1), _pool_scale_map(nb, bs))]
+        operands += [k_scale]
+    in_specs += [pl.BlockSpec((1, bs, 1, d), _pool_block_map(nb, bs))]
+    operands += [v_pool]
+    if int8_kv:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1), _pool_scale_map(nb, bs)),
+            pl.BlockSpec((1, d), lambda s, hh, b, bt, ln, nn, w: (hh, 0)),
+            pl.BlockSpec((1, d), lambda s, hh, b, bt, ln, nn, w: (hh, 0)),
+        ]
+        operands += [v_scale, k_smooth.astype(jnp.float32),
+                     v_smooth.astype(jnp.float32)]
+
+    kernel = functools.partial(
+        _pool_kernel, t=t, bs=bs, d=d, gt=gt_p, nb_grid=nb_grid,
+        scale=1.0 / np.sqrt(d), softcap=softcap, int8_kv=int8_kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, gt_p, d),
+                               lambda s, hh, b, bt, ln, nn, w: (s, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gt_p, d), jnp.float32),
+            pltpu.VMEM((gt_p, 128), jnp.float32),
+            pltpu.VMEM((gt_p, 128), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_slots, kv, gt_p, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32),
+      lengths.astype(jnp.int32),
+      n_new.astype(jnp.int32),
+      jnp.asarray(window, jnp.int32).reshape(1),
+      *operands)
 
     out = out[:, :, :gt].reshape(s_slots, kv, g, t, d)
     return out.transpose(0, 3, 1, 2, 4).reshape(s_slots, t, h, d)

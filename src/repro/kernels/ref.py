@@ -61,6 +61,28 @@ def lut_matmul_fused_ref(
     return lut_matmul_dequant_ref(q, codes, codebook, act_scale)
 
 
+def lut_matmul_fused_multi_ref(
+    x: jax.Array,            # (M, K) raw activations shared by all projections
+    inv_list,                # P × (K,) f32
+    packed_list,             # P × (K*nbits_p//8, N_p) uint8
+    cb_list,                 # P × (K_active,) f32
+    act_list,                # P × scalar s_q
+    *,
+    quantize,                # P × bool
+    nbits,                   # P × int
+):
+    """Oracle for the fused multi-projection kernel: each projection is just
+    the single-projection fused oracle on the shared input — the fusion is a
+    pure scheduling transform, so the mathematical definition does not
+    change. Returns a list of P (M, N_p) outputs."""
+    return [
+        lut_matmul_fused_ref(x, inv_list[p], packed_list[p], cb_list[p],
+                             act_list[p], quantize=quantize[p],
+                             nbits=nbits[p])
+        for p in range(len(packed_list))
+    ]
+
+
 def smooth_quant_ref(x: jax.Array, inv_scale: jax.Array, bits: int = 8) -> jax.Array:
     qmin = -(2.0 ** (bits - 1))
     qmax = 2.0 ** (bits - 1) - 1
@@ -68,23 +90,17 @@ def smooth_quant_ref(x: jax.Array, inv_scale: jax.Array, bits: int = 8) -> jax.A
     return q.astype(jnp.int8)
 
 
-def paged_dequant_attention_ref(q, kq, k_scale, vq, v_scale, k_smooth,
-                                v_smooth, lengths, n_new, window, *,
-                                softcap=0.0):
-    """Oracle for kernels/paged_attention.py paged_dequant_attention:
-    materialized dequantize + masked softmax, same signature semantics
-    (q (S,T,H,D); kq/vq (S,L,KV,D) int8; scales (S,L,KV); smooth (KV,D);
-    lengths/n_new (S,); window scalar). Returns (S, T, H, D)."""
+def _masked_paged_softmax(q, k, v, lengths, n_new, window, softcap):
+    """Masked softmax attention over per-slot ragged logical KV views:
+    q (S,T,H,D) f32-castable; k/v (S,L,KV,D) float. Shared by the paged
+    oracles (gathered-int8 and pool-direct) so they cannot drift apart."""
     import numpy as np
     s_slots, t, h, d = q.shape
-    l, kv = kq.shape[1], kq.shape[2]
+    l, kv = k.shape[1], k.shape[2]
     g = h // kv
-    k = (kq.astype(jnp.float32) * k_scale[..., None]
-         * k_smooth[None, None].astype(jnp.float32))          # (S, L, KV, D)
-    v = (vq.astype(jnp.float32) * v_scale[..., None]
-         * v_smooth[None, None].astype(jnp.float32))
     qf = q.astype(jnp.float32).reshape(s_slots, t, kv, g, d)
-    scores = jnp.einsum("btkgd,bskd->bkgts", qf, k) / np.sqrt(d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf,
+                        k.astype(jnp.float32)) / np.sqrt(d)
     if softcap > 0:
         scores = softcap * jnp.tanh(scores / softcap)
     q_pos = lengths[:, None] + jnp.arange(t)[None, :]         # (S, T)
@@ -98,8 +114,49 @@ def paged_dequant_attention_ref(q, kq, k_scale, vq, v_scale, k_smooth,
     m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e30)
     p = jnp.exp(scores - m) * mexp.astype(jnp.float32)
     p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
-    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
     return out.reshape(s_slots, t, h, d).astype(q.dtype)
+
+
+def paged_dequant_attention_ref(q, kq, k_scale, vq, v_scale, k_smooth,
+                                v_smooth, lengths, n_new, window, *,
+                                softcap=0.0):
+    """Oracle for kernels/paged_attention.py paged_dequant_attention:
+    materialized dequantize + masked softmax, same signature semantics
+    (q (S,T,H,D); kq/vq (S,L,KV,D) int8; scales (S,L,KV); smooth (KV,D);
+    lengths/n_new (S,); window scalar). Returns (S, T, H, D)."""
+    k = (kq.astype(jnp.float32) * k_scale[..., None]
+         * k_smooth[None, None].astype(jnp.float32))          # (S, L, KV, D)
+    v = (vq.astype(jnp.float32) * v_scale[..., None]
+         * v_smooth[None, None].astype(jnp.float32))
+    return _masked_paged_softmax(q, k, v, lengths, n_new, window, softcap)
+
+
+def paged_pool_attention_ref(q, k_pool, v_pool, block_tables, lengths, n_new,
+                             window, *, k_scale=None, v_scale=None,
+                             k_smooth=None, v_smooth=None, softcap=0.0):
+    """Oracle for kernels/paged_attention.py paged_pool_attention: gather the
+    slot-visible logical view through the block tables (the materialization
+    the real kernel avoids), dequantize int8 pools, masked softmax.
+
+    q (S,T,H,D); k_pool/v_pool (nb,bs,KV,D) float or int8 (int8 needs
+    k_scale/v_scale (nb,bs,KV) and k_smooth/v_smooth (KV,D));
+    block_tables (S,NB) int32; lengths/n_new (S,); window scalar."""
+    s_slots = q.shape[0]
+    nb = k_pool.shape[0]
+    bt = jnp.clip(block_tables, 0, nb - 1)
+    kg = k_pool[bt].reshape(s_slots, -1, *k_pool.shape[2:])   # (S, L, KV, D)
+    vg = v_pool[bt].reshape(s_slots, -1, *v_pool.shape[2:])
+    if k_pool.dtype == jnp.int8:
+        ksg = k_scale[bt].reshape(s_slots, -1, k_pool.shape[2])
+        vsg = v_scale[bt].reshape(s_slots, -1, v_pool.shape[2])
+        k = (kg.astype(jnp.float32) * ksg[..., None]
+             * k_smooth[None, None].astype(jnp.float32))
+        v = (vg.astype(jnp.float32) * vsg[..., None]
+             * v_smooth[None, None].astype(jnp.float32))
+    else:
+        k, v = kg, vg
+    return _masked_paged_softmax(q, k, v, lengths, n_new, window, softcap)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,

@@ -148,7 +148,8 @@ def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
           target_centroids: int = 8, batch: int = 4, prompt_len: int = 16,
           gen_tokens: int = 32, seed: int = 0, params=None, greedy=True,
           stats: Optional[Dict[str, Any]] = None, weight_bits: int = 4,
-          bits_budget: Optional[float] = None):
+          bits_budget: Optional[float] = None,
+          fused_projections: bool = True):
     """Static-batch generation: `gen_tokens` per sequence for one batch of
     identical prompts; returns (tokens (B, gen), params).
 
@@ -162,6 +163,11 @@ def serve(arch: str, *, use_reduced: bool = True, lcd: bool = False,
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
+    if cfg.fused_projections != fused_projections:
+        # escape hatch (launch/serve.py --no-fused-projections): serve the
+        # per-projection kernel path; bit-equal to fused, so a toggle, not a
+        # numerics knob (DESIGN.md §15)
+        cfg = dataclasses.replace(cfg, fused_projections=fused_projections)
     model = get_model(cfg)
     mesh = make_host_mesh()
 
@@ -1683,7 +1689,7 @@ def kv_capacity_report(cfg, ecfg: EngineConfig,
 def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
                  target_centroids: int = 8, ecfg: Optional[EngineConfig] = None,
                  seed: int = 0, params=None, draft_params=None,
-                 kv_smooth=None, mesh=None):
+                 kv_smooth=None, mesh=None, fused_projections: bool = True):
     """(engine, params): model + (optionally LCD-compressed) params wrapped in
     a ready ServingEngine.
 
@@ -1713,6 +1719,8 @@ def build_engine(arch: str, *, use_reduced: bool = True, lcd: bool = False,
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg, dtype="float32")
+    if cfg.fused_projections != fused_projections:
+        cfg = dataclasses.replace(cfg, fused_projections=fused_projections)
     model = get_model(cfg)
     # params are built/compressed/calibrated on a provisional host mesh; the
     # engine commits them to the serving mesh at init (_place_sharded)

@@ -83,7 +83,8 @@ def _run_continuous(args) -> None:
                         arch=args.arch)
     engine, _ = build_engine(args.arch, use_reduced=args.reduced,
                              lcd=args.lcd, target_centroids=args.centroids,
-                             ecfg=ecfg)
+                             ecfg=ecfg,
+                             fused_projections=args.fused_projections)
     if args.describe:
         _describe(engine)
         return
@@ -199,6 +200,12 @@ def main() -> None:
                          "axis; ClusteredTensor codes/scales and the paged "
                          "pool's kv heads shard across it (DESIGN.md §14; "
                          "continuous mode only)")
+    ap.add_argument("--no-fused-projections", dest="fused_projections",
+                    action="store_false",
+                    help="serve same-input projection groups (QKV; gate+up) "
+                         "through per-projection LUT kernel launches instead "
+                         "of the fused multi-projection GEMV (DESIGN.md §15);"
+                         " bit-equal, for perf triage only")
     ap.add_argument("--describe", action="store_true",
                     help="print the deployment inventory (per-layer bits "
                          "assignment, packed weight bytes, kv dtype) and "
@@ -223,7 +230,8 @@ def main() -> None:
         serve(args.arch, use_reduced=args.reduced, lcd=args.lcd,
               target_centroids=args.centroids, batch=args.batch,
               prompt_len=args.prompt_len, gen_tokens=args.tokens,
-              weight_bits=args.bits, bits_budget=args.bits_budget)
+              weight_bits=args.bits, bits_budget=args.bits_budget,
+              fused_projections=args.fused_projections)
 
 
 if __name__ == "__main__":

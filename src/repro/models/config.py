@@ -78,6 +78,10 @@ class ModelConfig:
     kv_cache_dtype: str = "bf16"    # bf16 | int8 — int8 halves decode cache
                                     # traffic (beyond-paper; QServe-style KV
                                     # quantization with per-(layer,head) scales)
+    fused_projections: bool = True  # fuse same-input clustered projections
+                                    # (QKV; gate+up) into one multi-output LUT
+                                    # GEMV launch (DESIGN.md §15); bit-equal to
+                                    # the unfused path, so safe to default on
 
     # ---- derived -----------------------------------------------------------
     @property

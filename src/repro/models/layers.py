@@ -61,6 +61,27 @@ def linear(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
     return y
 
 
+def linear_group(x: jax.Array, ws, bs, cfg: ModelConfig) -> Tuple[jax.Array, ...]:
+    """Projections sharing one input (QKV; gate+up), fused when possible.
+
+    When `cfg.fused_projections` is on and every weight is an LCD
+    ClusteredTensor, the group dispatches through
+    kernels.ops.clustered_linear_multi: the activation row is smoothed and
+    quantized ONCE and all projections decode inside a single LUT GEMV launch
+    (DESIGN.md §15). The fused kernel is bit-equal to per-projection calls
+    (tests/test_fused_multi.py), so this changes kernel count and HBM
+    traffic, never numerics. Any dense weight in the group — or a
+    non-fusable block-shape mix — falls back to independent `linear` calls."""
+    if (cfg.fused_projections and len(ws) > 1
+            and all(is_clustered(w) for w in ws)):
+        from repro.kernels.ops import clustered_linear_multi
+        ys = clustered_linear_multi(x, tuple(ws))
+    else:
+        ys = tuple(linear(x, w) for w in ws)
+    return tuple(y if b is None else y + b.astype(y.dtype)
+                 for y, b in zip(ys, bs))
+
+
 def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     xf = x.astype(jnp.float32)
     nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
@@ -225,14 +246,18 @@ def attn_block(
     hd, nh, nkv = cfg.hd, cfg.n_heads_eff, cfg.n_kv_heads
 
     base = cache["pos"] if cache is not None else pos_offset
-    q = linear(x, p["wq"], p.get("bq")).reshape(b, s, nh, hd)
     if cross_kv is None:
-        k = linear(x, p["wk"], p.get("bk")).reshape(b, s, nkv, hd)
-        v = linear(x, p["wv"], p.get("bv")).reshape(b, s, nkv, hd)
+        q, k, v = linear_group(
+            x, (p["wq"], p["wk"], p["wv"]),
+            (p.get("bq"), p.get("bk"), p.get("bv")), cfg)
+        q = q.reshape(b, s, nh, hd)
+        k = k.reshape(b, s, nkv, hd)
+        v = v.reshape(b, s, nkv, hd)
         q = rope(q, base + jnp.arange(s), cfg.rope_theta)
         k = rope(k, base + jnp.arange(s), cfg.rope_theta)
         causal = True
     else:
+        q = linear(x, p["wq"], p.get("bq")).reshape(b, s, nh, hd)
         k, v = cross_kv          # precomputed encoder K/V: (B, S_enc, KV, D)
         causal = False
 
@@ -360,9 +385,12 @@ def paged_attn_block(
     nb, bs = kc.shape[0], kc.shape[1]
     int8_kv = kc.dtype == jnp.int8
 
-    q = linear(x, p["wq"], p.get("bq")).reshape(b, t, nh, hd)
-    k = linear(x, p["wk"], p.get("bk")).reshape(b, t, nkv, hd)
-    v = linear(x, p["wv"], p.get("bv")).reshape(b, t, nkv, hd)
+    q, k, v = linear_group(
+        x, (p["wq"], p["wk"], p["wv"]),
+        (p.get("bq"), p.get("bk"), p.get("bv")), cfg)
+    q = q.reshape(b, t, nh, hd)
+    k = k.reshape(b, t, nkv, hd)
+    v = v.reshape(b, t, nkv, hd)
     pos = lengths[:, None] + jnp.arange(t, dtype=lengths.dtype)[None, :]  # (S, T)
     q = rope(q, pos, cfg.rope_theta)
     k = rope(k, pos, cfg.rope_theta)
@@ -386,9 +414,27 @@ def paged_attn_block(
         vc = vc.at[blk, off].set(v.astype(vc.dtype), mode="drop")
 
     q = maybe_shard(q, "slots", None, None, None)
+    from repro.kernels.paged_attention import (
+        paged_pool_attention, resolved_paged_attention_mode)
+    mode = resolved_paged_attention_mode()
+    if mode in ("kernel", "interpret"):
+        # pool-direct kernel (float AND int8 pools): the block tables ride
+        # as scalar-prefetch operands and each (slot, head, block) grid step
+        # DMAs exactly one live physical block — the table-wide
+        # `kc[block_tables]` gather below (a full logical-view HBM copy per
+        # layer per step) never happens on this path.
+        o = paged_pool_attention(
+            q, kc, vc, block_tables, lengths, n_new,
+            jnp.asarray(layer_window, jnp.int32),
+            k_scale=kc_scale, v_scale=vc_scale,
+            k_smooth=k_smooth, v_smooth=v_smooth,
+            softcap=cfg.attn_softcap, interpret=(mode == "interpret"))
+        o = o.reshape(b, t, nh * hd)
+        if int8_kv:
+            return linear(o, p["wo"]), kc, vc, kc_scale, vc_scale
+        return linear(o, p["wo"]), kc, vc
+
     if int8_kv:
-        from repro.kernels.paged_attention import (
-            paged_dequant_attention, resolved_paged_attention_mode)
         # gather each slot's logical view IN INT8 — the cache's HBM read
         # traffic stays at the quantized byte count on every path
         kv_kq = kc[block_tables].reshape(b, -1, nkv, hd)
@@ -399,23 +445,16 @@ def paged_attn_block(
         kv_vq = maybe_shard(kv_vq, "slots", None, "kv", None)
         kv_ks = maybe_shard(kv_ks, "slots", None, "kv")
         kv_vs = maybe_shard(kv_vs, "slots", None, "kv")
-        mode = resolved_paged_attention_mode()
-        if mode in ("kernel", "interpret"):
-            o = paged_dequant_attention(
-                q, kv_kq, kv_ks, kv_vq, kv_vs, k_smooth, v_smooth,
-                lengths, n_new, jnp.asarray(layer_window, jnp.int32),
-                softcap=cfg.attn_softcap, interpret=(mode == "interpret"))
-        else:
-            # jnp fallback (CPU CI / non-TPU): same math, XLA materializes
-            # the dequantized view
-            kv_k = (kv_kq.astype(jnp.float32) * kv_ks[..., None]
-                    * k_smooth[None, None]).astype(x.dtype)
-            kv_v = (kv_vq.astype(jnp.float32) * kv_vs[..., None]
-                    * v_smooth[None, None]).astype(x.dtype)
-            k_pos = jnp.arange(kv_k.shape[1])
-            o = _attn_chunk(q, kv_k, kv_v, pos, k_pos, causal=True,
-                            window=layer_window, softcap=cfg.attn_softcap,
-                            scale=1.0 / np.sqrt(hd), k_len=lengths + n_new)
+        # jnp fallback (CPU CI / non-TPU): same math, XLA materializes
+        # the dequantized view
+        kv_k = (kv_kq.astype(jnp.float32) * kv_ks[..., None]
+                * k_smooth[None, None]).astype(x.dtype)
+        kv_v = (kv_vq.astype(jnp.float32) * kv_vs[..., None]
+                * v_smooth[None, None]).astype(x.dtype)
+        k_pos = jnp.arange(kv_k.shape[1])
+        o = _attn_chunk(q, kv_k, kv_v, pos, k_pos, causal=True,
+                        window=layer_window, softcap=cfg.attn_softcap,
+                        scale=1.0 / np.sqrt(hd), k_len=lengths + n_new)
         o = o.reshape(b, t, nh * hd)
         return linear(o, p["wo"]), kc, vc, kc_scale, vc_scale
 
@@ -439,9 +478,9 @@ def paged_attn_block(
 
 def mlp_block(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.mlp == "swiglu":
-        gate = jax.nn.silu(linear(x, p["w_gate"]))
-        up = linear(x, p["w_up"])
-        h = maybe_shard(gate * up, "batch", None, "ff")
+        gate, up = linear_group(x, (p["w_gate"], p["w_up"]),
+                                (None, None), cfg)
+        h = maybe_shard(jax.nn.silu(gate) * up, "batch", None, "ff")
         return linear(h, p["w_down"])
     h = jax.nn.gelu(linear(x, p["w_up"], p.get("b_up")))
     h = maybe_shard(h, "batch", None, "ff")

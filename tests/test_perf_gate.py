@@ -40,7 +40,8 @@ def make_record(**over):
                 "parity": True,
             },
             "kernel": {"shapes": [
-                {"name": "gemv_64", "m": 1, "k": 64, "n": 64, "us": 10.0}]},
+                {"name": "gemv_64", "m": 1, "k": 64, "n": 64, "us": 10.0,
+                 "kernel": "pallas"}]},
         },
         "block_shapes": {},
     }
@@ -115,7 +116,18 @@ class TestRegressionCheck:
         lines = perf_gate.check_regressions(latest, prev, 0.10)
         keys = {ln.split()[1] for ln in lines}
         assert keys == {"serving.latency_p99_s", "serving.ttft_p50_s",
-                        "kernel.us.gemv_64"}
+                        "kernel.us.pallas.gemv_64"}
+
+    def test_kernel_variant_switch_never_flags(self):
+        """Timing rows gate within one kernel variant only: a dispatch-path
+        switch (pallas -> the xla-ref fallback, however slow) is not a
+        regression — the fallback_reason on the row documents the switch."""
+        def fallback(s):
+            s["kernel"]["shapes"][0].update(
+                kernel="xla-ref", us=500.0,
+                fallback_reason="no TPU on this host")
+        latest, prev = self._pair(fallback)
+        assert perf_gate.check_regressions(latest, prev, 0.10) == []
 
     def test_improvement_never_flags(self):
         def better(s):
